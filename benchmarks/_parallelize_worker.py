@@ -1,0 +1,54 @@
+"""Subprocess worker for bench_parallelize: lowers the XLM-R forward on 8
+placeholder devices with and without tensor-parallel op splitting and prints
+the per-device roofline terms as JSON.
+
+Must be its own process: the device-count XLA flag binds at first jax init
+(same pattern as launch/dryrun.py).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import json      # noqa: E402
+import sys       # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.configs import get_config                       # noqa: E402
+from repro.configs.base import WorkloadShape               # noqa: E402
+from repro.launch import hlo_analysis                      # noqa: E402
+from repro.launch.mesh import make_mesh                    # noqa: E402
+from repro.launch.specs import abstract_params, input_specs  # noqa: E402
+from repro.models import model as M                        # noqa: E402
+from repro.sharding.rules import ShardingRules, use_mesh   # noqa: E402
+
+
+def main():
+    tp = int(sys.argv[1])
+    seq = int(sys.argv[2])
+    batch = int(sys.argv[3])
+    cfg = get_config("xlmr-paper")
+    mesh = make_mesh((1, 8), ("data", "model"))
+    if tp == 1:
+        # unsplit: every core runs the whole op (paper's "not parallelized")
+        rules = ShardingRules(heads=None, kv_heads=None, mlp=None, vocab=None)
+    else:
+        rules = ShardingRules()            # heads/mlp/vocab over 'model'
+    shape = WorkloadShape("bucket", seq, batch, "prefill")
+    with use_mesh(mesh, rules), mesh:
+        params = abstract_params(cfg, rules, mesh)
+        batch_specs = input_specs(cfg, shape, rules, mesh)
+
+        def fwd(params, batch):
+            x, _, _ = M.forward(params, cfg, batch, mode="full")
+            return x
+
+        in_sh = jax.tree.map(lambda a: a.sharding, (params, batch_specs))
+        compiled = jax.jit(fwd, in_shardings=in_sh) \
+            .lower(params, batch_specs).compile()
+        summ = hlo_analysis.analyze(compiled.as_text())
+        terms = hlo_analysis.roofline_terms(summ)
+    print(json.dumps({"tp": tp, "seq": seq, "batch": batch, **terms}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Paper Fig. 7: per-model latency and relative QPS against the latency
+budget bands (Table I).
+
+Two kinds of rows:
+- ``modeled``: roofline latency of each paper workload on one v5e chip
+  (and on the paper's own 6-card system for reference), checked against the
+  paper's latency band — the reproduction of Fig. 7's claim that every
+  complex model fits its budget.
+- ``measured``: smoke-scale wall time of our actual serving engines on CPU
+  (shape check + relative QPS of pipelined vs sequential; absolute CPU
+  times are not TPU claims).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.bench_table2 import dlrm_breakdown, xlmr_breakdown
+from benchmarks.common import Row, time_fn
+from repro.configs import dlrm_paper, get_config
+from repro.data.synthetic import dlrm_batches
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
+from repro.models import dlrm as dlrm_mod
+from repro.serving.dlrm_engine import DLRMEngine
+
+# Latency budgets from Table I (ms)
+BUDGETS_MS = {
+    "dlrm-paper-complex": 100.0,          # per 150-180 items
+    "xlmr-paper": 200.0,
+    "resnext101": 1000.0,
+    "regnety": 1000.0,
+    "fbnetv3": 300.0,
+    "resnext3d": 350.0,
+}
+
+# Table I GFLOPs/batch + arithmetic intensity for the conv models we don't
+# implement (modeled straight from the paper's own characteristics).
+_CONV_MODELS = {
+    "resnext101": (15.6, 355.0),
+    "regnety": (256.0, 395.0),
+    "fbnetv3": (72.0, 1946.0),
+    "resnext3d": (3.4, 362.0),
+}
+
+
+def _modeled_rows() -> List[Row]:
+    rows = []
+    # recommendation: sparse/dense pipeline, latency = sum, QPS = 1/max stage
+    t = dlrm_breakdown("dlrm-paper-complex", batch=64)
+    sparse_s = t["SLS"]
+    dense_s = sum(v for k, v in t.items() if k != "SLS")
+    lat_ms = (sparse_s + dense_s) * 1e3
+    qps = 64.0 / max(sparse_s, dense_s)
+    rows.append(Row(
+        "fig7/dlrm-paper-complex", 0.0,
+        f"roofline_lower_bound_ms={lat_ms:.3f};budget_ms=100;"
+        f"within_budget={lat_ms < 100};modeled_qps={qps:.0f};batch=64;"
+        f"note=v5e_roofline_excludes_host+link_overheads"))
+    # NLP: XLM-R fp16 @ 32-token bucket
+    x = sum(xlmr_breakdown(seq=32, batch=1).values())
+    rows.append(Row(
+        "fig7/xlmr-paper", 0.0,
+        f"modeled_latency_ms={x*1e3:.3f};budget_ms=200;"
+        f"within_budget={x*1e3 < 200};modeled_qps={1.0/x:.0f};bucket=32"))
+    # conv models from the paper's own Table I characteristics
+    for name, (gflops, ai) in _CONV_MODELS.items():
+        flops = gflops * 1e9
+        bytes_ = flops / ai
+        lat = max(flops / (2 * PEAK_FLOPS_BF16), bytes_ / HBM_BW)  # int8
+        rows.append(Row(
+            f"fig7/{name}", 0.0,
+            f"modeled_latency_ms={lat*1e3:.3f};budget_ms="
+            f"{BUDGETS_MS[name]:.0f};within_budget={lat*1e3 < BUDGETS_MS[name]}"
+            f";source=TableI_characteristics"))
+    return rows
+
+
+def _measured_rows() -> List[Row]:
+    cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_COMPLEX)
+    asn = dlrm_mod.make_assignment(cfg, 4)
+    params = dlrm_mod.init_dlrm(cfg, asn, jax.random.PRNGKey(0))
+    eng = DLRMEngine(cfg, asn, params)
+    batches = [next(dlrm_batches(cfg, 32, seed=s)) for s in range(8)]
+    _, warm = eng.serve(batches, pipelined=True)           # compile
+    _, piped = eng.serve(batches, pipelined=True)
+    _, seq = eng.serve(batches, pipelined=False)
+    return [Row(
+        "fig7/measured/dlrm-smoke-cpu",
+        piped.wall_time_s / max(piped.num_requests, 1) * 1e6,
+        f"qps_pipelined={piped.qps:.0f};qps_sequential={seq.qps:.0f};"
+        f"pipeline_speedup={seq.wall_time_s / max(piped.wall_time_s, 1e-9):.2f}x"
+        f";requests={piped.num_requests};batch=32")]
+
+
+def run() -> List[Row]:
+    return _modeled_rows() + _measured_rows()

@@ -1,0 +1,184 @@
+"""Paper §V: quantization accuracy — all MEASURED (CPU is a valid numerics
+oracle; the paper itself validates numerics on CPU references, §V-C).
+
+- DLRM: NE delta of int8/int4 row-wise embedding quant vs fp32
+  (paper budget: 0.02%-0.05% NE at production scale).
+- Quantization workflow: iterative int8->fp16 fallback on the DLRM dense
+  layers against an NE budget, reporting the skip-list it lands on.
+- Backbone: cosine similarity of transformer hidden states under int8
+  weight round-trip (paper requirement: >= 98%).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import dlrm_paper, get_config, reduce_for_smoke
+from repro.core.metrics import cosine_similarity, ne_delta
+from repro.core.quantization import (quantization_workflow, quantize_rows,
+                                     quantize_weight_int8)
+from repro.data.synthetic import dlrm_batches, lm_token_batches
+from repro.models import dlrm as D
+from repro.models import model as M
+
+
+def _train_briefly(cfg, asn, params, steps: int = 150, lr: float = 1e-2):
+    """A trained model is the paper's quantization subject: NE sensitivity
+    concentrates in the tables/layers that carry signal."""
+    from repro.training.optimizer import (OptConfig, apply_updates,
+                                          init_opt_state)
+    opt_cfg = OptConfig(name="adam", lr=lr)
+    opt = init_opt_state(params, opt_cfg)
+    data = dlrm_batches(cfg, 256, seed=99)
+
+    @jax.jit
+    def step(p, o, b):
+        (loss, _), g = jax.value_and_grad(
+            lambda p_: D.dlrm_loss(p_, cfg, asn, b), has_aux=True)(p)
+        p, o, _ = apply_updates(p, g, o, opt_cfg)
+        return p, o, loss
+
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, loss = step(params, opt, b)
+    return params
+
+
+def _dlrm_ne_rows() -> List[Row]:
+    cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_BASE)
+    asn = D.make_assignment(cfg, 4)
+    params = D.init_dlrm(cfg, asn, jax.random.PRNGKey(7))
+    params = _train_briefly(cfg, asn, params)
+    batch = next(dlrm_batches(cfg, 512, seed=11))
+    b = {k: jnp.asarray(v) for k, v in batch.items()}
+    ref = D.dlrm_forward(params, cfg, asn, b["dense"], b["indices"],
+                         b["lengths"])
+    rows = []
+    for bits in (8, 4):
+        q = dict(params)
+        q["slab_q"] = quantize_rows(params["slab"], bits)
+        del q["slab"]
+        logits = D.dlrm_forward(q, cfg, asn, b["dense"], b["indices"],
+                                b["lengths"])
+        d = ne_delta(logits, ref, b["labels"])
+        rows.append(Row(
+            f"quant/dlrm-embed-int{bits}", 0.0,
+            f"ne_delta={d:+.2e};paper_budget=5e-4;"
+            f"within={abs(d) < 5e-4};measured=true"))
+    return rows, cfg, asn, params, b, ref
+
+
+def _workflow_rows(cfg, asn, params, b, ref) -> List[Row]:
+    """Paper §V-B loop on the dense layers, NE-delta eval."""
+    layers = {}
+    for i, l in enumerate(params["bottom"]):
+        layers[f"bottom.{i}"] = l["w"]
+    for i, l in enumerate(params["top"]):
+        layers[f"top.{i}"] = l["w"]
+
+    def eval_metric(schemes) -> float:
+        p = jax.tree.map(lambda x: x, params)      # shallow-ish copy
+        for name, scheme in schemes.items():
+            grp, i = name.split(".")
+            if scheme == "int8":
+                w = params[grp][int(i)]["w"]
+                qw, s = quantize_weight_int8(w)
+                p[grp][int(i)] = {**params[grp][int(i)],
+                                  "w": (qw.astype(jnp.float32) * s
+                                        ).astype(w.dtype)}
+        logits = D.dlrm_forward(p, cfg, asn, b["dense"], b["indices"],
+                                b["lengths"])
+        return abs(ne_delta(logits, ref, b["labels"]))
+
+    res = quantization_workflow(layers, eval_metric, budget=5e-4)
+    fp16 = [d.name for d in res.decisions if d.scheme == "fp16"]
+    return [Row(
+        "quant/workflow-dlrm-dense", 0.0,
+        f"passed={res.passed};ne_delta={res.metric_delta:.2e};"
+        f"iterations={res.iterations};fp16_fallbacks={len(fp16)};"
+        f"fallback_layers={'|'.join(fp16) or 'none'};measured=true")]
+
+
+def _mixed48_rows(cfg, asn, params, b, ref) -> List[Row]:
+    """Paper [18]: mixed int8/int4 embedding tables — start all-int4 (max
+    memory saving) and upgrade the highest-NE-impact tables to int8 until
+    the budget is met, at TABLE granularity."""
+    import numpy as np
+    from repro.core.quantization import dequantize_rows
+
+    slab = params["slab"]
+    rt = {bits: dequantize_rows(quantize_rows(slab, bits)) for bits in (4, 8)}
+
+    def ne_with(bits_of_table) -> float:
+        mixed = slab
+        for t in range(cfg.num_tables):
+            o, r = asn.table_offset[t], cfg.table_rows[t]
+            mixed = mixed.at[o:o + r].set(rt[bits_of_table[t]][o:o + r])
+        p = dict(params)
+        p["slab"] = mixed
+        logits = D.dlrm_forward(p, cfg, asn, b["dense"], b["indices"],
+                                b["lengths"])
+        return abs(ne_delta(logits, ref, b["labels"]))
+
+    bits = [4] * cfg.num_tables
+    d = ne_with(bits)
+    upgrades = 0
+    while d > 5e-4 and upgrades < cfg.num_tables:
+        # upgrade the table whose int4 round-trip error is worst
+        errs = []
+        for t in range(cfg.num_tables):
+            if bits[t] == 8:
+                errs.append(-1.0)
+                continue
+            o, r = asn.table_offset[t], cfg.table_rows[t]
+            e = float(jnp.abs(rt[4][o:o + r] - slab[o:o + r]).mean())
+            errs.append(e)
+        bits[int(np.argmax(errs))] = 8
+        upgrades += 1
+        d = ne_with(bits)
+    n4 = bits.count(4)
+    rows_4 = sum(r for t, r in enumerate(cfg.table_rows) if bits[t] == 4)
+    frac = rows_4 / sum(cfg.table_rows)
+    saving = 1.0 - (1.0 - frac) - frac * 0.5      # int4 = half of int8 bytes
+    return [Row(
+        "quant/workflow-dlrm-embed-mixed48", 0.0,
+        f"ne_delta={d:.2e};within={d <= 5e-4};int4_tables={n4}/"
+        f"{cfg.num_tables};upgrades={upgrades};"
+        f"bytes_vs_int8={1 - saving:.2f}x;measured=true")]
+
+
+def _backbone_cosine_rows() -> List[Row]:
+    """int8 round-trip all FC weights of a transformer; cosine >= 98%."""
+    cfg = reduce_for_smoke(get_config("gemma-2b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+
+    def quantize_tree(tree):
+        def q(x):
+            if x.ndim == 2 and min(x.shape) >= 8:   # FC weights only
+                qw, s = quantize_weight_int8(x)
+                return (qw.astype(jnp.float32) * s).astype(x.dtype)
+            return x
+        return jax.tree.map(q, tree)
+
+    qparams = quantize_tree(params)
+    batch = next(lm_token_batches(cfg.vocab_size, 16, 32, seed=5))
+    toks = {"tokens": jnp.asarray(batch["tokens"])}
+    h_ref, _, _ = M.forward(params, cfg, toks, mode="full")
+    h_q, _, _ = M.forward(qparams, cfg, toks, mode="full")
+    cos = float(cosine_similarity(h_ref[:, -1], h_q[:, -1]))
+    return [Row(
+        "quant/backbone-cosine-int8", 0.0,
+        f"cosine={cos:.4f};paper_requirement=0.98;within={cos >= 0.98};"
+        f"measured=true")]
+
+
+def run() -> List[Row]:
+    rows, cfg, asn, params, b, ref = _dlrm_ne_rows()
+    rows += _workflow_rows(cfg, asn, params, b, ref)
+    rows += _mixed48_rows(cfg, asn, params, b, ref)
+    rows += _backbone_cosine_rows()
+    return rows

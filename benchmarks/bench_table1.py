@@ -1,0 +1,39 @@
+"""Paper Table I: model characteristics — params, GFLOPs/batch, arithmetic
+intensity — recomputed from our configs, for the paper's own models and the
+assigned architectures."""
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.configs import ASSIGNED_ARCHS, DLRM_CONFIGS, get_config
+
+
+def _lm_row(arch: str, seq: int, batch: int) -> Row:
+    cfg = get_config(arch)
+    flops = cfg.flops_per_token(seq) * seq * batch
+    act_bytes = cfg.num_layers * seq * batch * cfg.d_model * 2
+    w_bytes = cfg.active_param_count() * 2
+    ai = flops / (w_bytes + act_bytes)
+    return Row(f"table1/{arch}", 0.0,
+               f"params_B={cfg.param_count()/1e9:.2f};"
+               f"gflops_batch={flops/1e9:.1f};arith_intensity={ai:.0f}")
+
+
+def run():
+    rows = []
+    # paper's recommendation models (Table I rows 1-2)
+    for name, cfg in DLRM_CONFIGS.items():
+        f = cfg.flops_per_sample() * 64
+        rows.append(Row(
+            f"table1/{name}", 0.0,
+            f"params_B={(cfg.embedding_params()+cfg.dense_params())/1e9:.1f};"
+            f"gflops_batch64={f/1e9:.3f};"
+            f"paper_ref={'0.02' if 'base' in name else '0.1'}GF"))
+    # paper's XLM-R (Table I NLP row): 558M params, 20 GF @32 tokens
+    x = get_config("xlmr-paper")
+    f32 = x.flops_per_token(32) * 32
+    rows.append(Row("table1/xlmr-paper", 0.0,
+                    f"params_B={x.param_count()/1e9:.3f};"
+                    f"gflops_32tok={f32/1e9:.1f};paper_ref=20GF/558M"))
+    for arch in ASSIGNED_ARCHS:
+        rows.append(_lm_row(arch, 4096, 1))
+    return rows

@@ -1,0 +1,119 @@
+"""Paper Table II: op-level runtime breakdown per model.
+
+No TPU in this container, so per-op times are MODELED from the per-op
+roofline: t(op) = max(flops/peak, bytes/hbm_bw) with v5e constants (int8
+ops run at 2x bf16 peak). The deliverable is the *structure* — which op
+classes dominate — compared against the paper's measured Table II shares.
+
+Covered: the paper's recommendation model (FC/SLS/interaction split) and
+XLM-R (MatMul-dominated). The paper's CV/video rows are conv workloads
+outside the assigned LM pool; noted, not modeled.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import DLRM_CONFIGS, get_config
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
+
+PEAK_INT8 = 2 * PEAK_FLOPS_BF16
+
+
+def _t(flops: float = 0.0, bytes_: float = 0.0, int8: bool = False) -> float:
+    peak = PEAK_INT8 if int8 else PEAK_FLOPS_BF16
+    return max(flops / peak, bytes_ / HBM_BW)
+
+
+def _mlp_cost(dims: Tuple[int, ...], batch: int, int8: bool) -> float:
+    """Sum of per-layer FC times: weights + activations traffic, 2MNK flops."""
+    t = 0.0
+    wb = 1 if int8 else 2
+    for a, b in zip(dims[:-1], dims[1:]):
+        flops = 2.0 * batch * a * b
+        bytes_ = a * b * wb + batch * (a + b) * 2
+        t += _t(flops, bytes_, int8)
+    return t
+
+
+def dlrm_breakdown(name: str, batch: int = 64) -> Dict[str, float]:
+    cfg = DLRM_CONFIGS[name]
+    T, D = cfg.num_tables, cfg.embed_dim
+    n = T + 1
+    times: Dict[str, float] = {}
+    # FC: bottom + top MLPs, int8 (paper quantizes as many FCs as possible)
+    times["FC"] = (_mlp_cost((cfg.num_dense_features,) + cfg.bottom_mlp,
+                             batch, int8=True)
+                   + _mlp_cost((cfg.bottom_mlp[-1] + n * (n - 1) // 2,)
+                               + cfg.top_mlp, batch, int8=True))
+    # SLS: bandwidth-bound gather of int8 rows (row = D bytes + 4B scale/bias)
+    lookups = float(sum(cfg.avg_lookups_per_table)) * batch
+    times["SLS"] = _t(bytes_=lookups * (D + 4), int8=True)
+    # interaction: batched (n x D) @ (D x n) matmul
+    times["BatchMatMul"] = _t(flops=2.0 * batch * n * n * D,
+                              bytes_=batch * (2 * n * D + n * n) * 2)
+    # layout + quant glue: one bytes-bound pass over activations each
+    act = batch * n * D * 2.0
+    times["Transpose"] = _t(bytes_=2 * act)
+    times["Quantize"] = _t(bytes_=1.5 * act)
+    times["Dequantize"] = _t(bytes_=1.5 * act)
+    return times
+
+
+def xlmr_breakdown(seq: int = 32, batch: int = 1) -> Dict[str, float]:
+    cfg = get_config("xlmr-paper")
+    L, d, dff = cfg.num_layers, cfg.d_model, cfg.d_ff
+    H, hd = cfg.num_heads, cfg.head_dim
+    tok = batch * seq
+    times: Dict[str, float] = {}
+    # MatMul: QKV/O projections + FFN (fp16 weights; paper runs XLM-R fp16)
+    proj_flops = 2.0 * tok * (4 * d * d + 2 * d * dff) * L
+    proj_bytes = (4 * d * d + 2 * d * dff) * 2.0 * L + tok * d * 2 * 8 * L
+    attn_flops = 2.0 * 2 * batch * H * seq * seq * hd * L
+    attn_bytes = batch * H * seq * seq * 2.0 * 2 * L
+    times["MatMul"] = _t(proj_flops + attn_flops, proj_bytes + attn_bytes)
+    act = tok * d * 2.0 * L
+    times["Softmax"] = _t(bytes_=3 * batch * H * seq * seq * 2.0 * L)
+    times["Add"] = _t(bytes_=3 * 2 * act)            # residuals + LN adds
+    times["Transpose"] = _t(bytes_=2 * 2 * act)      # head split/merge
+    times["Gelu"] = _t(bytes_=2 * tok * dff * 2.0 * L)
+    times["Concat"] = _t(bytes_=2 * act / L)         # embeddings glue
+    return times
+
+
+_PAPER_TABLE2 = {
+    "dlrm-paper-complex": {"FC": 30.9, "SLS": 27.0, "BatchMatMul": 8.8,
+                           "Transpose": 4.3, "Quantize": 4.8,
+                           "Dequantize": 3.6},
+    "xlmr-paper": {"MatMul": 72.5, "Add": 3.0, "Concat": 2.1,
+                   "Transpose": 3.6, "Gelu": 2.2, "Softmax": 3.3},
+}
+
+
+def _rows(model: str, times: Dict[str, float], paper: Dict[str, float]
+          ) -> List[Row]:
+    tot = sum(times.values())
+    rows = []
+    for op, t in sorted(times.items(), key=lambda kv: -kv[1]):
+        share = 100.0 * t / tot
+        ref = paper.get(op)
+        rows.append(Row(
+            f"table2/{model}/{op}", 0.0,
+            f"modeled_share={share:.1f}%"
+            + (f";paper_share={ref:.1f}%" if ref is not None else "")
+            + f";modeled_us={t*1e6:.1f}"))
+    return rows
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rows += _rows("dlrm-paper-complex", dlrm_breakdown("dlrm-paper-complex"),
+                  _PAPER_TABLE2["dlrm-paper-complex"])
+    rows += _rows("xlmr-paper", xlmr_breakdown(),
+                  _PAPER_TABLE2["xlmr-paper"])
+    rows.append(Row("table2/cv-video", 0.0,
+                    "skipped=conv workloads (ResNeXt/FBNetV3/RegNetY/R3D) "
+                    "outside the assigned LM pool; see DESIGN.md"))
+    return rows

@@ -1,0 +1,70 @@
+"""Paper §VI-C: partial tensor transfers + command batching — MEASURED.
+
+Reproduces the two claims on the host->device input path:
+- partial transfers "significantly reduce PCIe traffic in the common case":
+  sparse-index tensors are compiled at the static maximum (paper: 64-128
+  lookups/table) while the expected bag is far smaller (~1-40), so shipping
+  only the used prefix saves most of the bytes. We measure on paper-scale
+  index shapes (96 tables x 128 max lookups, Poisson bags around the
+  config's avg_lookups profile) — the transfer path never touches weights.
+- command batching coalesces one-transfer-per-table into a single staging
+  buffer (transfer-count reduction).
+
+CPU wall time is reported but NOT the claim (device_put on CPU is a memcpy;
+on a real PCIe/host link the shipped bytes dominate).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import dlrm_paper
+from repro.core.transfer import (SparseBatch, TransferStats,
+                                 command_batched_transfer, naive_transfer)
+
+
+def _paper_scale_batches(n: int, batch: int = 64, seed: int = 0):
+    cfg = dlrm_paper.PAPER_COMPLEX
+    rng = np.random.default_rng(seed)
+    T, L = cfg.num_tables, cfg.max_lookups_per_table
+    avg = np.asarray(cfg.avg_lookups_per_table)
+    out = []
+    for _ in range(n):
+        lengths = np.minimum(rng.poisson(avg[None, :], (batch, T)) + 1,
+                             L).astype(np.int32)
+        indices = np.zeros((batch, T, L), np.int32)
+        for t in range(T):
+            k = int(lengths[:, t].max())
+            indices[:, t, :k] = rng.integers(0, 10_000, (batch, k))
+        out.append(SparseBatch(indices, lengths))
+    return out
+
+
+def run() -> List[Row]:
+    sbs = _paper_scale_batches(8)
+    stats_p, stats_n = TransferStats(), TransferStats()
+    t0 = time.perf_counter()
+    for sb in sbs:
+        jax.block_until_ready(command_batched_transfer(sb, stats_p))
+    t_partial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for sb in sbs:
+        jax.block_until_ready(naive_transfer(sb, stats_n))
+    t_naive = time.perf_counter() - t0
+
+    return [
+        Row("transfers/partial+batched", t_partial / len(sbs) * 1e6,
+            f"bytes_saved={stats_p.bytes_saved_frac*100:.1f}%;"
+            f"shipped_mb={stats_p.bytes_partial/1e6:.2f};"
+            f"full_mb={stats_p.bytes_full/1e6:.2f};"
+            f"transfers_per_batch={stats_p.num_transfers_batched // len(sbs)}"
+            f";paper_shape=96tables_x128max;measured=true"),
+        Row("transfers/naive", t_naive / len(sbs) * 1e6,
+            f"bytes_saved=0%;shipped_mb={stats_n.bytes_partial/1e6:.2f};"
+            f"transfers_per_batch={stats_n.num_transfers_naive // len(sbs)}"
+            f";measured=true"),
+    ]

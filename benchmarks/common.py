@@ -1,0 +1,35 @@
+"""Benchmark helpers: timing + CSV row protocol.
+
+Every bench module exposes ``run() -> list[Row]``; run.py prints
+``name,us_per_call,derived`` CSV (one line per row).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str      # free-form "key=value;key=value"
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

@@ -1,0 +1,107 @@
+"""Roofline table from the multi-pod dry-run (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun.jsonl (written by ``python -m repro.launch.dryrun
+--all``) and reports, per (arch x shape x mesh): the three roofline terms,
+the dominant bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute fraction,
+catches remat/redundancy waste), and the structural MFU analogue
+useful-flops-time / bound. Also writes results/roofline.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+
+DRYRUN_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "dryrun.jsonl")
+
+_CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """6*N_active*D for training, 2*N_active*D for forward-only (prefill/
+    decode); D = tokens in the step. Decode steps process one token/seq.
+    Enc-dec models split: encoder params see the source length, decoder
+    params the target length (whisper: 448)."""
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    seq = {"train_4k": 4096, "prefill_32k": 32_768,
+           "decode_32k": 1, "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32,
+             "decode_32k": 128, "long_500k": 1}[shape]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    if cfg.encdec is not None and shape != "decode_32k":
+        from repro.launch.specs import WHISPER_TGT
+        enc_l, dec_l = cfg.encdec.encoder_layers, cfg.encdec.decoder_layers
+        n_layer = (n - cfg.vocab_size * cfg.d_model) / (enc_l + dec_l)
+        n_enc = n_layer * enc_l
+        n_dec = n_layer * dec_l + cfg.vocab_size * cfg.d_model
+        dec_tokens = WHISPER_TGT if shape == "train_4k" else 16
+        return mult * batch * (n_enc * seq + n_dec * dec_tokens)
+    return mult * n * seq * batch
+
+
+def load_cells(path: str = DRYRUN_PATH) -> List[dict]:
+    cells: Dict[tuple, dict] = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return [r for r in cells.values() if r.get("ok")]
+
+
+def annotate(rec: dict) -> dict:
+    """Attach MODEL_FLOPS ratio + structural-MFU fields to a dry-run record."""
+    chips = _CHIPS[rec["mesh"]]
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["hlo"]["dot_flops"] * chips
+    terms = rec["roofline"]
+    bound = max(terms.values())
+    useful_s = mf / chips / PEAK_FLOPS_BF16     # per-chip time at peak
+    return {
+        **rec,
+        "model_flops": mf,
+        "flops_ratio": mf / max(hlo_total, 1.0),
+        "bound_s": bound,
+        "mfu_struct": useful_s / max(bound, 1e-12),
+    }
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    cells = sorted((annotate(r) for r in load_cells()),
+                   key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    md = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | peak_GB/dev | MODEL/HLO flops | struct-MFU |",
+          "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        t = r["roofline"]
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};dominant={r['dominant']};"
+            f"flops_ratio={r['flops_ratio']:.3f};"
+            f"mfu_struct={r['mfu_struct']:.3f};"
+            f"peak_gb={r['memory']['peak_gb']:.1f}"))
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {r['memory']['peak_gb']:.1f} | {r['flops_ratio']:.3f} "
+            f"| {r['mfu_struct']:.3f} |")
+    out_md = os.path.join(os.path.dirname(DRYRUN_PATH), "roofline.md")
+    with open(out_md, "w") as f:
+        f.write("\n".join(md) + "\n")
+    rows.append(Row("roofline/summary", 0.0,
+                    f"cells={len(cells)};table={out_md}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -1,0 +1,61 @@
+"""Paper SecV-B end to end: the iterative quantization workflow.
+
+Quantize everything to int8, evaluate the end metric, and while the budget
+is blown move the highest-error layer back to fp16 — "we use the per-layer
+quantization error as the feedback and try to increase the precision for
+those operators that could otherwise incur high quantization errors."
+
+Demonstrated on a DLRM whose first top-MLP layer is given an outlier weight
+(the classic int8 failure mode the paper's skip-list exists for).
+
+Run: PYTHONPATH=src python examples/quantization_workflow.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import dlrm_paper
+from repro.core.metrics import ne_delta
+from repro.core.quantization import quantization_workflow, quantize_weight_int8
+from repro.data.synthetic import dlrm_batches
+from repro.models import dlrm as D
+
+cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_BASE)
+asn = D.make_assignment(cfg, 4)
+params = D.init_dlrm(cfg, asn, jax.random.PRNGKey(0))
+
+# plant an activation-outlier layer (what breaks naive int8 in production)
+w = params["top"][0]["w"]
+params["top"][0]["w"] = w.at[0, 0].set(60.0 * jnp.abs(w).max())
+
+batch = next(dlrm_batches(cfg, 512, seed=1))
+b = {k: jnp.asarray(v) for k, v in batch.items()}
+ref = D.dlrm_forward(params, cfg, asn, b["dense"], b["indices"], b["lengths"])
+
+layers = {f"bottom.{i}": l["w"] for i, l in enumerate(params["bottom"])}
+layers.update({f"top.{i}": l["w"] for i, l in enumerate(params["top"])})
+
+
+def eval_metric(schemes):
+    p = {**params, "bottom": list(params["bottom"]),
+         "top": list(params["top"])}
+    for name, scheme in schemes.items():
+        grp, i = name.split(".")
+        if scheme == "int8":
+            wt = params[grp][int(i)]["w"]
+            qw, s = quantize_weight_int8(wt)
+            p[grp][int(i)] = {**params[grp][int(i)],
+                              "w": (qw.astype(jnp.float32) * s).astype(wt.dtype)}
+    logits = D.dlrm_forward(p, cfg, asn, b["dense"], b["indices"],
+                            b["lengths"])
+    return abs(ne_delta(logits, ref, b["labels"]))
+
+
+res = quantization_workflow(layers, eval_metric, budget=5e-4)
+print(f"budget 5e-4 NE: {'MET' if res.passed else 'NOT met'} after "
+      f"{res.iterations} fallback iteration(s); final delta "
+      f"{res.metric_delta:.2e}")
+print(f"{'layer':12s} {'scheme':6s} {'per-layer error':>16s}")
+for d in res.decisions:
+    print(f"{d.name:12s} {d.scheme:6s} {d.error:16.4f}")
+fp16 = [d.name for d in res.decisions if d.scheme == "fp16"]
+print(f"\nskip-list (kept fp16, paper: 'usually ... the last FC'): {fp16}")

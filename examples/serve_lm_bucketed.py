@@ -1,0 +1,80 @@
+"""Bucketed NLP serving (paper T5 + SecVII): variable-length sentences on a
+static-shape accelerator.
+
+- pad each request up to a bucket (32/64/128/...) and keep ONE compiled
+  executable per bucket ("multiple copies of the XLM-R model"),
+- length-sorted batching vs naive batching: wasted-compute comparison
+  (paper: "naive batching approaches may combine smaller sentences with
+  larger sentences, leading to wasted compute"),
+- then a continuous-batching decode demo on a small causal LM.
+
+Run: PYTHONPATH=src python examples/serve_lm_bucketed.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.bucketing import (BucketedExecutable, length_sorted_batches,
+                                  pick_bucket, wasted_compute_fraction)
+from repro.data.synthetic import xlmr_sentences
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+
+BUCKETS = (8, 16, 32, 64)
+
+cfg = reduce_for_smoke(get_config("gemma-2b"))   # stand-in encoder backbone
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def build_for_bucket(bucket: int):
+    """One compiled network per padding boundary (paper SecVI-A)."""
+    def fn(tokens, mask):
+        x, _, _ = M.forward(params, cfg, {"tokens": tokens}, mode="full")
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1)
+        return (x * mask[..., None]).sum(1) / denom     # mean-pooled embeds
+    return jax.jit(fn)
+
+
+exe = BucketedExecutable(build_fn=build_for_bucket, buckets=BUCKETS)
+sents = xlmr_sentences(cfg.vocab_size, 64, seed=3, min_len=3, max_len=60)
+lengths = [len(s) for s in sents]
+
+# naive batching: arrival order, batch padded to its longest sentence
+naive_batches = [list(range(i, min(i + 8, len(sents))))
+                 for i in range(0, len(sents), 8)]
+naive_buckets = [pick_bucket(max(lengths[i] for i in b), BUCKETS)
+                 for b in naive_batches]
+naive_waste = 1.0 - sum(lengths) / sum(len(b) * bk for b, bk
+                                       in zip(naive_batches, naive_buckets))
+
+# smarter batching: group similar lengths (paper SecVII)
+sorted_batches = length_sorted_batches(lengths, 8)
+sorted_buckets = [pick_bucket(max(lengths[i] for i in b), BUCKETS)
+                  for b in sorted_batches]
+sorted_waste = 1.0 - sum(lengths) / sum(len(b) * bk for b, bk
+                                        in zip(sorted_batches, sorted_buckets))
+
+print(f"{len(sents)} sentences, lengths {min(lengths)}..{max(lengths)}")
+print(f"padding waste: naive batching {naive_waste*100:.0f}% -> "
+      f"length-sorted {sorted_waste*100:.0f}%")
+
+embeds = []
+for b in sorted_batches:
+    embeds.append(exe([sents[i] for i in b]))
+jax.block_until_ready(embeds)
+print(f"served {len(sents)} sentences via {exe.compile_count} compiled "
+      f"buckets (vs {len(set(lengths))} distinct lengths); "
+      f"per-request waste bound {wasted_compute_fraction(lengths, BUCKETS)*100:.0f}%")
+
+# continuous-batching decode on the same backbone as a causal LM
+eng = InferenceEngine(cfg, params, batch_slots=4, max_len=96,
+                      prefill_buckets=BUCKETS)
+rng = np.random.default_rng(1)
+reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=6)
+        for i, n in enumerate((4, 9, 17, 33, 7, 21))]
+eng.run(reqs)
+print(f"decode engine: served {eng.stats.served} requests in "
+      f"{eng.stats.steps} decode steps with {eng.stats.prefills} bucketed "
+      f"prefills ({eng.stats.compile_count} compiles)")

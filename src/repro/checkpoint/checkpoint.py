@@ -1,0 +1,128 @@
+"""Fault-tolerant sharded checkpointing.
+
+Large-scale requirements implemented here:
+- per-leaf .npy shards under one step directory (on a real cluster each host
+  writes only its addressable shards; here: process-local)
+- ATOMIC commit: write to ``step_N.tmp`` then rename — a crash mid-write
+  never corrupts the latest checkpoint
+- async save (background thread) so the train loop isn't blocked
+- ELASTIC restore: leaves are loaded as full arrays and re-sharded onto the
+  CURRENT mesh, which may have a different shape than the writer's
+- retention policy (keep last K)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ---- save ------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = True):
+        self.wait()                       # one async save in flight at most
+        # snapshot to host memory synchronously (cheap; device->host copy)
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            index = {}
+            for i, k in enumerate(sorted(flat)):
+                fname = f"leaf_{i:06d}.npy"           # deterministic names
+                np.save(os.path.join(tmp, fname), flat[k])
+                index[k] = {"file": fname, "shape": list(flat[k].shape),
+                            "dtype": str(flat[k].dtype)}
+            with open(os.path.join(tmp, "index.json"), "w") as f:
+                json.dump({"step": step, "leaves": index}, f)
+            if os.path.exists(final):
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                os.replace(tmp, final)                # atomic commit
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---- restore -----------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree, *, shardings=None):
+        """Restore into the structure of ``like_tree``; if ``shardings`` is a
+        matching pytree of NamedShardings, device_put each leaf (elastic
+        restore onto whatever mesh is current)."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)["leaves"]
+        flat_like = _flatten(like_tree)
+        flat_sh = _flatten(shardings) if shardings is not None else {}
+        loaded = {}
+        for k, like in flat_like.items():
+            meta = index[k]
+            arr = np.load(os.path.join(path, meta["file"]))
+            if hasattr(like, "dtype"):
+                arr = arr.astype(like.dtype)
+            if k in flat_sh:
+                arr = jax.device_put(arr, flat_sh[k])
+            loaded[k] = arr
+        # rebuild the tree in like_tree's structure
+        leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+        keys = list(_flatten(like_tree).keys())
+        return jax.tree_util.tree_unflatten(
+            treedef, [loaded[k] for k in keys])

@@ -1,0 +1,61 @@
+"""Config registry: ``get_config("gemma-2b")`` etc."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import (ALL_SHAPES, ATTN_GLOBAL, ATTN_LOCAL, RECURRENT,
+                                SSM, EncDecConfig, ModelConfig, MoEConfig,
+                                QuantConfig, RecurrentConfig, SSMConfig,
+                                WorkloadShape, reduce_for_smoke, shapes_for)
+from repro.configs import (command_r_plus_104b, dbrx_132b, deepseek_7b,
+                           gemma2_27b, gemma_2b, kimi_k2_1t_a32b, mamba2_130m,
+                           qwen2_vl_7b, recurrentgemma_9b, whisper_medium,
+                           xlmr_paper)
+from repro.configs import dlrm_paper
+
+_REGISTRY: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in (
+        gemma_2b.CONFIG,
+        deepseek_7b.CONFIG,
+        command_r_plus_104b.CONFIG,
+        gemma2_27b.CONFIG,
+        kimi_k2_1t_a32b.CONFIG,
+        dbrx_132b.CONFIG,
+        mamba2_130m.CONFIG,
+        whisper_medium.CONFIG,
+        qwen2_vl_7b.CONFIG,
+        recurrentgemma_9b.CONFIG,
+        xlmr_paper.CONFIG,
+    )
+}
+
+ASSIGNED_ARCHS = (
+    "gemma-2b", "deepseek-7b", "command-r-plus-104b", "gemma2-27b",
+    "kimi-k2-1t-a32b", "dbrx-132b", "mamba2-130m", "whisper-medium",
+    "qwen2-vl-7b", "recurrentgemma-9b",
+)
+
+DLRM_CONFIGS = {
+    dlrm_paper.PAPER_BASE.name: dlrm_paper.PAPER_BASE,
+    dlrm_paper.PAPER_COMPLEX.name: dlrm_paper.PAPER_COMPLEX,
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}") from None
+
+
+def list_archs() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+__all__ = [
+    "ALL_SHAPES", "ASSIGNED_ARCHS", "ATTN_GLOBAL", "ATTN_LOCAL", "DLRM_CONFIGS",
+    "EncDecConfig", "ModelConfig", "MoEConfig", "QuantConfig", "RECURRENT",
+    "RecurrentConfig", "SSM", "SSMConfig", "WorkloadShape", "get_config",
+    "list_archs", "reduce_for_smoke", "shapes_for",
+]

@@ -1,0 +1,328 @@
+"""Config system: model, quantization, parallelism and workload-shape configs.
+
+Every assigned architecture is a frozen ``ModelConfig``; the paper's own models
+(DLRM, XLM-R) get their own config types. Configs are pure data — no jax import
+at module level so that importing a config never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# --------------------------------------------------------------------------
+# Block kinds understood by the block program (models/model.py)
+# --------------------------------------------------------------------------
+ATTN_GLOBAL = "global"      # full (causal) attention
+ATTN_LOCAL = "local"        # sliding-window attention
+SSM = "ssm"                 # Mamba2 SSD block
+RECURRENT = "recurrent"     # Griffin RG-LRU block
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                      # per-expert FFN hidden size
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # number of shared (always-on) experts, DeepSeek-style; 0 = pure top-k
+    num_shared_experts: int = 0
+    # round the expert count up so EP can span the whole mesh (e.g. 384 -> 512
+    # over 256 shards); dummy experts get no router logits and no tokens
+    num_padded_experts: Optional[int] = None
+
+    @property
+    def padded_experts(self) -> int:
+        return self.num_padded_experts or self.num_experts
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block hyperparameters."""
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk_size: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RecurrentConfig:
+    """Griffin RG-LRU block hyperparameters."""
+    lru_width: Optional[int] = None    # default: d_model
+    d_conv: int = 4
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Paper §V quantization workflow knobs.
+
+    ``embedding_bits``: row-wise quantization of embedding tables (8 or 4).
+    ``dense_int8``: use w8a8 for FC/attention projections.
+    ``skip_list``: layer-name substrings kept in ``fallback_dtype`` (the paper
+    skips e.g. the last FC to stay within the 0.05% NE budget).
+    """
+    embedding_bits: Optional[int] = None     # None = no embedding quant
+    dense_int8: bool = False
+    fallback_dtype: str = "bfloat16"
+    skip_list: Tuple[str, ...] = ("final", "logits", "router")
+    kv_cache_dtype: str = "bfloat16"         # 'int8' enables KV-cache quant
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int
+    decoder_layers: int
+    # encoder sequence length is decoupled from decoder target length
+    max_target_len: int = 512
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---
+    # round q heads up to this count so TP sharding divides (Megatron-style
+    # padding, like vocab padding): padded heads' o-proj rows are zero, so
+    # outputs are exact. None = no padding.
+    num_padded_heads: Optional[int] = None
+    # repeating block pattern: pattern is tiled; remainder layers unrolled
+    block_pattern: Tuple[str, ...] = (ATTN_GLOBAL,)
+    window_size: int = 4096
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    rope_theta: float = 10_000.0
+    rope_mode: str = "standard"        # standard | mrope
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w splits of head_dim//2
+    qkv_bias: bool = False
+    o_bias: bool = False
+
+    # --- MLP ---
+    activation: str = "silu"           # silu | gelu | gelu_tanh
+    glu: bool = True                   # gated linear unit MLP (GeGLU/SwiGLU)
+    mlp_bias: bool = False
+
+    # --- norms / embeddings ---
+    norm_type: str = "rmsnorm"         # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    post_attn_norm: bool = False       # gemma2-style sandwich norms
+    tie_embeddings: bool = True
+    embedding_multiplier: Optional[float] = None  # gemma scales embeds by sqrt(d)
+
+    # --- sub-configs ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    recurrent: Optional[RecurrentConfig] = None
+    encdec: Optional[EncDecConfig] = None
+
+    quant: QuantConfig = field(default_factory=QuantConfig)
+
+    # --- numerics ---
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+
+    # --- attention implementation ---
+    # 'chunked_jnp': pure-jnp (q-block-chunked for long prefill) — what the
+    #   CPU dry-run lowers; materializes score blocks (the HLO S^2 floor).
+    # 'flash_pallas': kernels/flash_attn fused kernel — the TPU deployment
+    #   path (HBM traffic = Q+K+V+O only); interpret-mode on CPU.
+    attention_impl: str = "chunked_jnp"
+
+    # --- serving ---
+    # archs whose attention is O(n^2)-only skip the 500k-decode shape
+    supports_long_context: bool = False
+    # modality frontend stub: inputs are precomputed frame/patch embeddings
+    input_kind: str = "tokens"         # tokens | embeddings
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0 or self.num_kv_heads == 0
+        if self.num_padded_heads is not None:
+            assert self.num_padded_heads >= self.num_heads
+            assert self.num_padded_heads % max(self.num_kv_heads, 1) == 0
+        if self.family in ("ssm",):
+            assert self.ssm is not None
+
+    @property
+    def padded_heads(self) -> int:
+        return self.num_padded_heads or self.num_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Expanded per-layer block kinds (length == num_layers)."""
+        pat = self.block_pattern
+        reps = self.num_layers // len(pat)
+        tail = self.num_layers - reps * len(pat)
+        return pat * reps + pat[:tail]
+
+    def scan_plan(self) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+        """(superblock_unit, repeats, tail_kinds) for scan-over-layers."""
+        pat = self.block_pattern
+        reps = self.num_layers // len(pat)
+        tail = self.block_pattern[: self.num_layers - reps * len(pat)]
+        return pat, reps, tail
+
+    # ---- analytical parameter / flop counts (for Table I & roofline) ----
+    def param_count(self) -> int:
+        n = self.vocab_size * self.d_model          # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for kind in self.layer_kinds():
+            n += self._block_params(kind)
+        n += self.d_model                            # final norm
+        if self.encdec is not None:
+            # encoder stack (decoder counted above via num_layers)
+            n += self.encdec.encoder_layers * (
+                self._attn_params() + self._mlp_params() + 2 * self.d_model)
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        n = self.vocab_size * self.d_model + self.d_model
+        per_expert = 3 * self.d_model * m.d_expert if self.glu else 2 * self.d_model * m.d_expert
+        for kind in self.layer_kinds():
+            n += self._attn_params() + 2 * self.d_model
+            n += (m.top_k + m.num_shared_experts) * per_expert
+            n += self.d_model * m.num_experts        # router
+        return n
+
+    def _attn_params(self) -> int:
+        return self.d_model * (self.q_dim + 2 * self.kv_dim) + self.q_dim * self.d_model
+
+    def _mlp_params(self) -> int:
+        mult = 3 if self.glu else 2
+        return mult * self.d_model * self.d_ff
+
+    def _block_params(self, kind: str) -> int:
+        norms = 2 * self.d_model * (2 if self.post_attn_norm else 1)
+        if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+            if self.moe is not None:
+                m = self.moe
+                per_expert = (3 if self.glu else 2) * self.d_model * m.d_expert
+                ff = m.num_experts * per_expert + self.d_model * m.num_experts
+                ff += m.num_shared_experts * per_expert
+            else:
+                ff = self._mlp_params()
+            return self._attn_params() + ff + norms
+        if kind == SSM:
+            s = self.ssm
+            d_in = s.d_inner(self.d_model)
+            nh = s.num_heads(self.d_model)
+            # in_proj: z,x,B,C,dt ; out_proj; conv; A,D
+            zxbcdt = 2 * d_in + 2 * s.d_state + nh
+            return (self.d_model * zxbcdt + d_in * self.d_model
+                    + s.d_conv * (d_in + 2 * s.d_state) + 2 * nh + self.d_model)
+        if kind == RECURRENT:
+            r = self.recurrent
+            w = r.lru_width or self.d_model
+            # two in-proj branches, out proj, conv, RG-LRU gates (2*w*w block-diag approx)
+            return (2 * self.d_model * w + w * self.d_model
+                    + r.d_conv * w + 2 * w * (w // 8) + 2 * w
+                    + self._mlp_params() + norms + self.d_model)
+        raise ValueError(kind)
+
+    def flops_per_token(self, seq_len: int, decode: bool = False) -> float:
+        """Approx. forward FLOPs per token (2*active_params matmul + attention)."""
+        f = 2.0 * (self.active_param_count() - self.vocab_size * self.d_model)
+        f += 2.0 * self.d_model * self.vocab_size     # lm head
+        attn = 0.0
+        for kind in self.layer_kinds():
+            if kind == ATTN_GLOBAL:
+                ctx = seq_len if decode else seq_len / 2
+            elif kind == ATTN_LOCAL:
+                ctx = min(self.window_size, seq_len)
+            else:
+                continue
+            attn += 2 * 2 * self.num_heads * self.head_dim * ctx
+        return f + attn
+
+
+# --------------------------------------------------------------------------
+# Workload shapes (assigned per-arch shape set)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WorkloadShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+TRAIN_4K = WorkloadShape("train_4k", 4096, 256, "train")
+PREFILL_32K = WorkloadShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = WorkloadShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = WorkloadShape("long_500k", 524_288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shapes_for(cfg: ModelConfig) -> Tuple[WorkloadShape, ...]:
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.supports_long_context:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests
+# --------------------------------------------------------------------------
+def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
+    """Tiny same-family config: few layers, small width, tiny vocab."""
+    pat = cfg.block_pattern
+    n_layers = max(len(pat), 2)
+    kw = dict(
+        num_layers=n_layers,
+        d_model=64,
+        num_heads=4,
+        num_padded_heads=None,
+        num_kv_heads=min(cfg.num_kv_heads, 4) or 1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        param_dtype="float32",
+        activation_dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), d_expert=32)
+    if cfg.ssm is not None:
+        kw["ssm"] = dataclasses.replace(
+            cfg.ssm, d_state=16, head_dim=16, chunk_size=32)
+    if cfg.recurrent is not None:
+        kw["recurrent"] = dataclasses.replace(cfg.recurrent, lru_width=64)
+    if cfg.encdec is not None:
+        kw["encdec"] = dataclasses.replace(
+            cfg.encdec, encoder_layers=2, decoder_layers=2, max_target_len=32)
+        kw["num_layers"] = 2
+    if cfg.window_size > 16:
+        kw["window_size"] = 8
+    if cfg.mrope_sections != (16, 24, 24):
+        pass
+    if cfg.rope_mode == "mrope":
+        kw["mrope_sections"] = (4, 2, 2)   # sums to head_dim//2 = 8
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,25 @@
+"""mamba2-130m [ssm] — 24L d_model=768 (attn-free) vocab=50280, ssm_state=128.
+
+SSD (state-space duality). [arXiv:2405.21060; unverified]
+Attention-free: the paper's KV/attention-side techniques are N/A (DESIGN.md
+§Arch-applicability); embedding row-sharding and quantization still apply.
+"""
+from repro.configs.base import SSM, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                        # attn-free, no separate MLP (Mamba2 block only)
+    vocab_size=50_280,
+    block_pattern=(SSM,),
+    glu=False,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk_size=256),
+    supports_long_context=True,    # constant-state decode
+)

@@ -1,0 +1,35 @@
+"""qwen2-vl-7b [vlm] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+M-RoPE, dynamic resolution. [arXiv:2409.12191; hf]
+The vision frontend is a STUB per assignment: input_specs() provides
+precomputed patch embeddings plus 3D (t,h,w) M-RoPE position ids. Dynamic
+resolution maps onto the paper's shape-bucketing technique (T5).
+"""
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    # 28 heads don't divide the 16-way model axis; pad to 32 (o-proj rows
+    # for heads 28..31 are zero -> exact) so attention shards instead of
+    # replicating (a 'rejected placement hint' engineered satisfiable)
+    num_padded_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152_064,
+    block_pattern=(ATTN_GLOBAL,),
+    activation="silu",
+    glu=True,
+    norm_type="rmsnorm",
+    qkv_bias=True,
+    tie_embeddings=False,
+    rope_theta=1_000_000.0,
+    rope_mode="mrope",
+    mrope_sections=(16, 24, 24),    # t/h/w split of head_dim//2 = 64
+    input_kind="embeddings",        # patch-embedding stub (text path also supported)
+    supports_long_context=False,
+)

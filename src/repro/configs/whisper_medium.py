@@ -1,0 +1,34 @@
+"""whisper-medium [audio] — 24L d_model=1024 16H d_ff=4096 vocab=51865.
+
+Enc-dec; conv frontend is a STUB per assignment (input_specs provides
+precomputed frame embeddings). [arXiv:2212.04356; unverified]
+
+Shapes: prefill_* runs the encoder over seq_len frame embeddings plus a
+decoder prefill; decode_* lowers one decoder token against self- and
+cross-attention caches (cross KV length = seq_len). long_500k skipped
+(full-attention enc-dec).
+"""
+from repro.configs.base import ATTN_GLOBAL, EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="encdec",
+    num_layers=24,                  # decoder layers; encoder below
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51_865,
+    block_pattern=(ATTN_GLOBAL,),
+    activation="gelu",
+    glu=False,
+    norm_type="layernorm",
+    qkv_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    encdec=EncDecConfig(encoder_layers=24, decoder_layers=24,
+                        max_target_len=448),
+    input_kind="embeddings",        # audio frontend stub
+    supports_long_context=False,
+)

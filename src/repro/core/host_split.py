@@ -1,0 +1,77 @@
+"""Paper T7: host/accelerator net split policy.
+
+A cost model decides which ops stay on host: (1) ops unsupported on the
+accelerator, (2) tiny ops whose host latency beats device launch+transfer,
+(3) ops whose placement minimizes the PCIe/host-link traffic — including the
+paper's broadcast rule: concatenate per-table tensors on host, ship ONE
+non-broadcasted tensor, and broadcast once on the accelerator.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# host<->device link (v5e PCIe gen4 x8-ish) and host compute assumptions
+LINK_GBPS = 16.0
+HOST_GFLOPS = 50.0
+DEVICE_LAUNCH_US = 10.0
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    name: str
+    flops: float
+    in_bytes: int            # bytes that must cross the link if placed off-host
+    out_bytes: int
+    supported_on_device: bool = True
+
+
+@dataclass
+class SplitDecision:
+    host_ops: Tuple[str, ...]
+    device_ops: Tuple[str, ...]
+    link_bytes: int          # host->device traffic under this split
+    rationale: Dict[str, str] = field(default_factory=dict)
+
+
+def split_net(ops: Sequence[OpSpec]) -> SplitDecision:
+    """Greedy front split: ops run host-side until device placement pays off.
+
+    The net is assumed topologically ordered with a single cut point (the
+    paper's splits are prefix/suffix: tokenize/pad on host, transformer on
+    device; region proposals back on host)."""
+    host, device, why = [], [], {}
+    cut = 0
+    for i, op in enumerate(ops):
+        if not op.supported_on_device:
+            cut = i + 1
+            why[op.name] = "unsupported on device"
+            continue
+        host_t = op.flops / (HOST_GFLOPS * 1e9)
+        dev_t = DEVICE_LAUNCH_US * 1e-6 + op.in_bytes / (LINK_GBPS * 1e9)
+        if host_t < dev_t and i == cut:
+            cut = i + 1
+            why[op.name] = f"host {host_t*1e6:.1f}us < launch+xfer {dev_t*1e6:.1f}us"
+    host = [o.name for o in ops[:cut]]
+    device = [o.name for o in ops[cut:]]
+    link = ops[cut].in_bytes if cut < len(ops) else 0
+    return SplitDecision(tuple(host), tuple(device), link, why)
+
+
+def broadcast_placement(num_tables: int, row_bytes: int, batch: int
+                        ) -> Dict[str, float]:
+    """Paper §VI-A: per-table broadcasts on device add per-op overhead; the
+    winning policy is concat on host, ship once, broadcast once on device.
+
+    Returns link bytes for the three strategies (lower is better)."""
+    one = num_tables * row_bytes
+    return {
+        # broadcast on host: ship batch replicas of everything
+        "host_broadcast": float(one * batch),
+        # per-table device broadcasts: ship once, pay num_tables launches
+        "device_broadcast_per_table": float(one)
+        + num_tables * DEVICE_LAUNCH_US * 1e-6 * LINK_GBPS * 1e9,
+        # paper's choice: concat on host -> 1 transfer -> 1 device broadcast
+        "concat_then_single_broadcast": float(one)
+        + 1 * DEVICE_LAUNCH_US * 1e-6 * LINK_GBPS * 1e9,
+    }

@@ -1,0 +1,36 @@
+"""Paper §V accuracy metrics: normalized entropy (NE) for recommendation
+models [23], cosine similarity for backbone embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normalized_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """NE = avg logloss / entropy of the base CTR (He et al., ADKDD'14).
+    logits (N,), labels (N,) in {0,1}."""
+    logits = logits.astype(jnp.float32).reshape(-1)
+    labels = labels.astype(jnp.float32).reshape(-1)
+    ll = jnp.mean(jax.nn.softplus(logits) - labels * logits)    # mean logloss
+    p = jnp.clip(jnp.mean(labels), 1e-6, 1 - 1e-6)
+    base = -(p * jnp.log(p) + (1 - p) * jnp.log(1 - p))
+    return ll / base
+
+
+def ne_delta(logits_q: jax.Array, logits_ref: jax.Array,
+             labels: jax.Array) -> float:
+    """Relative NE degradation of a quantized model vs the fp32 reference.
+    The paper's budget is 0.02%-0.05% (2e-4 .. 5e-4)."""
+    ne_q = normalized_entropy(logits_q, labels)
+    ne_r = normalized_entropy(logits_ref, labels)
+    return float((ne_q - ne_r) / ne_r)
+
+
+def cosine_similarity(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Mean per-row cosine similarity — the paper's backbone-embedding
+    criterion (>= 98% required)."""
+    a = a.astype(jnp.float32).reshape(a.shape[0], -1)
+    b = b.astype(jnp.float32).reshape(b.shape[0], -1)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1)
+    return jnp.mean(num / jnp.maximum(den, 1e-12))

@@ -1,0 +1,108 @@
+"""Paper §V-C numerics validation: independent reference implementations are
+compared against accelerator kernels at op level and full-net level, on every
+release ("we open sourced the operator-level unit tests [FakeLowP] so the
+vendor can run them independently").
+
+Here: every Pallas kernel registers (kernel_fn, ref_fn, case generator);
+``validate_all`` sweeps shapes/dtypes and asserts closeness, and
+``continuous_monitor`` replays a pinned input set and compares against
+stored golden outputs (the paper's continuous accuracy monitoring).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class OpValidationCase:
+    name: str
+    make_inputs: Callable[[jax.Array], tuple]     # key -> args
+    rtol: float = 1e-5
+    atol: float = 1e-5
+    bitwise: bool = False
+
+
+@dataclass
+class OpRegistration:
+    name: str
+    kernel_fn: Callable
+    ref_fn: Callable
+    cases: List[OpValidationCase] = field(default_factory=list)
+
+
+_REGISTRY: Dict[str, OpRegistration] = {}
+
+
+def register_op(name: str, kernel_fn: Callable, ref_fn: Callable,
+                cases: Sequence[OpValidationCase]):
+    _REGISTRY[name] = OpRegistration(name, kernel_fn, ref_fn, list(cases))
+
+
+def registered_ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@dataclass
+class ValidationReport:
+    op: str
+    case: str
+    max_abs: float
+    max_rel: float
+    passed: bool
+    bitwise: bool
+
+
+def validate_op(name: str, seed: int = 0) -> List[ValidationReport]:
+    reg = _REGISTRY[name]
+    out = []
+    for i, case in enumerate(reg.cases):
+        key = jax.random.PRNGKey(seed + i * 101)
+        args = case.make_inputs(key)
+        got = np.asarray(reg.kernel_fn(*args))
+        want = np.asarray(reg.ref_fn(*args))
+        diff = np.abs(got.astype(np.float64) - want.astype(np.float64))
+        rel = diff / np.maximum(np.abs(want.astype(np.float64)), 1e-12)
+        if case.bitwise:
+            ok = bool((got == want).all())
+        else:
+            ok = bool(np.allclose(got, want, rtol=case.rtol, atol=case.atol))
+        out.append(ValidationReport(name, case.name, float(diff.max(initial=0)),
+                                    float(rel.max(initial=0)), ok,
+                                    case.bitwise))
+    return out
+
+
+def validate_all(seed: int = 0) -> List[ValidationReport]:
+    reports = []
+    for name in registered_ops():
+        reports.extend(validate_op(name, seed))
+    return reports
+
+
+# --------------------------------------------------------------------------
+# Continuous accuracy monitoring (paper: "for every software release")
+# --------------------------------------------------------------------------
+
+@dataclass
+class GoldenSet:
+    """Pinned inputs + golden outputs for a full net (paper: full-net tests
+    expose fusion-only behaviors that op tests miss)."""
+    inputs: tuple
+    golden: np.ndarray
+    rtol: float = 1e-4
+    atol: float = 1e-4
+
+    @classmethod
+    def record(cls, fn: Callable, inputs: tuple, **kw) -> "GoldenSet":
+        return cls(inputs=inputs, golden=np.asarray(fn(*inputs)), **kw)
+
+    def check(self, fn: Callable) -> Tuple[bool, float]:
+        got = np.asarray(fn(*self.inputs))
+        ok = bool(np.allclose(got, self.golden, rtol=self.rtol, atol=self.atol))
+        return ok, float(np.abs(got - self.golden).max(initial=0))

@@ -1,0 +1,58 @@
+"""Data pipeline: host-side prefetching loader over the synthetic generators
+(double-buffered so host data prep overlaps device compute — the input-path
+half of the paper's T2 overlap)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PrefetchLoader:
+    """Wrap a numpy-batch iterator; a worker thread stages the next
+    ``depth`` batches (optionally device_put with a sharding)."""
+
+    def __init__(self, it: Iterator[Dict[str, np.ndarray]], depth: int = 2,
+                 sharding=None):
+        self._it = it
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._sharding = sharding
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                dev = {k: (jax.device_put(v, self._sharding)
+                           if self._sharding is not None else jnp.asarray(v))
+                       for k, v in batch.items()}
+                self._q.put(dev)
+        except Exception as e:                       # surface in __next__
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+
+
+def shard_batch(batch: Dict[str, np.ndarray], mesh, spec) -> Dict:
+    """Place a global batch onto the mesh (per-host slices on a real
+    cluster; whole-array put here)."""
+    from jax.sharding import NamedSharding
+    sh = NamedSharding(mesh, spec)
+    return {k: jax.device_put(v, sh) for k, v in batch.items()}

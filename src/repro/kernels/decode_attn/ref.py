@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k, v, pos, softcap: float = 0.0):
+    """q (B,H,hd); k,v (B,S,K,hd); pos () int32 (entries [0, pos] valid).
+    Returns (B,H,hd) f32. H = K*G."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd)
+
+
+def decode_attn_int8_ref(q, kq, k_scale, vq, v_scale, pos, softcap: float = 0.0):
+    """Oracle: dequantize the int8 cache, then standard decode attention."""
+    k = kq.astype(jnp.float32) * k_scale.astype(jnp.float32)[..., None]
+    v = vq.astype(jnp.float32) * v_scale.astype(jnp.float32)[..., None]
+    return decode_attn_ref(q, k, v, pos, softcap=softcap)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash prefill/train attention (GQA, causal/local,
+softcap, padded-length mask) — the materializing implementation the kernel
+must match."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, lens=None, causal: bool = True,
+                        window: int = 0, softcap: float = 0.0):
+    """q (B,S,H,hd); k,v (B,T,K,hd) -> (B,S,H,hd) in q.dtype."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    mask = jnp.broadcast_to(mask, (B, S, T))
+    if lens is not None:
+        mask = mask & (kpos[None, None, :] < lens[:, None, None])
+    s = jnp.where(mask[:, None, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)       # fully-masked rows -> 0
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)

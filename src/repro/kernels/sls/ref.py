@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SLS (sparse-lengths-sum / embedding-bag) kernel —
+the paper's §V-C numeric reference implementation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sls_ref(table, indices, lengths):
+    """table (R,D) float; indices (NB, L) int32; lengths (NB,) int32 ->
+    pooled (NB, D) float32 bag sums."""
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)   # (NB,L,D)
+    mask = jnp.arange(indices.shape[1])[None, :] < lengths[:, None]
+    return jnp.sum(rows * mask[..., None], axis=1)
+
+
+def sls_int8_ref(q, scale, bias, indices, lengths):
+    """Row-wise int8 table: q (R,D) uint8, scale/bias (R,) fp16."""
+    rows = jnp.take(q, indices, axis=0).astype(jnp.float32)
+    s = jnp.take(scale.astype(jnp.float32), indices, axis=0)
+    b = jnp.take(bias.astype(jnp.float32), indices, axis=0)
+    vals = rows * s[..., None] + b[..., None]
+    mask = jnp.arange(indices.shape[1])[None, :] < lengths[:, None]
+    return jnp.sum(vals * mask[..., None], axis=1)
+
+
+def sls_int4_ref(q4, scale, bias, indices, lengths):
+    """Packed int4 table: q4 (R,D//2) uint8 (lo nibble = even cols)."""
+    packed = jnp.take(q4, indices, axis=0)                        # (NB,L,D/2)
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    vals = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1] + (-1,))
+    s = jnp.take(scale.astype(jnp.float32), indices, axis=0)
+    b = jnp.take(bias.astype(jnp.float32), indices, axis=0)
+    vals = vals * s[..., None] + b[..., None]
+    mask = jnp.arange(indices.shape[1])[None, :] < lengths[:, None]
+    return jnp.sum(vals * mask[..., None], axis=1)

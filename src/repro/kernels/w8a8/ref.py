@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the w8a8 int8 matmul (paper §V: int8 FC with
+per-output-channel weight scales + dynamic per-tensor activation scale)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def w8a8_ref(xq, wq, x_scale, w_scale):
+    """xq (M,K) int8, wq (K,N) int8, x_scale () f32, w_scale (N,) f32 ->
+    (M,N) f32: int32 accumulation then dequant epilogue."""
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+    return acc.astype(jnp.float32) * x_scale * w_scale[None, :]

@@ -1,0 +1,50 @@
+"""Re-run the HLO analysis over dumped post-SPMD artifacts without
+recompiling: updates roofline/hlo fields of results/dryrun.jsonl in place.
+
+Usage: PYTHONPATH=src python -m repro.launch.reanalyze \
+           [--jsonl results/dryrun.jsonl] [--hlo results/hlo]
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+
+from repro.launch import hlo_analysis
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--hlo", default="results/hlo")
+    args = ap.parse_args()
+
+    rows = [json.loads(l) for l in open(args.jsonl)]
+    n = 0
+    for rec in rows:
+        fn = os.path.join(
+            args.hlo, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz")
+        if not rec.get("ok") or not os.path.exists(fn):
+            continue
+        with gzip.open(fn, "rt") as f:
+            summ = hlo_analysis.analyze(f.read())
+        rec["hlo"] = {
+            "dot_flops": summ.dot_flops,
+            "hbm_bytes": summ.hbm_bytes,
+            "hbm_bytes_raw": summ.hbm_bytes_raw,
+            "collective_bytes": summ.collective_bytes,
+            "collective_counts": summ.collective_counts,
+            "trip_counts": summ.trip_counts,
+        }
+        rec["roofline"] = hlo_analysis.roofline_terms(summ)
+        rec["dominant"] = max(rec["roofline"], key=rec["roofline"].get)
+        n += 1
+    with open(args.jsonl, "w") as f:
+        for rec in rows:
+            f.write(json.dumps(rec) + "\n")
+    print(f"re-analyzed {n}/{len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Abstract (ShapeDtypeStruct) stand-ins for params/caches/inputs of every
+(arch x workload-shape) cell — weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, WorkloadShape
+from repro.models import model as model_mod
+from repro.sharding.rules import (Logical, ShardingRules, logical_to_spec,
+                                  spec_mode, use_mesh)
+from repro.training import optimizer as opt_mod
+from repro.training import train_step as ts_mod
+
+WHISPER_TGT = 448         # decoder target length for enc-dec cells
+VLM_PREFIX_FRAC = 1.0     # qwen2-vl: all positions get (t,h,w) ids
+
+
+# --------------------------------------------------------------------------
+# spec trees
+# --------------------------------------------------------------------------
+
+def _specify(logical_tree, shape_tree, rules: ShardingRules, mesh: Mesh):
+    def one(l, s):
+        spec = logical_to_spec(l, rules, mesh, s.shape)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, logical_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, Logical))
+
+
+def abstract_params(cfg: ModelConfig, rules: ShardingRules, mesh: Mesh):
+    key = jax.random.PRNGKey(0)
+    with spec_mode():
+        logical = model_mod.init_params(cfg, key)
+    shapes = jax.eval_shape(lambda: model_mod.init_params(cfg, key))
+    return _specify(logical, shapes, rules, mesh)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    rules: ShardingRules, mesh: Mesh, with_cross: bool = False):
+    with spec_mode():
+        logical = model_mod.init_caches(cfg, batch, max_len)
+    shapes = jax.eval_shape(
+        lambda: model_mod.init_caches(cfg, batch, max_len))
+    out = _specify(logical, shapes, rules, mesh)
+    if with_cross and cfg.encdec is not None:
+        out["cross"] = _cross_kv_specs(cfg, batch, max_len, rules, mesh)
+    return out
+
+
+def _cross_kv_specs(cfg: ModelConfig, batch: int, enc_len: int,
+                    rules: ShardingRules, mesh: Mesh):
+    unit, repeats, tail = cfg.scan_plan()
+    kv = (batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+    lg = Logical("batch", None, "kv_heads", None)
+    dt = jnp.dtype(cfg.activation_dtype)
+
+    def one(stacked: bool):
+        shp = (repeats,) + kv if stacked else kv
+        l = lg.prepend(None) if stacked else lg
+        spec = logical_to_spec(l, rules, mesh, shp)
+        return jax.ShapeDtypeStruct(shp, dt, sharding=NamedSharding(mesh, spec))
+
+    return {"scan": tuple({"k": one(True), "v": one(True)} for _ in unit),
+            "tail": tuple({"k": one(False), "v": one(False)} for _ in tail)}
+
+
+def _arr(mesh, rules, shape, dtype, *axes):
+    spec = logical_to_spec(Logical(*axes), rules, mesh, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# input specs per workload shape
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: WorkloadShape, rules: ShardingRules,
+                mesh: Mesh) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.activation_dtype)
+    mk = functools.partial(_arr, mesh, rules)
+    if shape.kind == "train":
+        if cfg.encdec is not None:
+            return {"enc_embeds": mk((B, S, cfg.d_model), dt, "batch", "seq", None),
+                    "tokens": mk((B, WHISPER_TGT), jnp.int32, "batch", None),
+                    "labels": mk((B, WHISPER_TGT), jnp.int32, "batch", None)}
+        batch = {"labels": mk((B, S), jnp.int32, "batch", None)}
+        if cfg.input_kind == "embeddings":
+            batch["embeds"] = mk((B, S, cfg.d_model), dt, "batch", "seq", None)
+            if cfg.rope_mode == "mrope":
+                batch["positions"] = mk((3, B, S), jnp.int32, None, "batch", None)
+        else:
+            batch["tokens"] = mk((B, S), jnp.int32, "batch", None)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.encdec is not None:
+            return {"enc_embeds": mk((B, S, cfg.d_model), dt, "batch", "seq", None),
+                    "tokens": mk((B, 16), jnp.int32, "batch", None)}
+        if cfg.input_kind == "embeddings":
+            batch = {"embeds": mk((B, S, cfg.d_model), dt, "batch", "seq", None)}
+            if cfg.rope_mode == "mrope":
+                batch["positions"] = mk((3, B, S), jnp.int32, None, "batch", None)
+            return batch
+        return {"tokens": mk((B, S), jnp.int32, "batch", None)}
+    # decode: one new token against caches of size seq_len
+    return {"tokens": mk((B, 1), jnp.int32, "batch", None)}
+
+
+# --------------------------------------------------------------------------
+# step builders: (fn, example_args, donate_argnums)
+# --------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, shape: WorkloadShape,
+                     rules: ShardingRules, mesh: Mesh):
+    opt_cfg = opt_mod.select_for(cfg.param_count())
+    # data-parallel degree = product of mesh axes the batch dim maps to
+    # (rules.batch may include 'model' under pure ZeRO-3 data parallelism)
+    batch_axes = rules.batch if isinstance(rules.batch, (tuple, list)) \
+        else (rules.batch,)
+    n_data = 1
+    for ax in batch_axes:
+        if ax:
+            n_data *= mesh.shape.get(ax, 1)
+    accum = ts_mod.choose_microbatches(cfg, shape.global_batch, shape.seq_len,
+                                       n_data)
+    step = ts_mod.make_train_step(cfg, opt_cfg, accum_steps=accum, remat=True)
+    params = abstract_params(cfg, rules, mesh)
+    opt_state = _opt_state_specs(params, opt_cfg, mesh)
+    batch = input_specs(cfg, shape, rules, mesh)
+    return step, (params, opt_state, batch), (0, 1), {"accum_steps": accum,
+                                                      "optimizer": opt_cfg.name}
+
+
+def _opt_state_specs(params, opt_cfg, mesh: Mesh):
+    """Optimizer-state SDS mirroring init_opt_state's structure, inheriting
+    param shardings (ZeRO: states shard exactly like params)."""
+    scalar = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P()))
+
+    def mirror(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    if opt_cfg.name == "adam":
+        m = jax.tree.map(mirror, params)
+        return {"step": scalar, "mu": m,
+                "nu": jax.tree.map(mirror, params)}
+
+    def fact(p):
+        spec = tuple(p.sharding.spec) + (None,) * (len(p.shape)
+                                                   - len(p.sharding.spec))
+        if p.ndim >= 2 and p.shape[-1] >= opt_cfg.min_dim_factored \
+                and p.shape[-2] >= opt_cfg.min_dim_factored:
+            vr = NamedSharding(mesh, P(*spec[:-1]))
+            vc = NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))
+            return {"vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32,
+                                               sharding=vr),
+                    "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                               jnp.float32, sharding=vc)}
+        return {"v": mirror(p)}
+
+    return {"step": scalar,
+            "v": jax.tree.map(fact, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def build_prefill_step(cfg: ModelConfig, shape: WorkloadShape,
+                       rules: ShardingRules, mesh: Mesh):
+    params = abstract_params(cfg, rules, mesh)
+    batch = input_specs(cfg, shape, rules, mesh)
+
+    def prefill_fn(params, batch):
+        return model_mod.prefill(params, cfg, batch, max_len=shape.seq_len)
+
+    return prefill_fn, (params, batch), (), {}
+
+
+def build_serve_step(cfg: ModelConfig, shape: WorkloadShape,
+                     rules: ShardingRules, mesh: Mesh):
+    B = shape.global_batch
+    params = abstract_params(cfg, rules, mesh)
+    caches = abstract_caches(cfg, B, shape.seq_len, rules, mesh,
+                             with_cross=True)
+    batch = input_specs(cfg, shape, rules, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+
+    def serve_fn(params, caches, tokens, pos):
+        hidden, caches = model_mod.decode_step(params, cfg, tokens, caches, pos)
+        nxt = model_mod.greedy_next(params, cfg, hidden)
+        return nxt, caches
+
+    return serve_fn, (params, caches, batch["tokens"], pos), (1,), {}
+
+
+def build_step(cfg: ModelConfig, shape: WorkloadShape, rules: ShardingRules,
+               mesh: Mesh):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, rules, mesh)
+    return build_serve_step(cfg, shape, rules, mesh)
+
+
+def rules_for(cfg: ModelConfig, shape: WorkloadShape) -> ShardingRules:
+    """Baseline rules per cell (hillclimb overrides via dryrun --rules)."""
+    rules = ShardingRules()
+    if shape.kind == "train":
+        rules = rules.with_(embed="data")            # FSDP for training
+    if shape.name == "long_500k":
+        rules = rules.with_(kv_seq="data")           # sequence-sharded cache
+    return rules

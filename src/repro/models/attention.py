@@ -1,0 +1,382 @@
+"""Attention: GQA/MQA, global/local(sliding-window), logit softcap,
+RoPE / M-RoPE, cross-attention, KV caches (full + ring buffer), and a
+sequence-sharded decode path (flash partial-softmax merge over the mesh).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (apply_mrope, apply_rope, mk_param, softcap)
+from repro.sharding.rules import (current_ctx, logical_to_spec, Logical,
+                                  mesh_axis_names, mesh_axis_size, shard)
+
+NEG_INF = -2.3819763e38   # kept finite so masked softmax rows stay NaN-free
+PREFILL_Q_CHUNK = 4096    # query-block size for long-prefill chunked attention
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Hp = cfg.padded_heads          # TP-divisible head count (>= H)
+    p = {
+        "wq": mk_param(ks[0], (d, Hp, hd), ("embed", "heads", None), dt),
+        "wk": mk_param(ks[1], (d, K, hd), ("embed", "kv_heads", None), dt),
+        "wv": mk_param(ks[2], (d, K, hd), ("embed", "kv_heads", None), dt),
+        "wo": mk_param(ks[3], (Hp, hd, d), ("heads", None, "embed"), dt),
+    }
+    if Hp > H and not isinstance(p["wo"], Logical):
+        # padded heads' output rows are zero: attention output is exact
+        p["wo"] = p["wo"].at[H:].set(0)
+    if cfg.qkv_bias:
+        p["bq"] = mk_param(ks[4], (Hp, hd), ("heads", None), dt, "zeros")
+        p["bk"] = mk_param(ks[5], (K, hd), ("kv_heads", None), dt, "zeros")
+        p["bv"] = mk_param(ks[6], (K, hd), ("kv_heads", None), dt, "zeros")
+    if cfg.o_bias:
+        p["bo"] = mk_param(ks[7], (d,), ("embed",), dt, "zeros")
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+                  dtype=None):
+    """Cache pytree for one attention layer. 'local' uses a ring buffer of
+    ``window_size`` slots; 'global' holds ``max_len``.
+
+    With cfg.quant.kv_cache_dtype == 'int8' (paper T3 applied to serving),
+    K/V store int8 with per-(token, kv-head) symmetric scales — halves the
+    memory-bound decode cache traffic."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    slots = min(cfg.window_size, max_len) if kind == "local" else max_len
+    shape = (batch, slots, cfg.num_kv_heads, cfg.head_dim)
+    seq_ax = None if kind == "local" else "kv_seq"
+    axes = ("batch", seq_ax, "kv_heads", None)
+    if cfg.quant.kv_cache_dtype == "int8":
+        return {
+            "k": mk_param(None, shape, axes, jnp.int8, "zeros"),
+            "v": mk_param(None, shape, axes, jnp.int8, "zeros"),
+            "k_scale": mk_param(None, shape[:3], axes[:3], jnp.float16,
+                                "zeros"),
+            "v_scale": mk_param(None, shape[:3], axes[:3], jnp.float16,
+                                "zeros"),
+        }
+    return {
+        "k": mk_param(None, shape, axes, dtype, "zeros"),
+        "v": mk_param(None, shape, axes, dtype, "zeros"),
+    }
+
+
+def _kv_quant(x):
+    """x (..., hd) -> (int8 vals, fp16 scale (...,)) symmetric per vector."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1),
+                         1e-6)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# projections
+# --------------------------------------------------------------------------
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, kv_x=None, rope: bool = True):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if rope and positions is not None:
+        if cfg.rope_mode == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _out_proj(p, o):
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"]
+    return shard(y, "batch", "seq", None)
+
+
+# --------------------------------------------------------------------------
+# full attention (train / prefill / encoder)
+# --------------------------------------------------------------------------
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q (B,S,H,hd), k (B,T,K,hd) -> scores (B,K,G,S,T).
+
+    The MXU accumulates in f32 (preferred_element_type); the materialized
+    logits are stored back in the activation dtype — flash-style numerics
+    (paper T3: data-type changes for compute). Softmax re-upcasts its
+    internals to f32, fused."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    # emit logits in the activation dtype: the MXU accumulates f32
+    # internally regardless, and the (B,K,G,S,T) materialization halves
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                   preferred_element_type=q.dtype)
+    s = s * (hd ** -0.5)
+    return softcap(s, cfg.attn_logit_softcap)
+
+
+def _gqa_out(probs, v):
+    """probs (B,K,G,S,T) fp32, v (B,T,K,hd) -> (B,S,H,hd)."""
+    B, K, G, S, T = probs.shape
+    o = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return o.reshape(B, S, K * G, -1)
+
+
+def full_attention(p, x, cfg: ModelConfig, kind: str, positions,
+                   kv_valid=None, causal: bool = True, cross_kv=None):
+    """Dense attention over a whole sequence.
+
+    kind: 'global' | 'local'. cross_kv: dict(k=,v=) for encoder-decoder
+    cross attention (no rope, no causal mask over encoder keys).
+    """
+    if cross_kv is not None:
+        q, _, _ = _project_qkv(p, x, cfg, positions=None, rope=False)
+        k, v = cross_kv["k"], cross_kv["v"]
+        scores = _gqa_scores(q, k, cfg)
+        if kv_valid is not None:
+            scores = jnp.where(kv_valid[:, None, None, None, :], scores,
+                               jnp.asarray(NEG_INF, scores.dtype))
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        return _out_proj(p, _gqa_out(probs, v)), None
+
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    qpos = positions if positions.ndim == 2 else positions[0]
+    kpos = qpos
+
+    if cfg.attention_impl == "flash_pallas" and causal:
+        from repro.kernels.flash_attn.ops import flash_attn
+        lens = kv_valid.sum(-1).astype(jnp.int32) if kv_valid is not None \
+            else None
+        o = flash_attn(q, k, v, lens, causal=True,
+                       window=cfg.window_size if kind == "local" else 0,
+                       softcap=cfg.attn_logit_softcap or 0.0,
+                       interpret=jax.default_backend() != "tpu")
+        o = shard(o, "batch", "seq", "heads", None)
+        return _out_proj(p, o), (k, v)
+
+    def core(q_blk, qpos_blk):
+        """Attention of a query block against the full K/V."""
+        mask = jnp.ones((q_blk.shape[0], q_blk.shape[1], S), bool)
+        if causal:
+            mask &= qpos_blk[:, :, None] >= kpos[:, None, :]
+        if kind == "local":
+            mask &= qpos_blk[:, :, None] - kpos[:, None, :] < cfg.window_size
+        if kv_valid is not None:
+            mask &= kv_valid[:, None, :]
+        scores = _gqa_scores(q_blk, k, cfg)
+        scores = jnp.where(mask[:, None, None, :, :], scores,
+                           jnp.asarray(NEG_INF, scores.dtype))
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        o_blk = _gqa_out(probs, v)
+        return shard(o_blk, "batch", "seq", "heads", None)
+
+    if S > 2 * PREFILL_Q_CHUNK and S % PREFILL_Q_CHUNK == 0 \
+            and mesh_axis_size("seq") == 1:
+        # long prefill: scan query blocks so only one (B,K,G,Sq,T) score
+        # block is ever live (peak VMEM/HBM control; traffic unchanged).
+        # Skipped under sequence sharding: the shard itself bounds the peak
+        # and the chunk reshapes would force per-chunk resharding.
+        nblk = S // PREFILL_Q_CHUNK
+        qb = jnp.moveaxis(q.reshape((q.shape[0], nblk, PREFILL_Q_CHUNK)
+                                    + q.shape[2:]), 1, 0)
+        pb = jnp.moveaxis(qpos.reshape(qpos.shape[0], nblk,
+                                       PREFILL_Q_CHUNK), 1, 0)
+        _, ob = jax.lax.scan(lambda c, inp: (c, core(*inp)), None, (qb, pb))
+        o = jnp.moveaxis(ob, 0, 1).reshape(q.shape)
+    else:
+        o = core(q, qpos)
+    return _out_proj(p, o), (k, v)
+
+
+def fill_cache_from_prefill(cache, k, v, kind: str, cfg: ModelConfig):
+    """Write prefill K/V into the cache (ring layout for local layers)."""
+    S = k.shape[1]
+    slots = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    pairs = [("k", k), ("v", v)]
+    if quant:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        pairs = [("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)]
+    out = {}
+    if kind == "local" and S > slots:
+        # keep the last ``window`` tokens, placed at ring positions
+        roll = (S - slots) % slots
+        # ring index of the oldest kept token
+        idx = (jnp.arange(slots) + roll) % slots
+        for name, val in pairs:
+            val = val[:, S - slots:]
+            out[name] = jnp.zeros_like(cache[name]).at[:, idx].set(
+                val.astype(cache[name].dtype))
+        return out
+    for name, val in pairs:
+        start = (0,) * cache[name].ndim
+        out[name] = jax.lax.dynamic_update_slice(
+            cache[name], val.astype(cache[name].dtype), start)
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
+    """x (B,1,d); pos int32 scalar OR per-sequence (B,) vector (#tokens
+    already in each slot's cache — continuous batching decodes slots at
+    different positions). Returns (y (B,1,d), new_cache). Dispatches to the
+    sequence-sharded path when the mesh shards the cache sequence axis."""
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    pos_b = pos if per_slot else jnp.full((B,), pos, jnp.int32)
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(pos_b[None, :, None], (3, B, 1))
+    else:
+        positions = pos_b[:, None]
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    slots = cache["k"].shape[1]
+    write_at = jnp.mod(pos_b, slots) if kind == "local" else pos_b
+    quant = "k_scale" in cache
+
+    if kind == "global" and mesh_axis_size("kv_seq") > 1 and not quant:
+        o, new_cache = _decode_seq_sharded(
+            q, k_new, v_new, cache, pos if not per_slot else pos_b[0], cfg)
+        return _out_proj(p, o), new_cache
+
+    def write_one(c, new, at):
+        start = (at,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), start)
+
+    new_cache = {}
+    if quant:
+        kq, ks = _kv_quant(k_new)
+        vq, vs = _kv_quant(v_new)
+        for name, val in (("k", kq), ("v", vq),
+                          ("k_scale", ks), ("v_scale", vs)):
+            new_cache[name] = jax.vmap(write_one)(cache[name], val, write_at)
+        ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
+        cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        for name, val in (("k", k_new), ("v", v_new)):
+            new_cache[name] = jax.vmap(write_one)(cache[name], val, write_at)
+        ck, cv = new_cache["k"], new_cache["v"]
+    idx = jnp.arange(slots)
+    if kind == "local":
+        # ring buffer: once full, every slot holds one of the last W tokens
+        valid = jnp.where(pos_b[:, None] >= slots,
+                          jnp.ones((B, slots), bool),
+                          idx[None, :] <= pos_b[:, None])
+    else:
+        valid = idx[None, :] <= pos_b[:, None]
+    scores = _gqa_scores(q, ck, cfg)                      # (B,K,G,1,slots)
+    scores = jnp.where(valid[:, None, None, None, :], scores,
+                       jnp.asarray(NEG_INF, scores.dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    o = _gqa_out(probs, cv)
+    return _out_proj(p, o), new_cache
+
+
+def merge_partials(o_parts, m_parts, l_parts, axis=0):
+    """Merge flash-attention partials: o_i normalized outputs, m_i row maxes,
+    l_i row sums -> combined softmax output. Shapes broadcast over ``axis``."""
+    m = jnp.max(m_parts, axis=axis, keepdims=True)
+    alpha = jnp.exp(m_parts - m)
+    l = jnp.sum(l_parts * alpha, axis=axis)
+    o = jnp.sum(o_parts * (l_parts * alpha)[..., None], axis=axis)
+    return o / l[..., None]
+
+
+def _decode_seq_sharded(q, k_new, v_new, cache, pos, cfg: ModelConfig):
+    """Decode attention with the KV cache sharded along sequence on the mesh
+    (paper T1/T9 analogue: partial results merged device-to-device, host-free).
+
+    Each shard computes a local flash partial (o, m, l); partials merge with a
+    tiny psum instead of gathering the cache.
+    """
+    ctx = current_ctx()
+    mesh = ctx.mesh
+    seq_axes = mesh_axis_names("kv_seq")
+    n_shards = mesh_axis_size("kv_seq")
+    S = cache["k"].shape[1]
+    S_local = S // n_shards
+
+    cache_spec = logical_to_spec(Logical("batch", "kv_seq", "kv_heads", None),
+                                 ctx.rules, mesh, cache["k"].shape)
+    qkv_spec = logical_to_spec(Logical("batch", None, "kv_heads", None),
+                               ctx.rules, mesh, k_new.shape)
+    q_spec = logical_to_spec(Logical("batch", None, "heads", None),
+                             ctx.rules, mesh, q.shape)
+
+    def body(q, k_new, v_new, ck, cv, pos):
+        rank = jax.lax.axis_index(seq_axes)
+        start = rank * S_local
+        local_pos = jnp.clip(pos - start, 0, S_local)
+        owner = (pos >= start) & (pos < start + S_local)
+        kw = jnp.where(owner, pos - start, 0)
+        upd_k = jnp.where(owner, k_new.astype(ck.dtype),
+                          jax.lax.dynamic_slice(ck, (0, kw, 0, 0), k_new.shape))
+        upd_v = jnp.where(owner, v_new.astype(cv.dtype),
+                          jax.lax.dynamic_slice(cv, (0, kw, 0, 0), v_new.shape))
+        ck = jax.lax.dynamic_update_slice(ck, upd_k, (0, kw, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, upd_v, (0, kw, 0, 0))
+        valid = jnp.arange(S_local) < jnp.where(owner, local_pos + 1, local_pos)
+        scores = _gqa_scores(q, ck, cfg)                  # (B,K,G,1,S_local)
+        scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+        m = jnp.max(scores, axis=-1)                       # (B,K,G,1)
+        # guard fully-masked shards
+        has_any = jnp.any(valid)
+        m_safe = jnp.where(has_any, m, NEG_INF)
+        p_ = jnp.exp(scores - m_safe[..., None])
+        p_ = jnp.where(valid[None, None, None, None, :], p_, 0.0)
+        l = jnp.sum(p_, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bkgsd", p_.astype(cv.dtype), cv)
+        # merge across shards: o is the UNnormalized partial (sum of
+        # exp(s - m_local) * v), so rescale by exp(m_local - M) only
+        M = jax.lax.pmax(m_safe, seq_axes)
+        w = jnp.exp(m_safe - M)
+        o = jax.lax.psum(o.astype(jnp.float32) * w[..., None], seq_axes)
+        lsum = jax.lax.psum(l * w, seq_axes)
+        o = o / jnp.maximum(lsum[..., None], 1e-30)
+        B, K, G, S1, hd = o.shape
+        o = jnp.swapaxes(o, 1, 3).reshape(B, S1, K * G, hd)
+        return o.astype(q.dtype), ck, cv
+
+    o, ck, cv = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, qkv_spec, qkv_spec, cache_spec, cache_spec, P()),
+        out_specs=(q_spec, cache_spec, cache_spec),
+        check_vma=False,
+    )(q, k_new, v_new, cache["k"], cache["v"], pos)
+    return o, {"k": ck, "v": cv}

@@ -1,0 +1,148 @@
+"""Shared model utilities: parameter creation (with logical-axis spec
+tracing), norms, activations, RoPE / M-RoPE, logit softcap."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import Logical, in_spec_mode
+
+# --------------------------------------------------------------------------
+# Parameter creation. In spec mode, returns the Logical axes instead of an
+# array so one init function is the single source of truth for both values
+# and sharding specs.
+# --------------------------------------------------------------------------
+
+def mk_param(key, shape: Sequence[int], axes: Tuple[Optional[str], ...],
+             dtype=jnp.float32, init: str = "normal", scale: float = 1.0):
+    assert len(shape) == len(axes), (shape, axes)
+    if in_spec_mode():
+        return Logical(*axes)
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        std = scale / math.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(init)
+
+
+def stacked_init(init_fn, key, n: int):
+    """Stack ``n`` independent inits along a new leading axis.
+
+    In spec mode, runs the init once and prepends a replicated leading axis
+    (the scan-over-layers axis is never sharded).
+    """
+    if in_spec_mode():
+        one = init_fn(key)
+        return jax.tree.map(lambda l: l.prepend(None), one,
+                            is_leaf=lambda x: isinstance(x, Logical))
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# --------------------------------------------------------------------------
+# Norms / activations
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    out = x * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def init_norm(key, d: int, norm_type: str, dtype):
+    if norm_type == "rmsnorm":
+        return {"scale": mk_param(key, (d,), ("embed",), dtype, "zeros")}
+    return {"scale": mk_param(key, (d,), ("embed",), dtype, "zeros"),
+            "bias": mk_param(key, (d,), ("embed",), dtype, "zeros")}
+
+
+def apply_norm(params, x, norm_type: str, eps: float):
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"], eps)
+    return layer_norm(x, params["scale"], params.get("bias"), eps)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE (standard + Qwen2-VL M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, head_dim//2), fp32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B,S,H,D); positions (B,S) -> rotated x (split-half convention)."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)   # (B,S,hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Tuple[int, int, int]):
+    """M-RoPE: positions3 (3,B,S) are (t,h,w) ids; head_dim//2 frequencies are
+    split into ``sections`` groups, each rotated by its own position stream.
+    [arXiv:2409.12191]"""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    cos_list, sin_list = [], []
+    start = 0
+    for sec, pos in zip(sections, positions3):
+        cos, sin = _rope_angles(pos, head_dim, theta)        # (B,S,half)
+        cos_list.append(cos[..., start:start + sec])
+        sin_list.append(sin[..., start:start + sec])
+        start += sec
+    cos = jnp.concatenate(cos_list, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(sin_list, axis=-1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+VOCAB_PAD_MULT = 256   # pad vocab so row-sharding divides any mesh axis combo

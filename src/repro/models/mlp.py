@@ -1,0 +1,43 @@
+"""Dense MLP (GLU and plain variants)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation_fn, mk_param
+from repro.sharding.rules import shard
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int = None):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {}
+    if cfg.glu:
+        p["w_gate"] = mk_param(ks[0], (d, f), ("embed", "mlp"), dt)
+        p["w_up"] = mk_param(ks[1], (d, f), ("embed", "mlp"), dt)
+    else:
+        p["w_up"] = mk_param(ks[1], (d, f), ("embed", "mlp"), dt)
+    p["w_down"] = mk_param(ks[2], (f, d), ("mlp", "embed"), dt)
+    if cfg.mlp_bias:
+        p["b_up"] = mk_param(ks[3], (f,), ("mlp",), dt, "zeros")
+        p["b_down"] = mk_param(ks[3], (d,), ("embed",), dt, "zeros")
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    act = activation_fn(cfg.activation)
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "b_up" in p:
+        up = up + p["b_up"]
+    if cfg.glu:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = act(gate) * up
+    else:
+        h = act(up)
+    h = shard(h, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return shard(y, "batch", "seq", None)

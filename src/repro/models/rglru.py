@@ -1,0 +1,122 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block. [arXiv:2402.19427]
+
+Residual-block mixer: two input branches (GeLU gate; conv1d -> RG-LRU),
+merged multiplicatively and projected out. Sequence form uses an
+associative scan; decode is a single gated-recurrence step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import mk_param
+from repro.sharding.rules import shard
+
+N_BLOCKS = 8        # block-diagonal gate projections
+LRU_C = 8.0         # RG-LRU temperature constant
+
+
+def _width(cfg: ModelConfig) -> int:
+    return cfg.recurrent.lru_width or cfg.d_model
+
+
+def init_rglru(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    w = _width(cfg)
+    r = cfg.recurrent
+    nb = N_BLOCKS if w % N_BLOCKS == 0 else 1
+    bw = w // nb
+    ks = jax.random.split(key, 9)
+    return {
+        "proj_x": mk_param(ks[0], (d, w), ("embed", "ssm_inner"), dt),
+        "proj_gate": mk_param(ks[1], (d, w), ("embed", "ssm_inner"), dt),
+        "conv_w": mk_param(ks[2], (r.d_conv, w), (None, "ssm_inner"), dt,
+                           "normal", scale=0.5),
+        "conv_b": mk_param(ks[3], (w,), ("ssm_inner",), dt, "zeros"),
+        "wa": mk_param(ks[4], (nb, bw, bw), (None, None, None), dt),
+        "wx": mk_param(ks[5], (nb, bw, bw), (None, None, None), dt),
+        "ba": mk_param(ks[6], (w,), ("ssm_inner",), jnp.float32, "zeros"),
+        "bx": mk_param(ks[7], (w,), ("ssm_inner",), jnp.float32, "zeros"),
+        "a_param": mk_param(ks[8], (w,), ("ssm_inner",), jnp.float32, "ones"),
+        "proj_out": mk_param(ks[3], (w, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    w = _width(cfg)
+    return {
+        "h": mk_param(None, (batch, w), ("batch", "ssm_inner"), jnp.float32,
+                      "zeros"),
+        "conv": mk_param(None, (batch, cfg.recurrent.d_conv - 1, w),
+                         ("batch", None, "ssm_inner"), dtype, "zeros"),
+    }
+
+
+def _block_diag(u, w):
+    """u (..., nb*bw) @ block-diag w (nb,bw,bw) -> (..., nb*bw)."""
+    nb, bw, _ = w.shape
+    shp = u.shape
+    ub = u.reshape(shp[:-1] + (nb, bw))
+    out = jnp.einsum("...ki,kij->...kj", ub, w)
+    return out.reshape(shp)
+
+
+def _gates(p, u):
+    """RG-LRU gates: log_a (log recurrent decay) and gated input term."""
+    r = jax.nn.sigmoid(_block_diag(u, p["wa"]).astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(_block_diag(u, p["wx"]).astype(jnp.float32) + p["bx"])
+    log_a = -LRU_C * r * jax.nn.softplus(p["a_param"])       # (B,S,w) fp32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = mult * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
+
+
+def rglru_forward(p, x, cfg: ModelConfig, return_state: bool = False):
+    """x (B,S,d) -> (B,S,d) [, cache]."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_gate"]))
+    u_pre = jnp.einsum("bsd,dw->bsw", x, p["proj_x"])
+    u = _causal_conv(u_pre, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)
+    # h_t = a_t h_{t-1} + b_t via associative scan along seq
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["proj_out"])
+    out = shard(out, "batch", "seq", None)
+    if return_state:
+        K = cfg.recurrent.d_conv - 1
+        tail = u_pre[:, -K:]
+        padn = K - tail.shape[1]
+        if padn > 0:
+            tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
+        cache = {"h": h[:, -1].astype(jnp.float32),
+                 "conv": tail.astype(jnp.dtype(cfg.activation_dtype))}
+        return out, cache
+    return out, None
+
+
+def rglru_decode_step(p, x, cache, cfg: ModelConfig):
+    """x (B,1,d) single step."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_gate"]))
+    u_new = jnp.einsum("bsd,dw->bsw", x, p["proj_x"])
+    window = jnp.concatenate([cache["conv"],
+                              u_new.astype(cache["conv"].dtype)], axis=1)
+    u = (jnp.einsum("bkw,kw->bw", window, p["conv_w"]) + p["conv_b"])[:, None]
+    a, b = _gates(p, u)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = (gate.astype(jnp.float32) * h[:, None]).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["proj_out"])
+    return out, {"h": h, "conv": window[:, 1:]}

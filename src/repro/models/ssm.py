@@ -1,0 +1,201 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD for train/prefill (quadratic within a chunk, linear across
+chunks) and a constant-memory stateful step for decode — this is what makes
+``long_500k`` runnable for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import mk_param
+from repro.sharding.rules import shard
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def init_ssm(cfg: ModelConfig, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    d_in_proj = 2 * d_in + 2 * s.d_state + nh
+    return {
+        "in_proj": mk_param(ks[0], (d, d_in_proj), ("embed", None), dt),
+        "conv_w": mk_param(ks[1], (s.d_conv, conv_dim), (None, None), dt,
+                           "normal", scale=0.5),
+        "conv_b": mk_param(ks[2], (conv_dim,), (None,), dt, "zeros"),
+        "A_log": mk_param(ks[3], (nh,), (None,), jnp.float32, "zeros"),
+        "D": mk_param(ks[4], (nh,), (None,), jnp.float32, "ones"),
+        "dt_bias": mk_param(ks[5], (nh,), (None,), jnp.float32, "zeros"),
+        "norm_scale": mk_param(ks[6], (d_in,), (None,), dt, "zeros"),
+        "out_proj": mk_param(ks[7], (d_in, d), (None, "embed"), dt),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "state": mk_param(None, (batch, nh, s.head_dim, s.d_state),
+                          ("batch", None, None, None), jnp.float32, "zeros"),
+        "conv": mk_param(None, (batch, s.d_conv - 1, conv_dim),
+                         ("batch", None, None), dtype, "zeros"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x (B,S,C); depthwise causal conv with kernel (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum(a):
+    """a (..., L) -> (..., L, L) lower-tri cumulative sums: out[s,t] =
+    sum_{t < u <= s} a[u], -inf above the diagonal."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dtA, B, C, chunk: int):
+    """SSD scan. x (b,l,h,p) already multiplied by dt; dtA (b,l,h) log-decay;
+    B,C (b,l,n) shared over heads (n_groups=1). Returns y (b,l,h,p) and the
+    final state (b,h,p,n)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    ar = dtA.reshape(b, c, chunk, h).astype(jnp.float32)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    a_cs = jnp.cumsum(ar, axis=2)                              # (b,c,l,h)
+    L = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))             # (b,c,h,l,l)
+    # intra-chunk (quadratic within chunk)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        Cr, Br, L.astype(Cr.dtype), xr)
+    # chunk end-states
+    decay = jnp.exp(a_cs[:, :, -1:, :] - a_cs)                 # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Br, decay.astype(Br.dtype), xr)        # (b,c,h,p,n)
+    # inter-chunk recurrence over c
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])                   # (b,c,h)
+
+    def step(carry, inp):
+        st, dec = inp
+        carry = carry * dec[..., None, None] + st
+        return carry, carry
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, all_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    # states *entering* each chunk
+    prev = jnp.concatenate([init[None], all_states[:-1]], axis=0) \
+              .transpose(1, 0, 2, 3, 4)                        # (b,c,h,p,n)
+    state_decay = jnp.exp(a_cs)                                # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cr, prev.astype(Cr.dtype), state_decay.astype(Cr.dtype))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim:]
+    return z, xBC, dt
+
+
+def _gated_out(p, y, z, cfg: ModelConfig):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    # gated RMSNorm
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * (1.0 + p["norm_scale"].astype(jnp.float32)))
+    return jnp.einsum("bsd,dk->bsk", y.astype(p["out_proj"].dtype),
+                      p["out_proj"])
+
+
+def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x (B,S,d) -> y (B,S,d) [, cache]."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B_, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xBC, dtraw = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(xBC.dtype)
+    xs = xBC[..., :d_in].reshape(B_, S, nh, s.head_dim)
+    Bmat = xBC[..., d_in:d_in + s.d_state]
+    Cmat = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                        # (nh,)
+    # pad sequence to a chunk multiple
+    chunk = min(s.chunk_size, S) if S % min(s.chunk_size, S) == 0 else S
+    y, final = ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                           dt * A, Bmat, Cmat, chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, S, d_in)
+    out = _gated_out(p, y, z, cfg)
+    out = shard(out, "batch", "seq", None)
+    if return_state:
+        cache = {"state": final,
+                 "conv": xBC_raw_tail(x, p, cfg, S)}
+        return out, cache
+    return out, None
+
+
+def xBC_raw_tail(x, p, cfg: ModelConfig, S: int):
+    """Last (d_conv-1) pre-conv xBC inputs, for decode continuation."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x[:, -(s.d_conv - 1):], p["in_proj"])
+    _, xBC, _ = _split_proj(zxbcdt, cfg)
+    need = s.d_conv - 1
+    pad = need - xBC.shape[1]
+    if pad > 0:
+        xBC = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    return xBC.astype(jnp.dtype(cfg.activation_dtype))
+
+
+def ssm_decode_step(p, x, cache, cfg: ModelConfig):
+    """x (B,1,d) single-token step with carried (state, conv) cache."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xBC_new, dtraw = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([cache["conv"],
+                              xBC_new.astype(cache["conv"].dtype)], axis=1)
+    xBC = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xs = xBC[..., :d_in].reshape(B_, nh, s.head_dim)
+    Bmat = xBC[..., d_in:d_in + s.d_state]
+    Cmat = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dtraw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                        # (B,nh)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", (xs * dt[..., None].astype(xs.dtype)).astype(jnp.float32),
+        Bmat.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state.astype(Cmat.dtype), Cmat)
+    y = y + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B_, 1, d_in)
+    out = _gated_out(p, y, z, cfg)
+    return out, {"state": state, "conv": window[:, 1:]}

@@ -1,0 +1,174 @@
+"""Serving runtime — the paper's §IV custom service binary, TPU-native:
+
+- request queue + continuous batcher (the Glow runtime's multi-request
+  queue/overlap, §IV-C): slots decode at independent positions, freed slots
+  are refilled immediately
+- slot-based KV-cache manager over one statically-shaped cache
+- shape-bucketed prefill executables for variable-length prompts (T5)
+- greedy decode loop with async dispatch
+
+The DLRM two-stage pipelined engine (T2) lives in dlrm_engine.py.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bucketing import pick_bucket
+from repro.models import model as model_mod
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                 # prompt token ids (L,)
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+    enqueue_t: float = 0.0
+    finish_t: float = 0.0
+    done: bool = False
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.finish_t - self.enqueue_t) * 1e3
+
+
+@dataclass
+class EngineStats:
+    served: int = 0
+    steps: int = 0
+    prefills: int = 0
+    compile_count: int = 0
+    total_tokens: int = 0
+    wall_start: float = field(default_factory=time.perf_counter)
+
+    def qps(self) -> float:
+        return self.served / max(time.perf_counter() - self.wall_start, 1e-9)
+
+
+def _write_slot(dst_tree, src_tree, slot: int):
+    """Write a single-sequence cache (batch size 1) into batch slot ``slot``.
+    The batch axis is wherever dst and src shapes differ."""
+    def upd(dst, src):
+        diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
+                if a != b]
+        if not diff:
+            return src.astype(dst.dtype)       # batch==1 engine
+        ax = diff[0]
+        start = [0] * dst.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                            tuple(start))
+    return jax.tree.map(upd, dst_tree, src_tree)
+
+
+class InferenceEngine:
+    """Greedy-decoding LM server with bucketed prefill and continuous
+    slot-batched decode (per-slot positions)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 256,
+                 prefill_buckets: Sequence[int] = (32, 64, 128)):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_slots = batch_slots
+        self.buckets = tuple(b for b in prefill_buckets if b <= max_len)
+        self.stats = EngineStats()
+        self.queue: collections.deque = collections.deque()
+        self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
+        self.active: Dict[int, Request] = {}
+        self.pos = np.zeros(batch_slots, np.int32)
+        self.free = list(range(batch_slots))
+        self._prefill_cache: Dict[int, Callable] = {}
+        self._decode_fn = jax.jit(self._decode_step)
+        self._write_fn = jax.jit(_write_slot, static_argnums=(2,))
+
+    # ---- compiled stages -------------------------------------------------
+    def _build_prefill(self, bucket: int):
+        cfg, max_len = self.cfg, self.max_len
+
+        def fn(params, tokens, length):
+            valid = jnp.arange(bucket)[None, :] < length[:, None]
+            caches = model_mod.init_caches(cfg, tokens.shape[0], max_len)
+            x, caches, _ = model_mod.forward(
+                params, cfg, {"tokens": tokens}, mode="prefill",
+                caches=caches, kv_valid=valid)
+            last = x[jnp.arange(x.shape[0]), length - 1]
+            nxt = model_mod.greedy_next(params, cfg, last)
+            return nxt, caches
+
+        return jax.jit(fn)
+
+    def _get_prefill(self, length: int):
+        b = pick_bucket(length, self.buckets)
+        if b not in self._prefill_cache:
+            self._prefill_cache[b] = self._build_prefill(b)
+            self.stats.compile_count += 1
+        return b, self._prefill_cache[b]
+
+    def _decode_step(self, params, caches, tokens, pos_vec):
+        hidden, caches = model_mod.decode_step(params, self.cfg, tokens,
+                                               caches, pos_vec)
+        nxt = model_mod.greedy_next(params, self.cfg, hidden)
+        return nxt, caches
+
+    # ---- main loop ---------------------------------------------------------
+    def submit(self, req: Request):
+        req.enqueue_t = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.pop()
+            L = min(len(req.tokens), self.max_len - req.max_new_tokens - 1)
+            b, fn = self._get_prefill(L)
+            toks = np.zeros((1, b), np.int32)
+            toks[0, :min(L, b)] = req.tokens[:min(L, b)]
+            nxt, caches = fn(self.params, jnp.asarray(toks),
+                             jnp.asarray([min(L, b)], jnp.int32))
+            self.caches = self._write_fn(self.caches, caches, slot)
+            req.output.append(int(np.asarray(nxt)[0]))
+            self.active[slot] = req
+            self.pos[slot] = min(L, b)
+            self.stats.prefills += 1
+
+    def _step(self):
+        if not self.active:
+            return
+        toks = np.zeros((self.batch_slots, 1), np.int32)
+        for s, req in self.active.items():
+            toks[s, 0] = req.output[-1]
+        nxt, self.caches = self._decode_fn(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(nxt)
+        self.stats.steps += 1
+        for s in list(self.active):
+            req = self.active[s]
+            self.pos[s] += 1
+            req.output.append(int(nxt[s]))
+            self.stats.total_tokens += 1
+            if len(req.output) >= req.max_new_tokens \
+                    or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                req.finish_t = time.perf_counter()
+                self.stats.served += 1
+                del self.active[s]
+                self.free.append(s)
+
+    def run(self, requests: Sequence[Request]) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        while self.queue or self.active:
+            self._admit()
+            self._step()
+        return list(requests)

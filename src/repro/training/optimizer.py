@@ -1,0 +1,123 @@
+"""Optimizers: Adam (fp32 moments, ZeRO-style — states inherit the param
+sharding, so FSDP rules shard them over `data`) and Adafactor (factored
+second moment, for >=100B models where fp32 Adam state cannot fit HBM)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adam"              # adam | adafactor
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    # adafactor
+    decay: float = 0.8
+    min_dim_factored: int = 128
+
+
+def select_for(param_count: int) -> OptConfig:
+    """Paper-scale pragmatism: factored states above ~40B params."""
+    if param_count > 40e9:
+        return OptConfig(name="adafactor", lr=1e-3)
+    return OptConfig(name="adam", lr=1e-3)
+
+
+# --------------------------------------------------------------------------
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.name == "adam":
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+    if cfg.name == "adafactor":
+        def factored(p):
+            if p.ndim >= 2 and p.shape[-1] >= cfg.min_dim_factored \
+                    and p.shape[-2] >= cfg.min_dim_factored:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(factored, params,
+                                  is_leaf=lambda x: hasattr(x, "shape"))}
+    raise ValueError(cfg.name)
+
+
+def _global_norm(tree):
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    step = state["step"] + 1
+
+    if cfg.name == "adam":
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            u = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+            if cfg.weight_decay:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), mu, nu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_nu = jax.tree.leaves(state["nu"])
+        out = [upd(*t) for t in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_state = {"step": step,
+                     "mu": jax.tree.unflatten(tdef, [o[1] for o in out]),
+                     "nu": jax.tree.unflatten(tdef, [o[2] for o in out])}
+        return new_p, new_state, {"grad_norm": gnorm}
+
+    # adafactor (simplified: no momentum, relative step off, factored v)
+    d = 1.0 - cfg.decay * 0.0
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+
+    def upd(p, g, v):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            newv = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            newv = {"v": vhat}
+        u = g / jnp.sqrt(vhat + cfg.eps)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        return (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype), newv
+
+    is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_v)[0]
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_p, {"step": step, "v": new_v}, {"grad_norm": gnorm}

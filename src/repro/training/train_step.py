@@ -1,0 +1,80 @@
+"""Training step: microbatched grad accumulation (scan), remat-over-layers,
+optimizer update. The returned step fn is pure (params, opt_state, batch) ->
+(params, opt_state, metrics) and jit/lower-friendly for the dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_mod
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+def choose_microbatches(cfg: ModelConfig, global_batch: int, seq: int,
+                        n_data_shards: int, act_budget_bytes: float = 4e9) -> int:
+    """Pick grad-accum steps so per-microbatch boundary activations fit.
+
+    Scan-over-layers keeps one (micro_b, S, d) activation per layer alive for
+    the backward pass; budget that at ~4GB/device."""
+    per_dev = max(global_batch // max(n_data_shards, 1), 1)
+    bytes_per_sample = cfg.num_layers * seq * cfg.d_model * 2
+    micro = max(int(act_budget_bytes // max(bytes_per_sample, 1)), 1)
+    micro = min(micro, per_dev)
+    # accumulation steps must divide the per-device batch
+    accum = per_dev // micro
+    while per_dev % accum:
+        accum += 1
+    return accum
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *,
+                    accum_steps: int = 1, remat: bool = True) -> Callable:
+    """batch: {'tokens' (B,S), 'labels' (B,S)[, 'embeds'/'enc_embeds']}."""
+
+    def loss_for(params, mb):
+        loss, parts = model_mod.loss_fn(params, cfg, mb, remat=remat)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, parts), grads = grad_fn(params, batch)
+        else:
+            def split(k, x):
+                ax = 1 if (k == "positions" and x.ndim == 3
+                           and x.shape[0] == 3) else 0   # M-RoPE (3,B,S)
+                x = jnp.moveaxis(x, ax, 0)
+                x = x.reshape((accum_steps, x.shape[0] // accum_steps)
+                              + x.shape[1:])
+                return jnp.moveaxis(x, 1, ax + 1)
+            micro = {k: split(k, v) for k, v in batch.items()}
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss), _ = jax.lax.scan(accum, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            parts = {}
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        metrics = dict(metrics, loss=loss, **{k: v for k, v in parts.items()})
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key):
+    params = model_mod.init_params(cfg, key)
+    return params, init_opt_state(params, opt_cfg)

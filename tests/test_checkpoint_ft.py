@@ -1,0 +1,120 @@
+"""Checkpoint round-trip / atomic commit / retention + fault-tolerance:
+simulated failure restart, elastic replan, straggler mitigation."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, HedgePolicy,
+                                           HostFailure, StepDeadline,
+                                           TrainSupervisor, plan_elastic_mesh,
+                                           simulate_hedged_latency)
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {"w": {"a": jax.random.normal(ks[0], (8, 16)) * scale,
+                  "b": jax.random.normal(ks[1], (4,)) * scale},
+            "opt": [jnp.zeros((8, 16)), jnp.int32(7)]}
+
+
+def test_roundtrip(tmp_path, key):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree(key)
+    mgr.save(10, t)
+    t2 = mgr.restore(10, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_retention(tmp_path, key):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(key, scale=s), blocking=False)
+    mgr.wait()
+    mgr._gc()
+    assert mgr.all_steps() == [3, 4]
+    t = mgr.restore(4, _tree(key))
+    assert np.isfinite(np.asarray(t["w"]["a"])).all()
+
+
+def test_tmp_dirs_are_not_checkpoints(tmp_path, key):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    os.makedirs(tmp_path / "step_00000099.tmp")       # crashed mid-write
+    mgr.save(5, _tree(key))
+    assert mgr.all_steps() == [5]
+    assert mgr.latest_step() == 5
+
+
+def test_heartbeat_detector():
+    clock = [0.0]
+    mon = HeartbeatMonitor(4, timeout_s=10.0, clock=lambda: clock[0])
+    clock[0] = 5.0
+    for h in (0, 1, 2):
+        mon.beat(h)
+    clock[0] = 12.0
+    assert mon.failed_hosts() == [3]
+    assert mon.healthy_count() == 3
+
+
+def test_elastic_plan_shrinks_to_power_of_two():
+    p = plan_elastic_mesh(data=16, model=16, hosts_per_group=2,
+                          failed=[5, 11, 12])
+    assert p.new_model == 16
+    assert p.new_data == 8            # 13 surviving -> 8
+    assert p.changed
+    p2 = plan_elastic_mesh(16, 16, 2, failed=[])
+    assert not p2.changed
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path, key):
+    """Simulated host failure at a known step; training resumes from the
+    last checkpoint and completes all steps exactly once post-restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"params": jnp.zeros((4,)), "done": set()}
+    failures = {17}
+
+    def run_step(step):
+        if step in failures:
+            failures.discard(step)
+            raise HostFailure(f"host 3 died at step {step}")
+        state["params"] = state["params"] + 1.0
+        state["done"].add(step)
+
+    def save(step):
+        mgr.save(step, {"params": state["params"]})
+
+    def restore():
+        s = mgr.latest_step() or 0
+        if s:
+            state["params"] = mgr.restore(
+                s, {"params": state["params"]})["params"]
+        return s
+
+    sup = TrainSupervisor(run_step, save, restore, ckpt_every=5)
+    final = sup.run(30)
+    assert final == 30
+    assert sup.restarts == 1
+    # params incremented once per completed step after the last restore
+    assert float(state["params"][0]) >= 30 - 5
+
+
+def test_hedging_cuts_tail_latency(rng):
+    lat = rng.lognormal(0.0, 0.6, 512)
+    lat[::50] = 30.0                                  # stragglers
+    pol = HedgePolicy()
+    for l in lat[:256]:
+        pol.observe(float(min(l, 5.0)))
+    deadline = pol.hedge_deadline()
+    hedged = simulate_hedged_latency(lat.tolist(), deadline)
+    p99 = lambda xs: sorted(xs)[int(len(xs) * 0.99)]
+    assert p99(hedged) < p99(lat.tolist())
+
+
+def test_step_deadline_flags_straggler():
+    wd = StepDeadline(k=3.0)
+    flagged = [wd.observe(t) for t in [1.0] * 10 + [10.0]]
+    assert flagged[-1] and not any(flagged[:-1])

@@ -1,0 +1,183 @@
+"""core/ package tests: partitioner (T1/T8), bucketing (T5), transfers (T6),
+host split (T7), pipeline (T2), metrics, numerics harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bucketing as B
+from repro.core import host_split as HS
+from repro.core import metrics as MET
+from repro.core import partitioner as PT
+from repro.core import transfer as TR
+from repro.core.numerics import GoldenSet
+from repro.core.pipeline import TwoStagePipeline, steady_state_speedup
+
+
+# ---- partitioner ---------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 48), shards=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 10**6))
+def test_partition_assigns_every_table_once(n, shards, seed):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(100, 10000, n).tolist()
+    looks = rng.integers(1, 64, n).tolist()
+    asn = PT.partition_tables(rows, shards, looks)
+    assert sorted(t for ts in asn.tables_of_shard for t in ts) == list(range(n))
+    # every table's rows fit inside its shard's slab range
+    for t in range(n):
+        s = asn.shard_of_table[t]
+        lo, hi = s * asn.rows_per_shard, (s + 1) * asn.rows_per_shard
+        assert lo <= asn.table_offset[t]
+        assert asn.table_offset[t] + rows[t] <= hi
+
+
+def test_length_aware_beats_naive_on_skew():
+    """Paper §VI-B: 15-34% SLS latency reduction with length info. Skewed
+    workload: big tables with few lookups, small hot tables."""
+    rng = np.random.default_rng(7)
+    rows = [10_000_000] * 8 + [10_000] * 24
+    looks = [1] * 8 + list(rng.integers(40, 80, 24))
+    rep = PT.balance_report(rows, looks, num_shards=6)
+    assert rep["latency_reduction"] > 0.15, rep
+    assert rep["aware_imbalance"] < rep["naive_imbalance"]
+
+
+def test_allocate_cores_matches_paper_ratio():
+    """With sparse ~= half of dense cost, ~1/3 of cores go to SLS (paper)."""
+    cs, t = PT.allocate_cores(sparse_cost=1.0, dense_cost=2.0, num_cores=12)
+    assert cs == 4
+    assert t == pytest.approx(0.25)
+
+
+# ---- bucketing -----------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(l=st.integers(1, 600))
+def test_pick_bucket_covers(l):
+    b = B.pick_bucket(l, B.DEFAULT_BUCKETS)
+    if l <= max(B.DEFAULT_BUCKETS):
+        assert b >= l
+        smaller = [x for x in B.DEFAULT_BUCKETS if x >= l]
+        assert b == min(smaller)
+    else:
+        assert b == max(B.DEFAULT_BUCKETS)
+
+
+def test_bucketed_executable_compiles_once_per_bucket():
+    calls = []
+
+    def build(bucket):
+        calls.append(bucket)
+        return lambda toks, mask: toks.shape
+    ex = B.BucketedExecutable(build, buckets=(8, 16, 32))
+    seqs = [np.arange(5), np.arange(7)]
+    assert ex(seqs) == (2, 8)
+    assert ex([np.arange(6)]) == (1, 8)
+    assert ex([np.arange(20)]) == (1, 32)
+    assert calls == [8, 32]
+    assert ex.compile_count == 2
+
+
+def test_length_sorted_batching_cuts_waste():
+    rng = np.random.default_rng(0)
+    lengths = rng.lognormal(3.2, 0.8, 512).astype(int).clip(4, 512).tolist()
+    naive = B.wasted_compute_fraction(lengths, B.DEFAULT_BUCKETS)
+    batches = B.length_sorted_batches(lengths, 16)
+    sorted_waste = np.mean([
+        B.wasted_compute_fraction([max(lengths[i] for i in b)] * len(b),
+                                  B.DEFAULT_BUCKETS)
+        - (1 - np.mean([lengths[i] for i in b])
+           / max(lengths[i] for i in b)) * 0
+        for b in batches])
+    # grouping similar lengths shouldn't increase padding waste
+    assert sorted_waste <= naive + 0.25
+
+
+# ---- transfers -----------------------------------------------------------
+
+def test_partial_transfer_roundtrip(rng):
+    bags = [[[int(x) for x in rng.integers(0, 100, rng.integers(0, 5))]
+             for _ in range(6)] for _ in range(4)]
+    sb = TR.pack_sparse_inputs(bags, num_tables=6, max_lookups=8)
+    stats = TR.TransferStats()
+    idx, lens = TR.command_batched_transfer(sb, stats)
+    np.testing.assert_array_equal(np.asarray(idx), sb.indices)
+    np.testing.assert_array_equal(np.asarray(lens), sb.lengths)
+    assert stats.bytes_partial < stats.bytes_full
+    assert stats.num_transfers_batched < stats.num_transfers_naive
+
+
+def test_partial_transfer_saves_most_bytes_when_sparse(rng):
+    bags = [[[1] for _ in range(16)] for _ in range(8)]   # 1 of 64 slots used
+    sb = TR.pack_sparse_inputs(bags, num_tables=16, max_lookups=64)
+    stats = TR.TransferStats()
+    TR.command_batched_transfer(sb, stats)
+    assert stats.bytes_saved_frac > 0.9
+
+
+# ---- host split ----------------------------------------------------------
+
+def test_split_keeps_unsupported_on_host():
+    ops = [HS.OpSpec("tokenize", 1e3, 100, 400, supported_on_device=False),
+           HS.OpSpec("embed", 1e9, 400, 4000),
+           HS.OpSpec("transformer", 1e12, 4000, 4000)]
+    dec = HS.split_net(ops)
+    assert "tokenize" in dec.host_ops
+    assert "transformer" in dec.device_ops
+
+
+def test_broadcast_policy_prefers_concat_single_broadcast():
+    res = HS.broadcast_placement(num_tables=100, row_bytes=256, batch=64)
+    assert res["concat_then_single_broadcast"] < res["host_broadcast"]
+    assert res["concat_then_single_broadcast"] \
+        <= res["device_broadcast_per_table"]
+
+
+# ---- pipeline ------------------------------------------------------------
+
+def test_pipeline_preserves_outputs():
+    sparse = jax.jit(lambda x: x * 2.0)
+    dense = jax.jit(lambda s, x: s + 1.0)
+    pipe = TwoStagePipeline(lambda r: sparse(r), lambda s, r: dense(s, r))
+    reqs = [jnp.full((4,), float(i)) for i in range(7)]
+    outs, _ = pipe.run(reqs)
+    outs_seq, _ = pipe.run_sequential(reqs)
+    for a, b in zip(outs, outs_seq):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_steady_state_speedup_bounds():
+    assert steady_state_speedup(1.0, 1.0) == pytest.approx(2.0)
+    assert steady_state_speedup(1.0, 3.0) == pytest.approx(4.0 / 3.0)
+
+
+# ---- metrics -------------------------------------------------------------
+
+def test_ne_perfect_predictor_lower_than_base(rng):
+    y = jnp.asarray(rng.integers(0, 2, 4096), jnp.float32)
+    perfect = (y * 2 - 1) * 8.0
+    ne = float(MET.normalized_entropy(perfect, y))
+    assert ne < 0.1
+    chance = jnp.zeros_like(y)
+    assert float(MET.normalized_entropy(chance, y)) == pytest.approx(
+        1.0, rel=0.05)
+
+
+def test_cosine_similarity_self_is_one(key):
+    a = jax.random.normal(key, (8, 64))
+    assert float(MET.cosine_similarity(a, a)) == pytest.approx(1.0, abs=1e-5)
+
+
+# ---- numerics golden sets --------------------------------------------------
+
+def test_golden_set_detects_regression(key):
+    f = lambda x: x * 2.0
+    g = GoldenSet.record(f, (jnp.arange(8.0),))
+    ok, _ = g.check(f)
+    assert ok
+    ok, maxdiff = g.check(lambda x: x * 2.0 + 1e-2)
+    assert not ok and maxdiff > 1e-3

@@ -1,0 +1,77 @@
+"""DLRM (paper centerpiece): SLS correctness, quantized tables, NE metric
+sensitivity, serving engine pipeline equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import dlrm_paper
+from repro.core.metrics import ne_delta
+from repro.data.synthetic import dlrm_batches
+from repro.models import dlrm as D
+from repro.serving.dlrm_engine import DLRMEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_BASE)
+    asn = D.make_assignment(cfg, 4)
+    key = jax.random.PRNGKey(0)
+    params = D.init_dlrm(cfg, asn, key)
+    batch = next(dlrm_batches(cfg, 32, seed=3))
+    b = {k: jnp.asarray(v) for k, v in batch.items()}
+    return cfg, asn, params, b
+
+
+def test_sls_masked_pooling(setup):
+    cfg, asn, params, b = setup
+    pooled = D.sls_forward(params, cfg, asn, b["indices"], b["lengths"])
+    assert pooled.shape == (32, cfg.num_tables, cfg.embed_dim)
+    # zero-length bags pool to zero
+    lens0 = jnp.zeros_like(b["lengths"])
+    p0 = D.sls_forward(params, cfg, asn, b["indices"], lens0)
+    assert bool((p0 == 0).all())
+
+
+def test_quantized_sls_close(setup, key):
+    cfg, asn, params, b = setup
+    pq = D.init_dlrm(cfg, asn, key, quantize=True)
+    ref = D.init_dlrm(cfg, asn, key, quantize=False)
+    a = D.sls_forward(ref, cfg, asn, b["indices"], b["lengths"])
+    q = D.sls_forward(pq, cfg, asn, b["indices"], b["lengths"])
+    rel = float(jnp.abs(a - q).max() / (jnp.abs(a).max() + 1e-9))
+    assert rel < 0.02
+
+
+def test_dlrm_loss_and_logits(setup):
+    cfg, asn, params, b = setup
+    loss, logits = D.dlrm_loss(params, cfg, asn, b)
+    assert np.isfinite(float(loss))
+    assert logits.shape == (32,)
+
+
+def test_ne_delta_small_for_int8(setup, key):
+    cfg, asn, params, b = setup
+    pq = {**params}
+    pq.pop("slab", None)
+    full = D.init_dlrm(cfg, asn, key, quantize=False)
+    quant = {**full}
+    from repro.core.quantization import quantize_rows
+    quant["slab_q"] = quantize_rows(full["slab"], 8)
+    del quant["slab"]
+    lr = D.dlrm_forward(full, cfg, asn, b["dense"], b["indices"], b["lengths"])
+    lq = D.dlrm_forward(quant, cfg, asn, b["dense"], b["indices"], b["lengths"])
+    d = abs(ne_delta(lq, lr, b["labels"]))
+    assert d < 0.02          # smoke-scale bound; paper budget 5e-4 at scale
+
+
+def test_engine_pipelined_matches_sequential(setup):
+    cfg, asn, params, _ = setup
+    eng = DLRMEngine(cfg, asn, params)
+    batches = [next(dlrm_batches(cfg, 8, seed=s)) for s in range(5)]
+    outs_p, _ = eng.serve(batches, pipelined=True)
+    outs_s, _ = eng.serve(batches, pipelined=False)
+    for a, b_ in zip(outs_p, outs_s):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-6, atol=1e-6)
+    assert eng.transfer_stats.bytes_saved_frac > 0.0

@@ -1,0 +1,30 @@
+"""Keep the examples runnable: each public script must exit 0 (smoke-size).
+quickstart covers model+engine+numerics; quantization_workflow covers the
+SecV-B loop; the serving/training drivers are exercised with tiny knobs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, script), *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=timeout)
+
+
+@pytest.mark.parametrize("script,args", [
+    ("examples/quickstart.py", ()),
+    ("examples/quantization_workflow.py", ()),
+    ("examples/serve_recsys.py", ("--batches", "4")),
+])
+def test_example_runs(script, args):
+    r = _run(script, *args)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.strip(), script

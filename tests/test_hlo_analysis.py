@@ -1,0 +1,145 @@
+"""Regression tests for the roofline HLO analyzer — each case encodes a
+fidelity rule found during the perf hillclimb (EXPERIMENTS.md SecPerf M1-M3).
+"""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (HloSummary, analyze, parse_hlo,
+                                       roofline_terms)
+
+
+def _module(body: str) -> str:
+    return f"HloModule test\n\n{body}\n"
+
+
+def test_dot_flops_exact():
+    text = _module("""
+ENTRY %main (a: f32[64,128], b: f32[128,32]) -> f32[64,32] {
+  %a = f32[64,128]{1,0} parameter(0)
+  %b = f32[128,32]{1,0} parameter(1)
+  ROOT %d = f32[64,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+""")
+    s = analyze(text)
+    assert s.dot_flops == 2 * 64 * 128 * 32
+    # dot reads both operands + writes result
+    expect = (64 * 128 + 128 * 32 + 64 * 32) * 4
+    assert s.hbm_bytes == expect
+    assert s.hbm_bytes_raw == expect
+
+
+def test_while_trip_count_multiplies():
+    text = _module("""
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %y = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[64,64]{1,0}) tuple(%ni, %y)
+}
+
+%cond (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[64,64]) -> (s32[], f32[64,64]) {
+  %x = f32[64,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[64,64]{1,0}) tuple(%zero, %x)
+  ROOT %w = (s32[], f32[64,64]{1,0}) while(%init), condition=%cond, body=%body
+}
+""")
+    s = analyze(text)
+    assert s.trip_counts == [10]
+    assert s.dot_flops == 10 * 2 * 64 * 64 * 64
+
+
+def test_elementwise_chain_fuses_to_one_pass():
+    """M1: a chain of elementwise ops costs one read + one write, not N."""
+    text = _module("""
+ENTRY %main (a: f32[1024,1024]) -> f32[1024,1024] {
+  %a = f32[1024,1024]{1,0} parameter(0)
+  %b = f32[1024,1024]{1,0} negate(%a)
+  %c = f32[1024,1024]{1,0} exponential(%b)
+  %d = f32[1024,1024]{1,0} tanh(%c)
+  ROOT %e = f32[1024,1024]{1,0} multiply(%d, %d)
+}
+""")
+    s = analyze(text)
+    one = 1024 * 1024 * 4
+    assert s.hbm_bytes == 2 * one          # read a, write e
+    assert s.hbm_bytes_raw > 4 * one       # per-instruction counts each hop
+
+
+def test_gte_reads_component_not_carry():
+    """M1 bug fix: a get-tuple-element read charges the component size."""
+    text = _module("""
+ENTRY %main (p: (f32[4096,4096], f32[8])) -> f32[8] {
+  %p = (f32[4096,4096]{1,0}, f32[8]{0}) parameter(0)
+  %small = f32[8]{0} get-tuple-element(%p), index=1
+  ROOT %y = f32[8]{0} negate(%small)
+}
+""")
+    s = analyze(text)
+    assert s.hbm_bytes == 2 * 8 * 4        # read small + write y, NOT 64MB
+
+
+def test_reduce_joins_producer_cluster():
+    """M3: exp feeding a reduce never round-trips HBM."""
+    text = _module("""
+ENTRY %main (a: f32[256,4096]) -> f32[256] {
+  %a = f32[256,4096]{1,0} parameter(0)
+  %e = f32[256,4096]{1,0} exponential(%a)
+  %zero = f32[] constant(0)
+  ROOT %r = f32[256]{0} reduce(%e, %zero), dimensions={1}, to_apply=%add
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+""")
+    s = analyze(text)
+    assert s.hbm_bytes == 256 * 4096 * 4 + 256 * 4   # one pass + tiny out
+
+
+def test_collective_ring_bytes():
+    text = _module("""
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%a), replica_groups=[16,16]<=[256], to_apply=%add
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+""")
+    s = analyze(text)
+    payload = 1024 * 4
+    assert s.collective_bytes["all-reduce"] == pytest.approx(
+        2 * payload * 15 / 16)
+    t = roofline_terms(s)
+    assert t["collective_s"] == pytest.approx(2 * payload * 15 / 16 / 50e9)
+
+
+def test_fused_never_exceeds_raw_on_real_dumps():
+    """Invariant over the real dry-run artifacts: the fusion model never
+    charges more than the per-instruction model."""
+    import glob
+    import gzip
+    files = sorted(glob.glob("results/hlo/*.hlo.gz"))[:6]
+    if not files:
+        pytest.skip("no dry-run HLO dumps present")
+    for fn in files:
+        with gzip.open(fn, "rt") as f:
+            s = analyze(f.read())
+        assert s.hbm_bytes <= s.hbm_bytes_raw * 1.01, fn
+        assert s.dot_flops > 0, fn

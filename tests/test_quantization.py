@@ -1,0 +1,106 @@
+"""Quantization (paper §V): property-based guarantees + workflow behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantization import (dequantize_rows, dequantize_rows_int4,
+                                     dequantize_rows_int8,
+                                     quantization_workflow, quantize_act_int8,
+                                     quantize_rows, quantize_rows_int4,
+                                     quantize_rows_int8, quantize_weight_int8,
+                                     w8a8_matmul_ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 32), cols=st.sampled_from([2, 8, 16, 64]),
+       seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+def test_int8_rowwise_error_bound(rows, cols, seed, scale):
+    """Round-trip error <= half a quantization step per element."""
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.normal(size=(rows, cols)) * scale, jnp.float32)
+    qt = quantize_rows_int8(t)
+    deq = dequantize_rows_int8(qt)
+    step = (t.max(axis=1) - t.min(axis=1)) / 255.0
+    err = jnp.abs(deq - t).max(axis=1)
+    # fp16 storage: scale err <= step*2^-11 (+ subnormal ulp 2^-25 when the
+    # step is below fp16's min normal — found by hypothesis), bias err
+    # <= |min|*2^-11
+    slack = (255 * (step * 2.0 ** -11 + 2.0 ** -25)
+             + jnp.abs(t.min(axis=1)) * 2.0 ** -10)
+    assert bool(jnp.all(err <= step * 0.5 + slack + 1e-6)), \
+        (np.asarray(err), np.asarray(step))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 32), cols=st.sampled_from([2, 8, 64]),
+       seed=st.integers(0, 2**31 - 1))
+def test_int4_rowwise_error_bound(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    qt = quantize_rows_int4(t)
+    deq = dequantize_rows_int4(qt)
+    step = (t.max(axis=1) - t.min(axis=1)) / 15.0
+    err = jnp.abs(deq - t).max(axis=1)
+    slack = (15 * (step * 2.0 ** -11 + 2.0 ** -25)
+             + jnp.abs(t.min(axis=1)) * 2.0 ** -10)
+    assert bool(jnp.all(err <= step * 0.5 + slack + 1e-6))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(4, 64),
+       k=st.sampled_from([8, 32]))
+def test_w8a8_quant_matmul_close_to_fp32(seed, n, k):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.1, jnp.float32)
+    wq, wsc = quantize_weight_int8(w)
+    xq, xsc = quantize_act_int8(x)
+    got = w8a8_matmul_ref(xq, wq, xsc, wsc)
+    want = x @ w
+    # int8 x int8 with per-channel scales: ~1% relative error at these sizes
+    denom = np.maximum(np.abs(np.asarray(want)), 1.0)
+    assert (np.abs(np.asarray(got - want)) / denom).max() < 0.05
+
+
+def test_int4_packing_roundtrip(key):
+    t = jax.random.normal(key, (16, 8))
+    qt = quantize_rows(t, 4)
+    assert qt["q4"].shape == (16, 4)
+    d = dequantize_rows(qt)
+    assert d.shape == t.shape
+
+
+def test_workflow_falls_back_worst_layer_first(key):
+    """The paper's loop: highest-error layer -> fp16 until budget met."""
+    ks = jax.random.split(key, 3)
+    layers = {
+        "fc_good": jax.random.normal(ks[0], (32, 32)) * 0.01,
+        "fc_outlier": jax.random.normal(ks[1], (32, 32)).at[0, 0].set(100.0),
+        "fc_mid": jax.random.normal(ks[2], (32, 32)),
+    }
+
+    def eval_metric(schemes):
+        # synthetic: outlier layer in int8 costs 1e-3 NE, others 1e-5
+        delta = 0.0
+        for n, s in schemes.items():
+            if s == "int8":
+                delta += 1e-3 if n == "fc_outlier" else 1e-5
+        return delta
+
+    res = quantization_workflow(layers, eval_metric, budget=5e-4)
+    assert res.passed
+    schemes = {d.name: d.scheme for d in res.decisions}
+    assert schemes["fc_outlier"] == "fp16"      # worst error fell back first
+    assert schemes["fc_good"] == "int8"
+    assert res.iterations == 1
+
+
+def test_workflow_gives_up_gracefully(key):
+    layers = {"a": jax.random.normal(key, (8, 8))}
+    res = quantization_workflow(layers, lambda s: 1.0, budget=1e-4,
+                                max_iters=3)
+    assert not res.passed
+    assert res.iterations <= 3
