@@ -1,0 +1,17 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test smoke bench ci
+
+test:
+	python -m pytest -x -q
+
+smoke:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 6 --new-tokens 4 --slots 2
+	python -m repro.launch.serve --arch dlrm --smoke --requests 6
+
+bench:
+	python -m benchmarks.run --only serving
+
+ci: test smoke bench

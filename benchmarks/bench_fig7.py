@@ -83,7 +83,7 @@ def _measured_rows() -> List[Row]:
     params = dlrm_mod.init_dlrm(cfg, asn, jax.random.PRNGKey(0))
     eng = DLRMEngine(cfg, asn, params)
     batches = [next(dlrm_batches(cfg, 32, seed=s)) for s in range(8)]
-    _, warm = eng.serve(batches, pipelined=True)           # compile
+    _, warm = eng.serve(batches, pipelined=True, warm=True)    # compile
     _, piped = eng.serve(batches, pipelined=True)
     _, seq = eng.serve(batches, pipelined=False)
     return [Row(

@@ -1,0 +1,77 @@
+"""Unified serving-runtime benchmark: both engines on the shared
+scheduler/executor/pipeline stack, reporting QPS and tail latency from the
+shared Telemetry. Also emits ``results/BENCH_serving.json`` so CI can
+track serving regressions numerically (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+
+JSON_PATH = os.path.join("results", "BENCH_serving.json")
+
+
+def _lm_summary():
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, batch_slots=4, max_len=64,
+                          prefill_buckets=(8, 16, 32), policy="edf",
+                          slo_ms=60_000.0)
+    def trace():
+        r = np.random.default_rng(3)
+        return [Request(i, r.integers(0, cfg.vocab_size, l).astype(np.int32),
+                        max_new_tokens=6)
+                for i, l in enumerate((5, 9, 17, 3, 12, 26, 7, 30))]
+
+    eng.run(trace())                    # warm: compile every bucket/stage
+    eng.telemetry.reset_serving_stats()
+    eng.run(trace())
+    return eng.telemetry.summary()
+
+
+def _dlrm_summary():
+    from repro.configs import dlrm_paper
+    from repro.data.synthetic import dlrm_batches
+    from repro.models import dlrm as D
+    from repro.serving.dlrm_engine import DLRMEngine
+    cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_COMPLEX)
+    asn = D.make_assignment(cfg, 4)
+    params = D.init_dlrm(cfg, asn, jax.random.PRNGKey(0))
+    eng = DLRMEngine(cfg, asn, params)
+    batches = [next(dlrm_batches(cfg, 32, seed=s)) for s in range(12)]
+    # full-trace warm: the T6 unpack compiles per distinct used-prefix
+    # shape (see bench_pipeline.py), so a partial warm leaks compile time
+    # into the measured pass
+    eng.serve(batches, pipelined=True, warm=True)
+    eng.telemetry.reset_serving_stats()
+    eng.serve(batches, pipelined=True)
+    out = eng.telemetry.summary()
+    out["transfer_bytes_saved_frac"] = eng.transfer_stats.bytes_saved_frac
+    return out
+
+
+def run() -> List[Row]:
+    lm = _lm_summary()
+    dlrm = _dlrm_summary()
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump({"lm": lm, "dlrm": dlrm}, f, indent=2)
+    rows = []
+    for name, s in (("lm", lm), ("dlrm", dlrm)):
+        rows.append(Row(
+            f"serving/{name}",
+            (s["latency_ms_p50"]) * 1e3,
+            f"qps={s['qps']:.1f};p95_ms={s['latency_ms_p95']:.1f};"
+            f"p99_ms={s['latency_ms_p99']:.1f};"
+            f"sla_miss_frac={s['sla_miss_frac']:.3f};"
+            f"compiles={s['compile_count']};measured=true"))
+    return rows

@@ -33,6 +33,8 @@ BENCHES = [
      "SecVI-C: partial transfers + command batching"),
     ("pipeline", "benchmarks.bench_pipeline",
      "Fig. 6: pipelined sparse/dense execution"),
+    ("serving", "benchmarks.bench_serving",
+     "SecIV-C: unified serving runtime QPS/p95 (BENCH_serving.json)"),
     ("roofline", "benchmarks.roofline", "Roofline table from the dry-run"),
 ]
 

@@ -30,7 +30,7 @@ eng.run(reqs)
 for r in reqs:
     print(f"  req {r.rid}: prompt {len(r.tokens)} toks -> {r.output}")
 print(f"served={eng.stats.served} decode_steps={eng.stats.steps} "
-      f"compiled_buckets={eng.stats.compile_count}")
+      f"compiled_buckets={eng.stats.compiles.get('prefill', 0)}")
 
 # 3. numerics: every Pallas kernel ships a pure-jnp oracle; the validation
 #    harness is the paper's vendor-kernel acceptance test as CI

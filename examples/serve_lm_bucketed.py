@@ -77,4 +77,6 @@ reqs = [Request(i, rng.integers(0, cfg.vocab_size, n).astype(np.int32),
 eng.run(reqs)
 print(f"decode engine: served {eng.stats.served} requests in "
       f"{eng.stats.steps} decode steps with {eng.stats.prefills} bucketed "
-      f"prefills ({eng.stats.compile_count} compiles)")
+      f"prefills in {eng.stats.prefill_batches} batched dispatches "
+      f"({eng.stats.compiles.get('prefill', 0)} prefill compiles)")
+print(eng.telemetry.report())

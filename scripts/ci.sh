@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI: test suite + serving smoke runs + serving benchmark JSON.
+# The actual command lines live in the Makefile (single source).
+#
+#   scripts/ci.sh          # tests + smoke
+#   scripts/ci.sh --bench  # also emit results/BENCH_serving.json
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 pytest =="
+make test
+
+echo "== serving smoke: LM (deepseek-7b) + DLRM =="
+make smoke
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== serving benchmark (results/BENCH_serving.json) =="
+    make bench
+fi
+
+echo "CI OK"

@@ -1,0 +1,43 @@
+"""Version shims for jax APIs that moved between releases.
+
+The container pins one jax; CI elsewhere may run another. Import from
+here instead of reaching into jax internals at call sites.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                    # jax >= 0.5
+    _shard_map = jax.shard_map
+except AttributeError:                  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+try:
+    _SM_PARAMS = set(inspect.signature(_shard_map).parameters)
+except (TypeError, ValueError):
+    _SM_PARAMS = None
+
+
+def shard_map(*args, **kw):
+    # the check_rep -> check_vma rename did not land in the same release
+    # as the top-level promotion, so translate by signature, not by branch
+    if "check_vma" in kw and _SM_PARAMS is not None \
+            and "check_vma" not in _SM_PARAMS and "check_rep" in _SM_PARAMS:
+        kw = dict(kw)
+        kw["check_rep"] = kw.pop("check_vma")
+    return _shard_map(*args, **kw)
+
+try:                                    # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:                     # older jax: no axis_types kwarg
+    _AxisType = None
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with AxisType.Auto where the installed jax has it."""
+    if _AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(_AxisType.Auto,) * len(axes))

@@ -1,93 +1,157 @@
-"""Paper T2 (Fig. 6 right): pipelined execution of the partitioned net.
+"""Paper T2 (Fig. 6 right), generalized: N-stage pipelined execution.
 
-The recommendation net is split into a *sparse* partition (SLS lookups,
-model-parallel across shards) and a *dense* partition (MLPs+interaction,
-data-parallel). Requests flow through a two-stage pipeline so request N's
-dense compute overlaps request N+1's sparse lookups — JAX async dispatch
-provides the overlap: both stage functions are jitted separately and the
-driver keeps one request in flight per stage.
+The seed's hard-coded sparse/dense TwoStagePipeline is now a thin alias
+over a list-of-stages driver. Each stage is ``(name, fn)`` with
+``fn(x, req) -> x``: ``x`` is the previous stage's output (``None`` for
+stage 0, which typically reads the raw request — e.g. the DLRM engine's
+host-side T6 ingest). The driver software-pipelines the request stream,
+keeping one request in flight per stage; JAX async dispatch provides the
+overlap, so device-side stage fns must be jitted (or at least return
+unrealized jax arrays). Host-side stages (ingest) overlap the *dispatch*
+of device stages the same way the Glow runtime overlaps feature ingestion
+with execution (§IV-C).
 """
 from __future__ import annotations
 
-import collections
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
+
+StageFn = Callable[[Any, Any], Any]          # (prev_out, request) -> out
 
 
 @dataclass
 class PipelineStats:
     num_requests: int = 0
     wall_time_s: float = 0.0
-    sparse_time_s: float = 0.0     # measured sequentially, for comparison
-    dense_time_s: float = 0.0
+    # per-stage times, measured sequentially under measure=True
+    stage_time_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def qps(self) -> float:
         return self.num_requests / max(self.wall_time_s, 1e-9)
 
+    # back-compat accessors for the original two-stage pipeline
+    @property
+    def sparse_time_s(self) -> float:
+        return self.stage_time_s.get("sparse", 0.0)
 
-class TwoStagePipeline:
-    """Steady-state: sparse(N+1) overlaps dense(N).
+    @property
+    def dense_time_s(self) -> float:
+        return self.stage_time_s.get("dense", 0.0)
 
-    ``sparse_fn(request) -> intermediates`` and
-    ``dense_fn(intermediates, request) -> output`` must be jitted (or at
-    least return unrealized jax arrays) for async-dispatch overlap.
+
+class Pipeline:
+    """N-stage software pipeline over a request stream.
+
+    stages: sequence of ``(name, fn)`` pairs (or bare fns, auto-named
+    ``stage0..``). In steady state request i runs stage s while request
+    i+1 runs stage s-1 — the generalization of "request N's dense
+    overlaps request N+1's sparse".
     """
 
-    def __init__(self, sparse_fn: Callable, dense_fn: Callable):
-        self.sparse_fn = sparse_fn
-        self.dense_fn = dense_fn
+    def __init__(self, stages: Sequence):
+        norm: List[Tuple[str, StageFn]] = []
+        for i, s in enumerate(stages):
+            if callable(s):
+                norm.append((f"stage{i}", s))
+            else:
+                name, fn = s
+                norm.append((str(name), fn))
+        if not norm:
+            raise ValueError("Pipeline needs at least one stage")
+        self.stages = norm
 
-    def run(self, requests: Iterable[Any],
-            measure: bool = False) -> Tuple[List[Any], PipelineStats]:
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def stage_names(self) -> List[str]:
+        return [n for n, _ in self.stages]
+
+    def run(self, requests: Iterable[Any], measure: bool = False,
+            on_result: Optional[Callable[[int, Any], None]] = None) \
+            -> Tuple[List[Any], PipelineStats]:
+        """Software-pipelined pass: at tick t, stage s runs request t-s.
+
+        Deeper stages dispatch first each tick so a request's next stage
+        is enqueued before the following request enters the pipe.
+        ``on_result(i, val)`` fires per request as its output is realized
+        (in order), so callers can stamp per-request completion times
+        instead of one timestamp for the whole pass.
+        """
         stats = PipelineStats()
-        requests = list(requests)
-        outs: List[Any] = []
+        reqs = list(requests)
+        n, S = len(reqs), len(self.stages)
+        vals: List[Any] = [None] * n
         t0 = time.perf_counter()
-        inflight: Optional[Tuple[Any, Any]] = None   # (sparse_out, request)
-        for req in requests:
-            s = self.sparse_fn(req)                  # dispatch sparse(N+1)
-            if inflight is not None:
-                prev_s, prev_req = inflight
-                outs.append(self.dense_fn(prev_s, prev_req))
-            inflight = (s, req)
-        if inflight is not None:
-            prev_s, prev_req = inflight
-            outs.append(self.dense_fn(prev_s, prev_req))
-        outs = jax.block_until_ready(outs)
+        for t in range(n + S - 1):
+            for s in range(S - 1, -1, -1):
+                i = t - s
+                if 0 <= i < n:
+                    vals[i] = self.stages[s][1](vals[i], reqs[i])
+        for i in range(n):
+            vals[i] = jax.block_until_ready(vals[i])
+            if on_result is not None:
+                on_result(i, vals[i])
         stats.wall_time_s = time.perf_counter() - t0
-        stats.num_requests = len(requests)
+        stats.num_requests = n
 
-        if measure and requests:
-            t0 = time.perf_counter()
-            for req in requests:
-                jax.block_until_ready(self.sparse_fn(req))
-            stats.sparse_time_s = time.perf_counter() - t0
-            t0 = time.perf_counter()
-            pre = [jax.block_until_ready(self.sparse_fn(r)) for r in requests]
-            t0 = time.perf_counter()
-            for s, req in zip(pre, requests):
-                jax.block_until_ready(self.dense_fn(s, req))
-            stats.dense_time_s = time.perf_counter() - t0
-        return outs, stats
+        if measure and reqs:
+            stats.stage_time_s = self.measure_stages(reqs)
+        return vals, stats
 
-    def run_sequential(self, requests: Iterable[Any]) -> Tuple[List[Any], PipelineStats]:
-        """Unpipelined baseline: block between stages."""
+    def measure_stages(self, requests: Iterable[Any]) -> Dict[str, float]:
+        """Per-stage sequential timing: feed every request through the
+        prefix of stages, timing only the stage under measurement. NOTE:
+        this re-executes every stage, including any host-side stage with
+        side effects — callers that meter stage 0 (e.g. transfer stats)
+        should disable collection around this."""
+        reqs = list(requests)
+        carries: List[Any] = [None] * len(reqs)
+        times: Dict[str, float] = {}
+        for name, fn in self.stages:
+            ts = time.perf_counter()
+            carries = [jax.block_until_ready(fn(c, r))
+                       for c, r in zip(carries, reqs)]
+            times[name] = time.perf_counter() - ts
+        return times
+
+    def run_sequential(self, requests: Iterable[Any],
+                       on_result: Optional[Callable[[int, Any], None]]
+                       = None) -> Tuple[List[Any], PipelineStats]:
+        """Unpipelined baseline: block between every stage."""
         stats = PipelineStats()
-        requests = list(requests)
+        reqs = list(requests)
         outs = []
         t0 = time.perf_counter()
-        for req in requests:
-            s = jax.block_until_ready(self.sparse_fn(req))
-            outs.append(jax.block_until_ready(self.dense_fn(s, req)))
+        for i, req in enumerate(reqs):
+            x: Any = None
+            for _, fn in self.stages:
+                x = jax.block_until_ready(fn(x, req))
+            outs.append(x)
+            if on_result is not None:
+                on_result(i, x)
         stats.wall_time_s = time.perf_counter() - t0
-        stats.num_requests = len(requests)
+        stats.num_requests = len(reqs)
         return outs, stats
 
 
-def steady_state_speedup(sparse_t: float, dense_t: float) -> float:
-    """Analytic pipeline speedup: (s+d)/max(s,d)."""
-    return (sparse_t + dense_t) / max(sparse_t, dense_t, 1e-12)
+class TwoStagePipeline(Pipeline):
+    """Back-compat alias: the paper's sparse/dense two-stage pipeline as a
+    2-entry stage list. ``sparse_fn(request) -> intermediates``,
+    ``dense_fn(intermediates, request) -> output``."""
+
+    def __init__(self, sparse_fn: Callable, dense_fn: Callable):
+        super().__init__([
+            ("sparse", lambda x, req: sparse_fn(req)),
+            ("dense", lambda x, req: dense_fn(x, req)),
+        ])
+
+
+def steady_state_speedup(*stage_times: float) -> float:
+    """Analytic pipeline speedup: sum(stages) / max(stage)."""
+    return sum(stage_times) / max(max(stage_times, default=0.0), 1e-12)

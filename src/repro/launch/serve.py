@@ -1,7 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch deepseek-7b
---requests 32`` — continuous-batching LM serving with bucketed prefill
-(paper T5) through the InferenceEngine, or ``--arch dlrm`` for the paper's
-two-stage pipelined recommendation engine.
+--requests 32`` — continuous-batching LM serving with bucketed batched
+prefill (paper T5) through the unified runtime, or ``--arch dlrm`` for the
+paper's 4-stage pipelined recommendation engine (ingest→sparse→dense→post).
+
+Both paths share the scheduler/executor/telemetry stack
+(repro/serving/): pick an admission policy with ``--policy
+fifo|edf|sizetime`` and a latency SLA with ``--slo-ms`` to get SLA-miss
+accounting in the report.
 
 Real-cluster notes: per-host processes share the production mesh via
 jax.distributed.initialize(); the engine's slot batch maps to the
@@ -27,7 +32,8 @@ def serve_lm(args):
     params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
     eng = InferenceEngine(cfg, params, batch_slots=args.slots,
                           max_len=args.max_len,
-                          prefill_buckets=(16, 32, 64, 128))
+                          prefill_buckets=(16, 32, 64, 128),
+                          policy=args.policy, slo_ms=args.slo_ms)
     rng = np.random.default_rng(7)
     lens = np.clip(rng.lognormal(3.0, 0.7, args.requests).astype(int), 3,
                    args.max_len // 2)
@@ -37,14 +43,13 @@ def serve_lm(args):
     t0 = time.perf_counter()
     eng.run(reqs)
     wall = time.perf_counter() - t0
-    lats = sorted(r.latency_ms for r in reqs)
-    print(f"served {eng.stats.served} requests in {wall:.2f}s "
-          f"({eng.stats.total_tokens / wall:.0f} tok/s, "
-          f"{eng.stats.steps} decode steps, "
-          f"{eng.stats.compile_count} compiled buckets)")
-    print(f"latency ms: p50={lats[len(lats)//2]:.0f} "
-          f"p95={lats[int(len(lats)*0.95)]:.0f} max={lats[-1]:.0f}")
-    return eng.stats
+    tel = eng.telemetry
+    print(f"served {tel.served} requests in {wall:.2f}s "
+          f"({tel.total_tokens / wall:.0f} tok/s, {tel.steps} decode steps, "
+          f"{tel.prefills} prefills in {tel.prefill_batches} batched "
+          f"dispatches)")
+    print(tel.report())
+    return tel
 
 
 def serve_dlrm(args):
@@ -57,16 +62,22 @@ def serve_dlrm(args):
     asn = dlrm_mod.make_assignment(cfg, 6)
     params = dlrm_mod.init_dlrm(cfg, asn, jax.random.PRNGKey(0),
                                 quantize=True)
-    eng = DLRMEngine(cfg, asn, params)
+    eng = DLRMEngine(cfg, asn, params, policy=args.policy,
+                     slo_ms=args.slo_ms)
     batches = [next(dlrm_batches(cfg, 64, seed=s))
                for s in range(args.requests)]
-    eng.serve(batches[:2], pipelined=True)          # warm
+    # full-trace warm-up: the T6 unpack compiles per distinct used-prefix
+    # shape, so a partial warm would report compile stalls as serving
+    # latency; excluded from transfer + latency stats
+    eng.serve(batches, pipelined=True, warm=True)
     _, stats = eng.serve(batches, pipelined=True)
+    tel = eng.telemetry
     print(f"served {stats.num_requests} batches x64 "
           f"({stats.qps * 64:.0f} items/s device-side); "
           f"transfers saved {eng.transfer_stats.bytes_saved_frac*100:.0f}% "
           f"bytes")
-    return stats
+    print(tel.report())
+    return tel
 
 
 def main(argv=None):
@@ -76,6 +87,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "edf", "sizetime"))
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency SLA for EDF + miss accounting")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full-config", dest="smoke", action="store_false")
     args = ap.parse_args(argv)

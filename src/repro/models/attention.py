@@ -12,6 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.common import (apply_mrope, apply_rope, mk_param, softcap)
+from repro.core.jax_compat import shard_map
 from repro.sharding.rules import (current_ctx, logical_to_spec, Logical,
                                   mesh_axis_names, mesh_axis_size, shard)
 
@@ -373,7 +374,7 @@ def _decode_seq_sharded(q, k_new, v_new, cache, pos, cfg: ModelConfig):
         o = jnp.swapaxes(o, 1, 3).reshape(B, S1, K * G, hd)
         return o.astype(q.dtype), ck, cv
 
-    o, ck, cv = jax.shard_map(
+    o, ck, cv = shard_map(
         body, mesh=mesh,
         in_specs=(q_spec, qkv_spec, qkv_spec, cache_spec, cache_spec, P()),
         out_specs=(q_spec, cache_spec, cache_spec),

@@ -1,0 +1,29 @@
+"""Unified serving runtime (paper §IV) — module map:
+
+- ``scheduler.py``  — single request queue + admission layer shared by all
+  engines: Ticket lifecycle, pluggable policies (FIFO, earliest-deadline-
+  first, size x time batch formation), per-request deadline tracking, and
+  completion accounting into Telemetry.
+- ``executor.py``   — StageExecutor: compiled-stage cache keyed by
+  (stage, shape-bucket) with compile-count and per-stage dispatch
+  telemetry; absorbs the engines' private jit caches (T5 bucketing).
+- ``telemetry.py``  — shared stats surface: QPS, p50/p95/p99 latency,
+  queue depth, SLA-miss fraction, compile counts, per-stage dispatches;
+  consumed by launch/serve.py, the examples, and benchmarks.
+- ``engine.py``     — LM engine: continuous slot-batched greedy decode
+  with bucketed **batched prefill** (freed slots refill together in one
+  bucketed call) on the shared scheduler/executor.
+- ``dlrm_engine.py``— DLRM engine: 4-stage ingest→sparse→dense→post
+  instance of the N-stage pipeline (core/pipeline.py) with the T6
+  transfer path as stage 0.
+
+The N-stage software-pipeline driver itself lives in
+``repro/core/pipeline.py`` (paper T2, Fig. 6 generalized).
+"""
+from repro.serving.executor import StageExecutor
+from repro.serving.scheduler import (NO_SLO, EDFPolicy, FIFOPolicy, Policy,
+                                     Scheduler, SizeTimePolicy, Ticket)
+from repro.serving.telemetry import Telemetry
+
+__all__ = ["StageExecutor", "Scheduler", "Ticket", "Policy", "FIFOPolicy",
+           "EDFPolicy", "SizeTimePolicy", "Telemetry", "NO_SLO"]

@@ -1,14 +1,23 @@
-"""DLRM serving engine — the paper's Fig. 6 pipeline end-to-end:
+"""DLRM serving engine on the unified runtime — the paper's Fig. 6
+pipeline end-to-end as a 4-stage instance of the shared N-stage driver:
 
-host feature ingestion (partial transfers + command batching, T6) ->
-sparse stage (SLS over partitioned tables, T1) -> dense stage (MLPs,
-data-parallel), with request N's dense overlapping request N+1's sparse (T2).
+  stage 0 ingest: host feature ingestion (partial transfers + command
+                  batching, T6 — core/transfer.py)
+  stage 1 sparse: SLS over partitioned tables (T1), model-parallel
+  stage 2 dense:  bottom MLP + interaction + top MLP, data-parallel
+  stage 3 post:   output normalization (float32 logits)
+
+with request N's dense overlapping request N+1's sparse (T2) and request
+N+2's host ingest — the generalization of the paper's two-stage overlap.
+Compiled stages live in the shared StageExecutor; admission/latency/SLA
+accounting flows through the shared Scheduler + Telemetry.
 """
 from __future__ import annotations
 
 import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,10 +25,13 @@ import numpy as np
 
 from repro.configs.dlrm_paper import DLRMConfig
 from repro.core.partitioner import TableAssignment
-from repro.core.pipeline import PipelineStats, TwoStagePipeline
+from repro.core.pipeline import Pipeline, PipelineStats
 from repro.core.transfer import (SparseBatch, TransferStats,
                                  command_batched_transfer, naive_transfer)
 from repro.models import dlrm as dlrm_mod
+from repro.serving.executor import StageExecutor
+from repro.serving.scheduler import Scheduler
+from repro.serving.telemetry import Telemetry
 
 
 @dataclass
@@ -28,38 +40,116 @@ class DLRMEngine:
     assignment: TableAssignment
     params: Any
     partial_transfers: bool = True
+    policy: str = "fifo"
+    slo_ms: Optional[float] = None
     transfer_stats: TransferStats = field(default_factory=TransferStats)
 
     def __post_init__(self):
         cfg, asn = self.cfg, self.assignment
+        self.telemetry = Telemetry()
+        self.stats = self.telemetry
+        self.executor = StageExecutor(self.telemetry)
+        self.scheduler = Scheduler(self.policy, telemetry=self.telemetry,
+                                   default_slo_ms=self.slo_ms)
+        self._collect_transfer_stats = True
 
-        @jax.jit
-        def sparse_fn(params, indices, lengths):
-            return dlrm_mod.sls_forward(params, cfg, asn, indices, lengths)
+        def build_sparse():
+            @jax.jit
+            def sparse_fn(params, indices, lengths):
+                return dlrm_mod.sls_forward(params, cfg, asn, indices,
+                                            lengths)
+            return sparse_fn
 
-        @jax.jit
-        def dense_fn(params, pooled, dense_x):
-            return dlrm_mod.dense_forward(params, cfg, dense_x, pooled)
+        def build_dense():
+            @jax.jit
+            def dense_fn(params, pooled, dense_x):
+                return dlrm_mod.dense_forward(params, cfg, dense_x, pooled)
+            return dense_fn
 
-        self._sparse = sparse_fn
-        self._dense = dense_fn
-        self._pipeline = TwoStagePipeline(
-            sparse_fn=lambda req: self._sparse(self.params, *req["sls"]),
-            dense_fn=lambda pooled, req: self._dense(self.params, pooled,
-                                                     req["dense"]))
+        def build_post():
+            return jax.jit(lambda logits: logits.astype(jnp.float32))
+
+        ex = self.executor
+        self._pipeline = Pipeline([
+            ("ingest", lambda x, req: self.ingest(req)),
+            ("sparse", lambda x, req: {
+                "pooled": ex.dispatch("sparse", (), build_sparse,
+                                      self.params, *x["sls"]),
+                "dense": x["dense"]}),
+            ("dense", lambda x, req: ex.dispatch(
+                "dense", (), build_dense, self.params, x["pooled"],
+                x["dense"])),
+            ("post", lambda x, req: ex.dispatch("post", (), build_post, x)),
+        ])
 
     def ingest(self, batch: Dict[str, np.ndarray]) -> Dict[str, Any]:
         """Host->device input path with the paper's T6 optimizations."""
         sb = SparseBatch(batch["indices"], batch["lengths"])
         mover = (command_batched_transfer if self.partial_transfers
                  else naive_transfer)
-        idx_dev, len_dev = mover(sb, self.transfer_stats)
+        stats = self.transfer_stats if self._collect_transfer_stats else None
+        idx_dev, len_dev = mover(sb, stats)
         return {"sls": (idx_dev, len_dev),
                 "dense": jnp.asarray(batch["dense"])}
 
     def serve(self, batches: Sequence[Dict[str, np.ndarray]],
-              pipelined: bool = True):
-        reqs = [self.ingest(b) for b in batches]
-        if pipelined:
-            return self._pipeline.run(reqs, measure=False)
-        return self._pipeline.run_sequential(reqs)
+              pipelined: bool = True, warm: bool = False,
+              measure: bool = False) -> Tuple[List[Any], PipelineStats]:
+        """Run raw host batches through admission + the 4-stage pipeline.
+
+        ``warm=True`` marks compile/warm-up traffic: it is excluded from
+        transfer stats and from latency/QPS telemetry.
+        """
+        if warm:
+            with self._suppress_traffic_stats():
+                if pipelined:
+                    return self._pipeline.run(batches, measure=measure)
+                return self._pipeline.run_sequential(batches)
+        tickets = [self.scheduler.submit(b, size=len(b["lengths"]))
+                   for b in batches]
+        # drain the queue group by group: a batch-forming policy (sizetime)
+        # returns one size-coherent group per admit() call
+        admitted = []
+        while self.scheduler.depth:
+            got = self.scheduler.admit(len(tickets))
+            if not got:
+                break
+            admitted.append(got)
+        outs, stats = [], PipelineStats()
+        t0 = time.perf_counter()
+        for group in admitted:
+            reqs = [t.payload for t in group]
+            # per-ticket completion as each output is realized, so tail
+            # latency reflects position in the pipeline, not one lump
+            # timestamp for the whole pass
+            done = lambda i, _v: self.scheduler.complete(group[i])
+            if pipelined:
+                o, s = self._pipeline.run(reqs, on_result=done)
+            else:
+                o, s = self._pipeline.run_sequential(reqs, on_result=done)
+            outs.extend(o)
+            stats.num_requests += s.num_requests
+            stats.wall_time_s += s.wall_time_s
+        self.telemetry.record_serving_window(time.perf_counter() - t0)
+        if measure:
+            # stage re-execution for timing must not double-count the
+            # T6 transfer stats or dispatch telemetry collected by the
+            # production pass above
+            with self._suppress_traffic_stats():
+                stats.stage_time_s = self._pipeline.measure_stages(
+                    [t.payload for g in admitted for t in g])
+        return outs, stats
+
+    @contextmanager
+    def _suppress_traffic_stats(self):
+        """Exclude non-production traffic (warm-up, measurement re-runs)
+        from transfer stats and per-stage dispatch telemetry."""
+        self._collect_transfer_stats = False
+        calls = dict(self.telemetry.stage_calls)
+        disp = dict(self.telemetry.stage_dispatch_s)
+        try:
+            yield
+        finally:
+            self._collect_transfer_stats = True
+            self.telemetry.stage_calls = calls
+            self.telemetry.stage_dispatch_s = disp

@@ -1,20 +1,26 @@
-"""Serving runtime — the paper's §IV custom service binary, TPU-native:
+"""LM serving engine on the unified runtime — the paper's §IV custom
+service binary, TPU-native:
 
-- request queue + continuous batcher (the Glow runtime's multi-request
-  queue/overlap, §IV-C): slots decode at independent positions, freed slots
-  are refilled immediately
+- shared Scheduler (scheduler.py) for the request queue + admission (the
+  Glow runtime's multi-request queue/overlap, §IV-C): slots decode at
+  independent positions, freed slots are refilled immediately under a
+  pluggable policy (FIFO / EDF / size x time batch formation)
+- shared StageExecutor (executor.py) for every compiled stage: bucketed
+  prefill executables (T5), the decode step, and the slot-scatter writer
+- **batched prefill**: freed slots are refilled together — admitted
+  requests are grouped by prefill bucket and each group prefills in ONE
+  bucketed call instead of per-request batch-1 dispatches
 - slot-based KV-cache manager over one statically-shaped cache
-- shape-bucketed prefill executables for variable-length prompts (T5)
-- greedy decode loop with async dispatch
+- greedy decode loop with async dispatch, per-request deadline/SLA
+  tracking through the shared Telemetry
 
-The DLRM two-stage pipelined engine (T2) lives in dlrm_engine.py.
+The DLRM pipelined engine (T2) lives in dlrm_engine.py on the same stack.
 """
 from __future__ import annotations
 
-import collections
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +29,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.bucketing import pick_bucket
 from repro.models import model as model_mod
+from repro.serving.executor import StageExecutor
+from repro.serving.scheduler import Scheduler, SizeTimePolicy, Ticket
+from repro.serving.telemetry import Telemetry
 
 
 @dataclass
@@ -30,6 +39,7 @@ class Request:
     rid: int
     tokens: np.ndarray                 # prompt token ids (L,)
     max_new_tokens: int = 16
+    slo_ms: Optional[float] = None     # per-request latency SLA
     output: List[int] = field(default_factory=list)
     enqueue_t: float = 0.0
     finish_t: float = 0.0
@@ -40,56 +50,55 @@ class Request:
         return (self.finish_t - self.enqueue_t) * 1e3
 
 
-@dataclass
-class EngineStats:
-    served: int = 0
-    steps: int = 0
-    prefills: int = 0
-    compile_count: int = 0
-    total_tokens: int = 0
-    wall_start: float = field(default_factory=time.perf_counter)
+def _cache_batch_axes(cfg: ModelConfig, max_len: int):
+    """Per-leaf batch-axis index of the KV-cache pytree, found by abstract
+    evaluation at two batch sizes (no device allocation). ``-1`` marks a
+    leaf without a batch axis (a None leaf would be eaten by jax.tree.map
+    as an empty subtree)."""
+    s2 = jax.eval_shape(lambda: model_mod.init_caches(cfg, 2, max_len))
+    s3 = jax.eval_shape(lambda: model_mod.init_caches(cfg, 3, max_len))
 
-    def qps(self) -> float:
-        return self.served / max(time.perf_counter() - self.wall_start, 1e-9)
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        return diff[0] if diff else -1
 
-
-def _write_slot(dst_tree, src_tree, slot: int):
-    """Write a single-sequence cache (batch size 1) into batch slot ``slot``.
-    The batch axis is wherever dst and src shapes differ."""
-    def upd(dst, src):
-        diff = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape))
-                if a != b]
-        if not diff:
-            return src.astype(dst.dtype)       # batch==1 engine
-        ax = diff[0]
-        start = [0] * dst.ndim
-        start[ax] = slot
-        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
-                                            tuple(start))
-    return jax.tree.map(upd, dst_tree, src_tree)
+    return jax.tree.map(axis, s2, s3)
 
 
 class InferenceEngine:
-    """Greedy-decoding LM server with bucketed prefill and continuous
-    slot-batched decode (per-slot positions)."""
+    """Greedy-decoding LM server: bucketed batched prefill + continuous
+    slot-batched decode (per-slot positions) on the shared runtime."""
 
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 256,
-                 prefill_buckets: Sequence[int] = (32, 64, 128)):
+                 prefill_buckets: Sequence[int] = (32, 64, 128),
+                 policy: str = "fifo", slo_ms: Optional[float] = None,
+                 max_prefill_batch: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.batch_slots = batch_slots
         self.buckets = tuple(b for b in prefill_buckets if b <= max_len)
-        self.stats = EngineStats()
-        self.queue: collections.deque = collections.deque()
+        # max_prefill_batch=1 reproduces the seed's per-request prefill
+        # (kept for A/B tests); default admits up to all free slots at once
+        self.max_prefill_batch = max_prefill_batch or batch_slots
+
+        self.telemetry = Telemetry()
+        self.stats = self.telemetry          # legacy accessor name
+        self.executor = StageExecutor(self.telemetry)
+        if policy == "sizetime":
+            # batch formation must group on the engine's actual prefill
+            # buckets, or "coherent" groups still split into multiple
+            # compiled dispatches
+            policy = SizeTimePolicy(self.buckets)
+        self.scheduler = Scheduler(policy, telemetry=self.telemetry,
+                                   default_slo_ms=slo_ms)
+
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
-        self.active: Dict[int, Request] = {}
+        self._batch_axes = _cache_batch_axes(cfg, max_len)
+        self.active: Dict[int, Ticket] = {}
         self.pos = np.zeros(batch_slots, np.int32)
         self.free = list(range(batch_slots))
-        self._prefill_cache: Dict[int, Callable] = {}
-        self._decode_fn = jax.jit(self._decode_step)
-        self._write_fn = jax.jit(_write_slot, static_argnums=(2,))
 
     # ---- compiled stages -------------------------------------------------
     def _build_prefill(self, bucket: int):
@@ -107,68 +116,127 @@ class InferenceEngine:
 
         return jax.jit(fn)
 
-    def _get_prefill(self, length: int):
-        b = pick_bucket(length, self.buckets)
-        if b not in self._prefill_cache:
-            self._prefill_cache[b] = self._build_prefill(b)
-            self.stats.compile_count += 1
-        return b, self._prefill_cache[b]
+    def _build_decode(self):
+        cfg = self.cfg
 
-    def _decode_step(self, params, caches, tokens, pos_vec):
-        hidden, caches = model_mod.decode_step(params, self.cfg, tokens,
-                                               caches, pos_vec)
-        nxt = model_mod.greedy_next(params, self.cfg, hidden)
-        return nxt, caches
+        def fn(params, caches, tokens, pos_vec):
+            hidden, caches = model_mod.decode_step(params, cfg, tokens,
+                                                   caches, pos_vec)
+            nxt = model_mod.greedy_next(params, cfg, hidden)
+            return nxt, caches
+
+        return jax.jit(fn)
+
+    def _build_slot_write(self):
+        axes = self._batch_axes
+
+        def write(dst_tree, src_tree, slots):
+            # src may carry trailing padded rows (fixed prefill batch);
+            # only the first len(slots) rows are real
+            def upd(dst, src, ax):
+                if ax < 0:             # no batch axis: whole-leaf state
+                    return src.astype(dst.dtype)
+                d = jnp.moveaxis(dst, ax, 0)
+                s = jnp.moveaxis(src, ax, 0)[:slots.shape[0]]
+                return jnp.moveaxis(d.at[slots].set(s.astype(dst.dtype)),
+                                    0, ax)
+
+            return jax.tree.map(upd, dst_tree, src_tree, axes)
+
+        return jax.jit(write)
 
     # ---- main loop ---------------------------------------------------------
+    def _eff_len(self, req: Request) -> int:
+        """Effective prefill length: what both admission sizing and bucket
+        choice key on — they must agree or batch-formed groups split into
+        multiple compiled dispatches."""
+        return min(len(req.tokens), self.max_len - req.max_new_tokens - 1)
+
     def submit(self, req: Request):
-        req.enqueue_t = time.perf_counter()
-        self.queue.append(req)
+        t = self.scheduler.submit(req, size=self._eff_len(req),
+                                  slo_ms=req.slo_ms)
+        req.enqueue_t = t.enqueue_t
 
     def _admit(self):
-        while self.queue and self.free:
-            req = self.queue.popleft()
-            slot = self.free.pop()
-            L = min(len(req.tokens), self.max_len - req.max_new_tokens - 1)
-            b, fn = self._get_prefill(L)
-            toks = np.zeros((1, b), np.int32)
-            toks[0, :min(L, b)] = req.tokens[:min(L, b)]
-            nxt, caches = fn(self.params, jnp.asarray(toks),
-                             jnp.asarray([min(L, b)], jnp.int32))
-            self.caches = self._write_fn(self.caches, caches, slot)
-            req.output.append(int(np.asarray(nxt)[0]))
-            self.active[slot] = req
-            self.pos[slot] = min(L, b)
-            self.stats.prefills += 1
+        """Refill freed slots: admit up to len(free) tickets, group them by
+        prefill bucket, and prefill each group in ONE bucketed call."""
+        while self.free and self.scheduler.depth:
+            tickets = self.scheduler.admit(
+                min(len(self.free), self.max_prefill_batch))
+            if not tickets:
+                return
+            groups: Dict[int, List[Ticket]] = {}
+            lens: Dict[int, List[int]] = {}
+            for t in tickets:
+                req: Request = t.payload
+                L = self._eff_len(req)
+                b = pick_bucket(L, self.buckets)
+                groups.setdefault(b, []).append(t)
+                lens.setdefault(b, []).append(min(L, b))
+            for b, group in groups.items():
+                self._prefill_group(b, group, lens[b])
+
+    def _prefill_group(self, bucket: int, group: List[Ticket],
+                       lengths: List[int]):
+        # pad the group to the next power of two (T5: static shapes, like
+        # the buckets themselves): executables per bucket stay bounded at
+        # log2(slots)+1 while wasted prefill compute stays under 2x — a
+        # lone freed slot refills with a batch-1 call, not a batch-P one.
+        # Padded rows carry zero tokens / length 1 and are discarded below.
+        g = len(group)
+        P = 1 << (g - 1).bit_length()
+        toks = np.zeros((P, bucket), np.int32)
+        lens = np.ones(P, np.int32)
+        for j, (t, L) in enumerate(zip(group, lengths)):
+            toks[j, :L] = t.payload.tokens[:L]
+            lens[j] = L
+        nxt, caches = self.executor.dispatch(
+            "prefill", (bucket, P), lambda: self._build_prefill(bucket),
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        slots = [self.free.pop() for _ in group]
+        self.caches = self.executor.dispatch(
+            "slot_write", g, self._build_slot_write,
+            self.caches, caches, jnp.asarray(slots, jnp.int32))
+        nxt = np.asarray(nxt)
+        for j, (t, slot, L) in enumerate(zip(group, slots, lengths)):
+            t.payload.output.append(int(nxt[j]))
+            self.active[slot] = t
+            self.pos[slot] = L
+        self.telemetry.prefills += g
+        self.telemetry.prefill_batches += 1
 
     def _step(self):
         if not self.active:
             return
         toks = np.zeros((self.batch_slots, 1), np.int32)
-        for s, req in self.active.items():
-            toks[s, 0] = req.output[-1]
-        nxt, self.caches = self._decode_fn(
+        for s, t in self.active.items():
+            toks[s, 0] = t.payload.output[-1]
+        nxt, self.caches = self.executor.dispatch(
+            "decode", (), self._build_decode,
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(self.pos))
         nxt = np.asarray(nxt)
-        self.stats.steps += 1
+        self.telemetry.steps += 1
         for s in list(self.active):
-            req = self.active[s]
+            t = self.active[s]
+            req: Request = t.payload
             self.pos[s] += 1
             req.output.append(int(nxt[s]))
-            self.stats.total_tokens += 1
+            self.telemetry.total_tokens += 1
             if len(req.output) >= req.max_new_tokens \
                     or self.pos[s] >= self.max_len - 1:
                 req.done = True
-                req.finish_t = time.perf_counter()
-                self.stats.served += 1
+                self.scheduler.complete(t)
+                req.finish_t = t.finish_t
                 del self.active[s]
                 self.free.append(s)
 
     def run(self, requests: Sequence[Request]) -> List[Request]:
         for r in requests:
             self.submit(r)
-        while self.queue or self.active:
+        t0 = time.perf_counter()
+        while self.scheduler.depth or self.active:
             self._admit()
             self._step()
+        self.telemetry.record_serving_window(time.perf_counter() - t0)
         return list(requests)

@@ -1,0 +1,63 @@
+"""Shared compiled-stage executor — the runtime's "multiple compiled
+networks, switch at runtime" machinery (paper T5 / §VI-A) factored out of
+the engines.
+
+A StageExecutor is a cache of compiled callables keyed by
+``(stage_name, shape_key)`` — e.g. ``("prefill", (bucket, batch))`` or
+``("sparse", ())`` — with compile-count and per-stage dispatch telemetry.
+It absorbs what the seed engines hand-rolled privately:
+``InferenceEngine._prefill_cache`` / ``_get_prefill`` and the jitted
+stages built in ``DLRMEngine.__post_init__``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+
+from repro.serving.telemetry import Telemetry
+
+StageKey = Tuple[str, Hashable]
+
+
+class StageExecutor:
+    """Compiled-stage cache + dispatch wrapper.
+
+    ``get`` returns (building if needed) the executable for a stage/shape;
+    ``dispatch`` additionally times the call. With JAX async dispatch the
+    recorded time is *dispatch* latency, not device time — still the right
+    thing to watch for host-side stalls (the paper's §IV-C overlap is
+    precisely about keeping dispatch off the critical path).
+    """
+
+    def __init__(self, telemetry: Optional[Telemetry] = None):
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._cache: Dict[StageKey, Callable] = {}
+
+    def get(self, stage: str, key: Hashable,
+            build_fn: Callable[[], Callable]) -> Callable:
+        """Executable for (stage, key), building via build_fn on miss."""
+        k = (stage, key)
+        fn = self._cache.get(k)
+        if fn is None:
+            fn = self._cache[k] = build_fn()
+            self.telemetry.record_compile(stage)
+        return fn
+
+    def dispatch(self, stage: str, key: Hashable,
+                 build_fn: Callable[[], Callable], *args, **kw) -> Any:
+        """get() + call, recording per-stage dispatch count/time."""
+        fn = self.get(stage, key, build_fn)
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        self.telemetry.record_dispatch(stage, time.perf_counter() - t0)
+        return out
+
+    def compiles_for(self, stage: str) -> int:
+        return self.telemetry.compiles.get(stage, 0)
+
+    def cached_keys(self, stage: Optional[str] = None):
+        return [k for k in self._cache
+                if stage is None or k[0] == stage]
+
+    def __len__(self) -> int:
+        return len(self._cache)

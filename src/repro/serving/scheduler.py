@@ -1,0 +1,183 @@
+"""Shared request scheduler — the Glow runtime's multi-request queue
+(paper §IV-C) factored out of the engines.
+
+One admission layer serves every workload: requests enter as *tickets*
+carrying an arbitrary engine payload plus scheduling metadata (size,
+enqueue time, absolute deadline). A pluggable policy picks which waiting
+tickets to admit when the engine reports free capacity:
+
+- ``fifo``       — arrival order (the seed engines' behaviour),
+- ``edf``        — earliest-deadline-first for latency-SLA traffic,
+- ``sizetime``   — size x time batch formation: group tickets whose
+                   padded size falls in the same bucket so one compiled
+                   executable serves the whole admitted batch, scoring
+                   groups by (members waiting) x (age of oldest) so big
+                   coherent batches win but nothing starves.
+
+Completion flows back through the scheduler so latency / SLA-miss
+accounting lands in the shared Telemetry regardless of engine.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.bucketing import pick_bucket
+from repro.serving.telemetry import Telemetry
+
+# pass as slo_ms to submit() to force a deadline-less (best-effort) ticket
+# even when the scheduler carries a default_slo_ms
+NO_SLO = math.inf
+
+
+@dataclass
+class Ticket:
+    """One queued unit of work (an LM request, a DLRM batch, ...)."""
+    tid: int
+    payload: Any
+    size: int = 0                       # tokens / rows — policy hint
+    enqueue_t: float = 0.0
+    deadline_t: Optional[float] = None  # absolute perf_counter deadline
+    admit_t: float = 0.0
+    finish_t: float = 0.0
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.finish_t - self.enqueue_t) * 1e3
+
+    def age(self, now: float) -> float:
+        return now - self.enqueue_t
+
+
+# ---- admission policies ---------------------------------------------------
+
+class Policy:
+    """Picks <= k tickets to admit; must not reorder its return value
+    arbitrarily — the scheduler admits exactly what is returned."""
+
+    def select(self, pending: List[Ticket], k: int,
+               now: float) -> List[Ticket]:
+        raise NotImplementedError
+
+
+class FIFOPolicy(Policy):
+    def select(self, pending, k, now):
+        return pending[:k]
+
+
+class EDFPolicy(Policy):
+    """Earliest-deadline-first; deadline-less tickets sort last, ties
+    break by arrival order."""
+
+    def select(self, pending, k, now):
+        ranked = sorted(pending,
+                        key=lambda t: (t.deadline_t if t.deadline_t
+                                       is not None else float("inf"),
+                                       t.enqueue_t))
+        return ranked[:k]
+
+
+class SizeTimePolicy(Policy):
+    """Batch formation over size buckets (paper T5 meets §IV-C): admit a
+    group of same-bucket tickets so the engine can serve them with one
+    compiled executable. Group score = waiting-count x oldest-age, so a
+    lone old request still beats a large fresh cohort eventually."""
+
+    def __init__(self, buckets: Sequence[int] = (32, 64, 128, 256)):
+        self.buckets = tuple(buckets)
+
+    def select(self, pending, k, now):
+        groups: Dict[int, List[Ticket]] = {}
+        for t in pending:
+            groups.setdefault(pick_bucket(t.size, self.buckets),
+                              []).append(t)
+        best = max(groups.values(),
+                   key=lambda g: (len(g) * max(g[0].age(now), 1e-6),
+                                  -g[0].enqueue_t))
+        return best[:k]
+
+
+POLICIES: Dict[str, Callable[[], Policy]] = {
+    "fifo": FIFOPolicy,
+    "edf": EDFPolicy,
+    "sizetime": SizeTimePolicy,
+}
+
+
+def make_policy(name_or_policy) -> Policy:
+    if isinstance(name_or_policy, Policy):
+        return name_or_policy
+    try:
+        return POLICIES[name_or_policy]()
+    except KeyError:
+        raise ValueError(f"unknown policy {name_or_policy!r}; "
+                         f"choose from {sorted(POLICIES)}")
+
+
+# ---- the scheduler --------------------------------------------------------
+
+class Scheduler:
+    """Single request queue + admission + completion accounting.
+
+    Engines call ``submit`` on arrival, ``admit(k)`` when k units of
+    capacity free up (continuous batching: every freed slot triggers a
+    refill attempt), and ``complete`` when a ticket's response is done.
+    """
+
+    def __init__(self, policy: str | Policy = "fifo", *,
+                 telemetry: Optional[Telemetry] = None,
+                 default_slo_ms: Optional[float] = None):
+        self.policy = make_policy(policy)
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.default_slo_ms = default_slo_ms
+        self._pending: List[Ticket] = []
+        self._ids = itertools.count()
+
+    # -- queue side --------------------------------------------------------
+    def submit(self, payload: Any, *, size: int = 0,
+               slo_ms: Optional[float] = None,
+               now: Optional[float] = None) -> Ticket:
+        """Enqueue a payload. ``slo_ms=None`` inherits ``default_slo_ms``;
+        pass ``NO_SLO`` for an explicitly deadline-less (best-effort)
+        ticket that never counts toward SLA accounting."""
+        now = time.perf_counter() if now is None else now
+        slo = slo_ms if slo_ms is not None else self.default_slo_ms
+        deadline = (now + slo / 1e3) if slo is not None \
+            and math.isfinite(slo) else None
+        t = Ticket(next(self._ids), payload, size=size, enqueue_t=now,
+                   deadline_t=deadline)
+        self._pending.append(t)
+        return t
+
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    # -- engine side -------------------------------------------------------
+    def admit(self, k: int, now: Optional[float] = None) -> List[Ticket]:
+        """Pop up to k tickets chosen by the policy; stamps admit_t."""
+        if k <= 0 or not self._pending:
+            return []
+        now = time.perf_counter() if now is None else now
+        self.telemetry.record_queue_depth(len(self._pending))
+        chosen = self.policy.select(self._pending, k, now)
+        picked = set(id(t) for t in chosen)
+        self._pending = [t for t in self._pending if id(t) not in picked]
+        for t in chosen:
+            t.admit_t = now
+        return chosen
+
+    def complete(self, ticket: Ticket, now: Optional[float] = None):
+        """Stamp finish time and fold latency/SLA into telemetry."""
+        now = time.perf_counter() if now is None else now
+        ticket.finish_t = now
+        missed = (None if ticket.deadline_t is None
+                  else now > ticket.deadline_t)
+        self.telemetry.record_latency(ticket.latency_ms, missed)
+        self.telemetry.served += 1

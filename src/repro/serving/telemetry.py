@@ -1,0 +1,161 @@
+"""Unified serving telemetry — one stats object shared by the scheduler,
+executor, and both engines (the paper's production monitoring surface:
+QPS, tail latency, queue depth, SLA misses, compile counts, per-stage
+times). Park et al. (1811.09886) and Gupta et al. (1906.03109) both find
+the batching/queueing policy — not the kernel — dominates tail latency at
+scale, so the runtime has to measure the queue, not just the device.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+# keep the most recent N samples of each distribution: percentiles stay a
+# rolling window and a long-lived server doesn't grow without bound
+MAX_SAMPLES = 8192
+
+
+def percentile(sorted_vals: List[float], p: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted list (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    i = max(math.ceil(len(sorted_vals) * p) - 1, 0)
+    return sorted_vals[min(i, len(sorted_vals) - 1)]
+
+
+@dataclass
+class Telemetry:
+    """Counters + distributions for one serving runtime instance.
+
+    The scheduler stamps request lifecycle events (``record_latency``,
+    ``record_queue_depth``), the executor stamps compile/dispatch events
+    (``record_compile``, ``record_dispatch``), and the engines stamp
+    work-item counters directly (``served``/``steps``/``prefills``/...).
+    """
+    # engine counters (names kept from the old EngineStats for callers)
+    served: int = 0
+    steps: int = 0
+    prefills: int = 0              # requests prefilled
+    prefill_batches: int = 0       # prefill *dispatches* (batched calls)
+    total_tokens: int = 0
+    wall_start: float = field(default_factory=time.perf_counter)
+    serving_s: float = 0.0         # accumulated in-serving wall time
+
+    # scheduler-side distributions
+    latencies_ms: List[float] = field(default_factory=list)
+    sla_misses: int = 0
+    sla_total: int = 0             # completions that carried a deadline
+    queue_depths: List[int] = field(default_factory=list)
+
+    # executor-side counters
+    compiles: Dict[str, int] = field(default_factory=dict)
+    stage_calls: Dict[str, int] = field(default_factory=dict)
+    stage_dispatch_s: Dict[str, float] = field(default_factory=dict)
+
+    # ---- executor hooks --------------------------------------------------
+    def record_compile(self, stage: str):
+        self.compiles[stage] = self.compiles.get(stage, 0) + 1
+
+    def record_dispatch(self, stage: str, seconds: float):
+        self.stage_calls[stage] = self.stage_calls.get(stage, 0) + 1
+        self.stage_dispatch_s[stage] = \
+            self.stage_dispatch_s.get(stage, 0.0) + seconds
+
+    # ---- scheduler hooks -------------------------------------------------
+    def record_queue_depth(self, depth: int):
+        self.queue_depths.append(depth)
+        if len(self.queue_depths) > MAX_SAMPLES:
+            del self.queue_depths[:-MAX_SAMPLES]
+
+    def record_latency(self, latency_ms: float,
+                       deadline_missed: Optional[bool] = None):
+        self.latencies_ms.append(latency_ms)
+        if len(self.latencies_ms) > MAX_SAMPLES:
+            del self.latencies_ms[:-MAX_SAMPLES]
+        if deadline_missed is not None:
+            self.sla_total += 1
+            if deadline_missed:
+                self.sla_misses += 1
+
+    def reset_serving_stats(self):
+        """Zero every traffic-scoped counter/distribution (after warm-up) —
+        including per-stage dispatch counts/times, so summary() stays
+        internally consistent. Only ``compiles`` survives: executables are
+        cumulative engine state, not traffic."""
+        self.served = self.steps = self.prefills = 0
+        self.prefill_batches = self.total_tokens = 0
+        self.latencies_ms = []
+        self.sla_misses = self.sla_total = 0
+        self.queue_depths = []
+        self.stage_calls = {}
+        self.stage_dispatch_s = {}
+        self.serving_s = 0.0
+        self.wall_start = time.perf_counter()
+
+    # ---- derived ---------------------------------------------------------
+    @property
+    def compile_count(self) -> int:
+        """Total builder invocations across all compiled stages."""
+        return sum(self.compiles.values())
+
+    def record_serving_window(self, seconds: float):
+        """Engines report each production run/serve window here so QPS
+        excludes construction, warm-up/compile traffic, and idle time
+        between calls."""
+        self.serving_s += seconds
+
+    def qps(self) -> float:
+        denom = self.serving_s if self.serving_s > 0 \
+            else time.perf_counter() - self.wall_start
+        return self.served / max(denom, 1e-9)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        s = sorted(self.latencies_ms)
+        return {"p50": percentile(s, 0.50), "p95": percentile(s, 0.95),
+                "p99": percentile(s, 0.99),
+                "max": s[-1] if s else 0.0}
+
+    @property
+    def sla_miss_frac(self) -> float:
+        return self.sla_misses / max(self.sla_total, 1)
+
+    @property
+    def mean_queue_depth(self) -> float:
+        return sum(self.queue_depths) / max(len(self.queue_depths), 1)
+
+    def summary(self) -> Dict[str, float]:
+        """Flat dict for JSON emission (benchmarks/BENCH_serving.json)."""
+        out = {"served": self.served, "qps": self.qps(),
+               "steps": self.steps, "prefills": self.prefills,
+               "prefill_batches": self.prefill_batches,
+               "total_tokens": self.total_tokens,
+               "compile_count": self.compile_count,
+               "sla_miss_frac": self.sla_miss_frac,
+               "mean_queue_depth": self.mean_queue_depth}
+        for k, v in self.latency_percentiles().items():
+            out[f"latency_ms_{k}"] = v
+        for stage, n in self.stage_calls.items():
+            out[f"dispatches_{stage}"] = n
+        return out
+
+    def report(self) -> str:
+        """One-paragraph human-readable summary for launchers/examples."""
+        pct = self.latency_percentiles()
+        decode = (f" ({self.total_tokens} tokens, {self.steps} decode "
+                  f"steps)" if self.steps else "")
+        lines = [f"served {self.served} requests at {self.qps():.1f} QPS"
+                 + decode,
+                 f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
+                 f"p99={pct['p99']:.1f} max={pct['max']:.1f}"]
+        if self.sla_total:
+            lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
+                         f"({self.sla_miss_frac * 100:.1f}%)")
+        if self.compiles:
+            c = ", ".join(f"{k}={v}" for k, v in sorted(self.compiles.items()))
+            lines.append(f"compiled stages: {c}")
+        if self.queue_depths:
+            lines.append(f"mean queue depth {self.mean_queue_depth:.1f}")
+        return "\n".join(lines)

@@ -186,10 +186,11 @@ def logical_to_spec(axes: Logical, rules: Optional[ShardingRules] = None,
                 if ax is not None and dims is not None and mesh is not None \
                         and dims[i] % _axis_size(mesh, ax) != 0:
                     ax = None
-                if ax is not None and len(ax) == 1:
-                    ax = ax[0]
             if ax is not None:
                 used.update((ax,) if isinstance(ax, str) else ax)
+        if isinstance(ax, tuple) and len(ax) == 1:
+            ax = ax[0]          # singleton tuple == bare axis (older jax
+                                # PartitionSpec does not normalize this)
         spec.append(ax)
     while spec and spec[-1] is None:
         spec.pop()

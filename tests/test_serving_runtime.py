@@ -1,0 +1,225 @@
+"""Unified serving runtime: scheduler policies (FIFO/EDF/size x time),
+SLA-miss accounting, slot-refill invariants, batched-prefill equivalence
+vs per-request prefill, N-stage pipeline driver, stage executor cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.pipeline import (Pipeline, TwoStagePipeline,
+                                 steady_state_speedup)
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request
+from repro.serving.executor import StageExecutor
+from repro.serving.scheduler import Scheduler
+from repro.serving.telemetry import Telemetry
+
+
+# ---- scheduler policies ---------------------------------------------------
+
+def test_fifo_preserves_arrival_order():
+    s = Scheduler("fifo")
+    for i in range(5):
+        s.submit(i, now=float(i))
+    got = [t.payload for t in s.admit(3, now=10.0)]
+    assert got == [0, 1, 2]
+    assert s.depth == 2
+
+
+def test_edf_orders_by_deadline():
+    s = Scheduler("edf")
+    s.submit("late", slo_ms=300.0, now=0.0)
+    s.submit("urgent", slo_ms=50.0, now=0.0)
+    s.submit("mid", slo_ms=150.0, now=0.0)
+    s.submit("no-deadline", now=0.0)
+    got = [t.payload for t in s.admit(4, now=0.0)]
+    assert got == ["urgent", "mid", "late", "no-deadline"]
+
+
+def test_edf_tie_breaks_by_arrival():
+    s = Scheduler("edf", default_slo_ms=100.0)
+    s.submit("a", now=0.0)
+    s.submit("b", now=0.0)
+    assert [t.payload for t in s.admit(2, now=0.0)] == ["a", "b"]
+
+
+def test_sizetime_groups_same_bucket():
+    from repro.serving.scheduler import SizeTimePolicy
+    s = Scheduler(SizeTimePolicy(buckets=(32, 64)))
+    # two fresh size-64 tickets vs three older size-32 tickets: the
+    # size-32 group wins on count x age, and the admitted batch is
+    # bucket-coherent
+    for p in ("s1", "s2", "s3"):
+        s.submit(p, size=20, now=0.0)
+    for p in ("b1", "b2"):
+        s.submit(p, size=60, now=5.0)
+    got = [t.payload for t in s.admit(4, now=6.0)]
+    assert got == ["s1", "s2", "s3"]
+    assert s.depth == 2
+
+
+def test_sla_miss_accounting():
+    tel = Telemetry()
+    s = Scheduler("fifo", telemetry=tel, default_slo_ms=100.0)
+    from repro.serving.scheduler import NO_SLO
+    t1 = s.submit("hit", now=0.0)
+    t2 = s.submit("miss", now=0.0)
+    t3 = s.submit("no-slo", slo_ms=NO_SLO, now=0.0)  # explicit best-effort
+    assert t3.deadline_t is None
+    s.admit(3, now=0.0)
+    s.complete(t1, now=0.05)                  # inside the 100ms budget
+    s.complete(t2, now=0.25)                  # past the deadline
+    s.complete(t3, now=9.99)                  # no deadline: never a miss
+    assert tel.served == 3
+    assert tel.sla_total == 2
+    assert tel.sla_misses == 1
+    assert tel.sla_miss_frac == pytest.approx(0.5)
+    assert tel.latencies_ms == pytest.approx([50.0, 250.0, 9990.0])
+
+
+# ---- engine on the shared stack ------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _trace(cfg, seed=11, n=8, lens=(4, 6, 5, 7, 3, 6, 4, 5)):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size, l).astype(np.int32),
+                    max_new_tokens=4)
+            for i, l in enumerate(lens[:n])]
+
+
+def test_slot_refill_invariants(lm_setup):
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, batch_slots=3, max_len=32,
+                          prefill_buckets=(8, 16))
+    for r in _trace(cfg):
+        eng.submit(r)
+    while eng.scheduler.depth or eng.active:
+        eng._admit()
+        eng._step()
+        # every slot is exactly one of {free, active} at all times
+        assert len(eng.free) + len(eng.active) == eng.batch_slots
+        assert not (set(eng.free) & set(eng.active))
+        assert all(0 <= s < eng.batch_slots
+                   for s in list(eng.free) + list(eng.active))
+    assert eng.telemetry.served == 8
+    assert sorted(eng.free) == list(range(eng.batch_slots))
+
+
+def test_batched_prefill_matches_per_request(lm_setup):
+    """Acceptance: batched prefill is token-identical to the seed's
+    one-request-at-a-time prefill on a fixed-seed trace, with fewer
+    prefill dispatches."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=4, max_len=32, prefill_buckets=(8, 16))
+    batched = InferenceEngine(cfg, params, **kw)
+    got = _trace(cfg)
+    batched.run(got)
+    seedlike = InferenceEngine(cfg, params, max_prefill_batch=1, **kw)
+    ref = _trace(cfg)
+    seedlike.run(ref)
+
+    for a, b in zip(got, ref):               # same rng -> same prompts
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.output == b.output, a.rid   # token-identical responses
+
+    assert batched.telemetry.prefills == seedlike.telemetry.prefills == 8
+    assert seedlike.telemetry.prefill_batches == 8    # one per request
+    assert batched.telemetry.prefill_batches < 8      # grouped dispatches
+
+
+def test_prefill_executables_bounded_per_bucket(lm_setup):
+    """Groups are padded to the next power of two, so prefill executables
+    per bucket are bounded at log2(slots)+1 regardless of the free-slot
+    counts a trace produces (4 then 2 here -> two sizes, and a repeat of
+    either size reuses its executable)."""
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, batch_slots=4, max_len=32,
+                          prefill_buckets=(8, 16))
+    eng.run(_trace(cfg, n=6))          # admits groups of 4 then 2
+    assert eng.telemetry.prefill_batches == 2
+    assert eng.telemetry.compiles["prefill"] == 2     # P=4 and P=2
+    eng.run(_trace(cfg, n=6))          # same group sizes: all cache hits
+    assert eng.telemetry.compiles["prefill"] == 2
+
+
+def test_per_request_slo_flows_through_engine(lm_setup):
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, batch_slots=2, max_len=32,
+                          prefill_buckets=(8,), policy="edf",
+                          slo_ms=60_000.0)
+    eng.run(_trace(cfg, n=4, lens=(4, 5, 3, 6)))
+    assert eng.telemetry.sla_total == 4
+    assert eng.telemetry.sla_misses == 0      # minute-scale SLO on smoke
+    assert eng.telemetry.latency_percentiles()["p95"] > 0
+
+
+# ---- N-stage pipeline -----------------------------------------------------
+
+def test_nstage_pipeline_matches_sequential():
+    stages = [
+        ("load", lambda x, req: jnp.asarray(req, jnp.float32)),
+        ("double", jax.jit(lambda x, req: x * 2.0)),
+        ("inc", jax.jit(lambda x, req: x + 1.0)),
+        ("square", jax.jit(lambda x, req: x * x)),
+    ]
+    pipe = Pipeline(stages)
+    assert pipe.num_stages == 4
+    reqs = [float(i) for i in range(9)]
+    outs, _ = pipe.run(reqs)
+    outs_seq, _ = pipe.run_sequential(reqs)
+    expect = [(2.0 * r + 1.0) ** 2 for r in reqs]
+    for a, b, e in zip(outs, outs_seq, expect):
+        assert float(a) == float(b) == e
+
+
+def test_nstage_measure_times_every_stage():
+    pipe = Pipeline([("a", lambda x, r: jnp.float32(r)),
+                     ("b", jax.jit(lambda x, r: x + 1))])
+    _, stats = pipe.run([1.0, 2.0], measure=True)
+    assert set(stats.stage_time_s) == {"a", "b"}
+    assert all(v >= 0 for v in stats.stage_time_s.values())
+
+
+def test_two_stage_alias_back_compat():
+    pipe = TwoStagePipeline(lambda r: jnp.asarray(r) * 2.0,
+                            lambda s, r: s + 1.0)
+    assert pipe.stage_names == ["sparse", "dense"]
+    outs, stats = pipe.run([jnp.float32(i) for i in range(5)],
+                           measure=True)
+    assert [float(o) for o in outs] == [1.0, 3.0, 5.0, 7.0, 9.0]
+    assert stats.sparse_time_s >= 0 and stats.dense_time_s >= 0
+
+
+def test_steady_state_speedup_nstage():
+    assert steady_state_speedup(1.0, 1.0) == pytest.approx(2.0)
+    assert steady_state_speedup(1.0, 1.0, 2.0) == pytest.approx(2.0)
+    assert steady_state_speedup(1.0, 3.0) == pytest.approx(4.0 / 3.0)
+
+
+# ---- stage executor -------------------------------------------------------
+
+def test_executor_caches_per_stage_and_key():
+    tel = Telemetry()
+    ex = StageExecutor(tel)
+    builds = []
+
+    def builder(tag):
+        def build():
+            builds.append(tag)
+            return lambda x: x + tag
+        return build
+
+    assert ex.dispatch("add", 1, builder(1), 10) == 11
+    assert ex.dispatch("add", 1, builder(1), 20) == 21   # cache hit
+    assert ex.dispatch("add", 2, builder(2), 10) == 12   # new key
+    assert builds == [1, 2]
+    assert tel.compiles == {"add": 2}
+    assert tel.stage_calls == {"add": 3}
+    assert ex.cached_keys("add") == [("add", 1), ("add", 2)]
