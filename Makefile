@@ -1,17 +1,31 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test smoke bench ci
+.PHONY: test properties smoke smoke-router bench ci
 
 test:
 	python -m pytest -x -q
+
+# scheduler-policy invariants at a pinned seed (works with real
+# hypothesis or the conftest fallback shim)
+properties:
+	python -m pytest -q tests/test_scheduler_properties.py \
+	    --hypothesis-seed=0
 
 smoke:
 	python -m repro.launch.serve --arch deepseek-7b --smoke \
 	    --requests 6 --new-tokens 4 --slots 2
 	python -m repro.launch.serve --arch dlrm --smoke --requests 6
 
+# 2-replica ReplicaRouter smoke, both archs (priority policy on the LM)
+smoke-router:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 2 --replicas 2 \
+	    --policy priority --slo-ms 60000
+	python -m repro.launch.serve --arch dlrm --smoke --requests 6 \
+	    --replicas 2
+
 bench:
 	python -m benchmarks.run --only serving
 
-ci: test smoke bench
+ci: test properties smoke smoke-router bench

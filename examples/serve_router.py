@@ -1,0 +1,74 @@
+"""Multi-replica serving with priority classes and load shedding — the
+paper's deployment shape (six accelerator cards behind one host, mixed
+production traffic) on the unified runtime:
+
+1. a ReplicaRouter fronts 2 LM engine replicas and routes each request
+   by queue depth + deadline slack (fleet report at the end),
+2. traffic is a mix of latency-critical (priority 0, generous SLO) and
+   batch (priority 1, tight SLO) requests,
+3. the replicas run the preemption-free strict-priority+aging policy
+   with deadline-feasibility admission control, so under overload the
+   batch tickets that could only be served past their deadline are shed
+   (429-style) while the latency-critical class keeps its SLA.
+
+Run: PYTHONPATH=src python examples/serve_router.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import model as M
+from repro.serving.engine import Request, make_replicas
+from repro.serving.router import ReplicaRouter, spread
+
+cfg = reduce_for_smoke(get_config("deepseek-7b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+# -- build the fleet: 2 replicas, priority policy, feasibility shedding ----
+SERVICE_MS_EST = 80.0          # per-request estimate for the admission check
+replicas = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
+                         prefill_buckets=(8, 16), policy="priority",
+                         service_ms_est=SERVICE_MS_EST)
+router = ReplicaRouter(replicas)
+
+# -- warm-up: compile every stage so the admission estimate reflects
+#    steady-state service time, not first-call compilation ----------------
+rng = np.random.default_rng(0)
+warm = [Request(100 + i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new_tokens=4) for i in range(8)]
+for r in warm:
+    router.submit(r)
+router.run_until_drained()
+for rep in replicas:
+    rep.telemetry.reset_serving_stats()
+router = ReplicaRouter(replicas)
+
+# -- mixed traffic at ~3x capacity -----------------------------------------
+requests = []
+for i in range(24):
+    critical = i % 4 == 0
+    requests.append(Request(
+        i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+        max_new_tokens=4,
+        priority=0 if critical else 1,
+        # critical: room for the whole critical class; batch: ~6 services
+        slo_ms=60_000.0 if critical else SERVICE_MS_EST * 6))
+
+tickets = [router.submit(r) for r in requests]
+print(f"routed {router.routed} (spread {spread(router)}), "
+      f"shed {router.shed} of {len(requests)} at admission")
+
+router.run_until_drained()
+
+# -- per-class outcome ------------------------------------------------------
+for name, prio in (("critical", 0), ("batch", 1)):
+    ts = [t for r, t in zip(requests, tickets) if r.priority == prio]
+    served = [t for t in ts if not t.shed]
+    hits = [t for t in served
+            if t.deadline_t is None or t.finish_t <= t.deadline_t]
+    print(f"{name:9s} total={len(ts):2d} served={len(served):2d} "
+          f"shed={sum(t.shed for t in ts):2d} "
+          f"sla_attainment={len(hits) / max(len(served), 1):.2f}")
+
+print("\nfleet report:")
+print(router.report())

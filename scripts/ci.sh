@@ -1,21 +1,36 @@
 #!/usr/bin/env bash
-# Tier-1 CI: test suite + serving smoke runs + serving benchmark JSON.
-# The actual command lines live in the Makefile (single source).
+# Tier-1 CI: test suite + property-based scheduler invariants + serving
+# smoke runs (single-engine and 2-replica router, both archs) + serving
+# benchmark JSON. The actual command lines live in the Makefile (single
+# source).
 #
-#   scripts/ci.sh          # tests + smoke
-#   scripts/ci.sh --bench  # also emit results/BENCH_serving.json
+#   scripts/ci.sh          # tests + properties + smokes
+#   scripts/ci.sh --bench  # also emit + validate results/BENCH_serving.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== tier-1 pytest =="
 make test
 
+echo "== scheduler-policy property suite (seed 0) =="
+make properties
+
 echo "== serving smoke: LM (deepseek-7b) + DLRM =="
 make smoke
+
+echo "== router smoke: 2 replicas, LM (priority policy) + DLRM =="
+make smoke-router
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== serving benchmark (results/BENCH_serving.json) =="
     make bench
+    echo "== validate BENCH_serving.json schema =="
+    PYTHONPATH=src python -c "
+import json
+from benchmarks.bench_serving import JSON_PATH, validate_payload
+validate_payload(json.load(open(JSON_PATH)))
+print('schema OK:', JSON_PATH)
+"
 fi
 
 echo "CI OK"

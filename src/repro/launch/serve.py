@@ -5,13 +5,18 @@ paper's 4-stage pipelined recommendation engine (ingest→sparse→dense→post)
 
 Both paths share the scheduler/executor/telemetry stack
 (repro/serving/): pick an admission policy with ``--policy
-fifo|edf|sizetime`` and a latency SLA with ``--slo-ms`` to get SLA-miss
-accounting in the report.
+fifo|edf|sizetime|priority`` and a latency SLA with ``--slo-ms`` to get
+SLA-miss accounting in the report. ``--replicas N`` fronts N engine
+replicas with the ReplicaRouter (the paper's six-cards-behind-one-host
+deployment): tickets route by queue depth + deadline slack and the report
+is the fleet-level telemetry aggregate. ``--max-queue`` /
+``--service-ms-est`` turn on bounded-queue / deadline-feasibility
+admission control (shed requests are counted separately from misses).
 
 Real-cluster notes: per-host processes share the production mesh via
 jax.distributed.initialize(); the engine's slot batch maps to the
-data-parallel axis and requests are routed by a front-end balancer
-(the Glow runtime's multi-request queue, SecIV-C).
+data-parallel axis and the ReplicaRouter plays the Glow runtime's
+front-end balancer role (SecIV-C) across the per-card runtimes.
 """
 from __future__ import annotations
 
@@ -23,23 +28,47 @@ import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models import model as model_mod
-from repro.serving.engine import InferenceEngine, Request
+from repro.serving.engine import InferenceEngine, Request, make_replicas
+from repro.serving.router import ReplicaRouter
+
+
+def _lm_requests(args, cfg):
+    rng = np.random.default_rng(7)
+    lens = np.clip(rng.lognormal(3.0, 0.7, args.requests).astype(int), 3,
+                   args.max_len // 2)
+    # with the priority policy, tag ~1/4 of traffic latency-critical
+    # (class 0) and the rest batch (class 1) — the paper's mixed traffic
+    prios = (rng.integers(0, 4, args.requests) == 0).astype(int) ^ 1 \
+        if args.policy == "priority" else np.zeros(args.requests, int)
+    return [Request(i, rng.integers(0, cfg.vocab_size, l).astype(np.int32),
+                    max_new_tokens=args.new_tokens, priority=int(p))
+            for i, (l, p) in enumerate(zip(lens, prios))]
 
 
 def serve_lm(args):
     cfg = reduce_for_smoke(get_config(args.arch)) if args.smoke \
         else get_config(args.arch)
     params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
-    eng = InferenceEngine(cfg, params, batch_slots=args.slots,
-                          max_len=args.max_len,
-                          prefill_buckets=(16, 32, 64, 128),
-                          policy=args.policy, slo_ms=args.slo_ms)
-    rng = np.random.default_rng(7)
-    lens = np.clip(rng.lognormal(3.0, 0.7, args.requests).astype(int), 3,
-                   args.max_len // 2)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size, l).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
-            for i, l in enumerate(lens)]
+    kw = dict(batch_slots=args.slots, max_len=args.max_len,
+              prefill_buckets=(16, 32, 64, 128), policy=args.policy,
+              slo_ms=args.slo_ms, max_queue=args.max_queue,
+              service_ms_est=args.service_ms_est)
+    reqs = _lm_requests(args, cfg)
+    if args.replicas > 1:
+        router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
+                                             **kw))
+        t0 = time.perf_counter()
+        for r in reqs:
+            router.submit(r)
+        router.run_until_drained()
+        tel = router.fleet_telemetry()
+        wall = time.perf_counter() - t0
+        print(f"fleet served {tel.served} requests in {wall:.2f}s "
+              f"across {args.replicas} replicas "
+              f"(routed {router.routed}, shed {router.shed})")
+        print(router.report())
+        return tel
+    eng = InferenceEngine(cfg, params, **kw)
     t0 = time.perf_counter()
     eng.run(reqs)
     wall = time.perf_counter() - t0
@@ -57,15 +86,34 @@ def serve_dlrm(args):
     from repro.data.synthetic import dlrm_batches
     from repro.models import dlrm as dlrm_mod
     from repro.serving.dlrm_engine import DLRMEngine
+    from repro.serving.dlrm_engine import make_replicas as dlrm_replicas
     cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_COMPLEX) if args.smoke \
         else dlrm_paper.PAPER_COMPLEX
     asn = dlrm_mod.make_assignment(cfg, 6)
     params = dlrm_mod.init_dlrm(cfg, asn, jax.random.PRNGKey(0),
                                 quantize=True)
-    eng = DLRMEngine(cfg, asn, params, policy=args.policy,
-                     slo_ms=args.slo_ms)
+    kw = dict(policy=args.policy, slo_ms=args.slo_ms,
+              max_queue=args.max_queue, service_ms_est=args.service_ms_est)
     batches = [next(dlrm_batches(cfg, 64, seed=s))
                for s in range(args.requests)]
+    if args.replicas > 1:
+        router = ReplicaRouter(dlrm_replicas(cfg, asn, params,
+                                             args.replicas, **kw))
+        # full-trace warm-up per replica (T6 unpack compiles per distinct
+        # used-prefix shape), excluded from latency/transfer stats
+        for rep in router.replicas:
+            rep.serve(batches, pipelined=True, warm=True)
+            rep.telemetry.reset_serving_stats()
+        for b in batches:
+            router.submit(b)
+        router.run_until_drained()
+        tel = router.fleet_telemetry()
+        print(f"fleet served {tel.served} batches x64 across "
+              f"{args.replicas} replicas (routed {router.routed}, "
+              f"shed {router.shed})")
+        print(router.report())
+        return tel
+    eng = DLRMEngine(cfg, asn, params, **kw)
     # full-trace warm-up: the T6 unpack compiles per distinct used-prefix
     # shape, so a partial warm would report compile stalls as serving
     # latency; excluded from transfer + latency stats
@@ -88,9 +136,16 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--policy", default="fifo",
-                    choices=("fifo", "edf", "sizetime"))
+                    choices=("fifo", "edf", "sizetime", "priority"))
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request latency SLA for EDF + miss accounting")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N engine replicas with the ReplicaRouter")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded queue: shed submits past this depth")
+    ap.add_argument("--service-ms-est", type=float, default=None,
+                    help="per-ticket service estimate for deadline-"
+                         "feasibility shedding")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full-config", dest="smoke", action="store_false")
     args = ap.parse_args(argv)

@@ -16,14 +16,23 @@
 - ``dlrm_engine.py``— DLRM engine: 4-stage ingest→sparse→dense→post
   instance of the N-stage pipeline (core/pipeline.py) with the T6
   transfer path as stage 0.
+- ``router.py``     — ReplicaRouter: front-end balancer over N engine
+  replicas (the paper's six-cards-behind-one-host deployment) routing by
+  queue depth + deadline slack, with fleet-level telemetry aggregation
+  (``Telemetry.merged``). Priority classes + admission-control shedding
+  live in the scheduler (``priority`` policy, ``max_queue`` /
+  ``service_ms_est``).
 
 The N-stage software-pipeline driver itself lives in
 ``repro/core/pipeline.py`` (paper T2, Fig. 6 generalized).
 """
 from repro.serving.executor import StageExecutor
+from repro.serving.router import ReplicaRouter
 from repro.serving.scheduler import (NO_SLO, EDFPolicy, FIFOPolicy, Policy,
-                                     Scheduler, SizeTimePolicy, Ticket)
+                                     PriorityAgingPolicy, Scheduler,
+                                     SizeTimePolicy, Ticket)
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["StageExecutor", "Scheduler", "Ticket", "Policy", "FIFOPolicy",
-           "EDFPolicy", "SizeTimePolicy", "Telemetry", "NO_SLO"]
+           "EDFPolicy", "SizeTimePolicy", "PriorityAgingPolicy",
+           "ReplicaRouter", "Telemetry", "NO_SLO"]

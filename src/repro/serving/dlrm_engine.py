@@ -42,6 +42,11 @@ class DLRMEngine:
     partial_transfers: bool = True
     policy: str = "fifo"
     slo_ms: Optional[float] = None
+    max_queue: Optional[int] = None
+    service_ms_est: Optional[float] = None
+    step_group: int = 4       # max batches admitted per step_once (router
+                              # interleaving granularity; >=2 keeps the T2
+                              # stage overlap alive within a step)
     transfer_stats: TransferStats = field(default_factory=TransferStats)
 
     def __post_init__(self):
@@ -50,7 +55,9 @@ class DLRMEngine:
         self.stats = self.telemetry
         self.executor = StageExecutor(self.telemetry)
         self.scheduler = Scheduler(self.policy, telemetry=self.telemetry,
-                                   default_slo_ms=self.slo_ms)
+                                   default_slo_ms=self.slo_ms,
+                                   max_queue=self.max_queue,
+                                   service_ms_est=self.service_ms_est)
         self._collect_transfer_stats = True
 
         def build_sparse():
@@ -91,6 +98,38 @@ class DLRMEngine:
         idx_dev, len_dev = mover(sb, stats)
         return {"sls": (idx_dev, len_dev),
                 "dense": jnp.asarray(batch["dense"])}
+
+    # ---- replica protocol (ReplicaRouter) --------------------------------
+    def submit(self, batch: Dict[str, np.ndarray], *,
+               slo_ms: Optional[float] = None,
+               priority: Optional[int] = None):
+        """Enqueue one raw host batch; returns the scheduler ticket
+        (``shed=True`` if admission control rejected it)."""
+        return self.scheduler.submit(batch, size=len(batch["lengths"]),
+                                     slo_ms=slo_ms,
+                                     priority=priority or 0)
+
+    @property
+    def inflight(self) -> int:
+        return 0          # the pipeline pass in step_once is synchronous
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.depth > 0
+
+    def step_once(self) -> List[Any]:
+        """Admit one policy-formed group (at most ``step_group`` batches,
+        so a routed fleet actually interleaves replica steps instead of
+        serially draining whole queues) and run it through the 4-stage
+        pipeline, completing tickets as outputs realize."""
+        group = self.scheduler.admit(min(self.scheduler.depth,
+                                         self.step_group))
+        if not group:
+            return []
+        done = lambda i, _v: self.scheduler.complete(group[i])
+        outs, _ = self._pipeline.run([t.payload for t in group],
+                                     on_result=done)
+        return outs
 
     def serve(self, batches: Sequence[Dict[str, np.ndarray]],
               pipelined: bool = True, warm: bool = False,
@@ -153,3 +192,12 @@ class DLRMEngine:
             self._collect_transfer_stats = True
             self.telemetry.stage_calls = calls
             self.telemetry.stage_dispatch_s = disp
+
+
+def make_replicas(cfg: DLRMConfig, assignment: TableAssignment, params: Any,
+                  n: int, **engine_kw) -> List["DLRMEngine"]:
+    """N DLRM engine replicas sharing one set of (quantized) tables and
+    dense weights — the paper's multiple-cards-per-host deployment.
+    Front with ``ReplicaRouter``."""
+    return [DLRMEngine(cfg, assignment, params, **engine_kw)
+            for _ in range(n)]

@@ -40,10 +40,12 @@ class Request:
     tokens: np.ndarray                 # prompt token ids (L,)
     max_new_tokens: int = 16
     slo_ms: Optional[float] = None     # per-request latency SLA
+    priority: int = 0                  # 0 = most important (priority policy)
     output: List[int] = field(default_factory=list)
     enqueue_t: float = 0.0
     finish_t: float = 0.0
     done: bool = False
+    shed: bool = False                 # rejected by admission control
 
     @property
     def latency_ms(self) -> float:
@@ -73,7 +75,9 @@ class InferenceEngine:
                  max_len: int = 256,
                  prefill_buckets: Sequence[int] = (32, 64, 128),
                  policy: str = "fifo", slo_ms: Optional[float] = None,
-                 max_prefill_batch: Optional[int] = None):
+                 max_prefill_batch: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 service_ms_est: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -92,7 +96,9 @@ class InferenceEngine:
             # compiled dispatches
             policy = SizeTimePolicy(self.buckets)
         self.scheduler = Scheduler(policy, telemetry=self.telemetry,
-                                   default_slo_ms=slo_ms)
+                                   default_slo_ms=slo_ms,
+                                   max_queue=max_queue,
+                                   service_ms_est=service_ms_est)
 
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)
@@ -152,10 +158,34 @@ class InferenceEngine:
         multiple compiled dispatches."""
         return min(len(req.tokens), self.max_len - req.max_new_tokens - 1)
 
-    def submit(self, req: Request):
-        t = self.scheduler.submit(req, size=self._eff_len(req),
-                                  slo_ms=req.slo_ms)
+    def submit(self, req: Request, *, slo_ms: Optional[float] = None,
+               priority: Optional[int] = None) -> Ticket:
+        """Enqueue a request; keyword overrides beat the request's own
+        slo/priority fields (router path). Returns the scheduler ticket —
+        ``shed=True`` means admission control rejected it (the request is
+        marked ``shed`` and will never be served)."""
+        t = self.scheduler.submit(
+            req, size=self._eff_len(req),
+            slo_ms=slo_ms if slo_ms is not None else req.slo_ms,
+            priority=priority if priority is not None else req.priority)
         req.enqueue_t = t.enqueue_t
+        req.shed = t.shed
+        return t
+
+    # ---- replica protocol (ReplicaRouter) --------------------------------
+    @property
+    def inflight(self) -> int:
+        return len(self.active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.depth or self.active)
+
+    def step_once(self):
+        """One unit of forward progress: refill freed slots, then one
+        decode step across the active batch."""
+        self._admit()
+        self._step()
 
     def _admit(self):
         """Refill freed slots: admit up to len(free) tickets, group them by
@@ -227,6 +257,10 @@ class InferenceEngine:
                     or self.pos[s] >= self.max_len - 1:
                 req.done = True
                 self.scheduler.complete(t)
+                # sync from the ticket, whose stamps are authoritative —
+                # rebase_pending (run_concurrent) may have shifted
+                # enqueue_t after submit stamped the request
+                req.enqueue_t = t.enqueue_t
                 req.finish_t = t.finish_t
                 del self.active[s]
                 self.free.append(s)
@@ -235,8 +269,15 @@ class InferenceEngine:
         for r in requests:
             self.submit(r)
         t0 = time.perf_counter()
-        while self.scheduler.depth or self.active:
-            self._admit()
-            self._step()
+        while self.has_work:
+            self.step_once()
         self.telemetry.record_serving_window(time.perf_counter() - t0)
         return list(requests)
+
+
+def make_replicas(cfg: ModelConfig, params, n: int,
+                  **engine_kw) -> List[InferenceEngine]:
+    """N LM engine replicas sharing one set of weights (the paper's
+    data-parallel deployment: same model on each card, distinct KV caches
+    and runtime queues). Front with ``ReplicaRouter``."""
+    return [InferenceEngine(cfg, params, **engine_kw) for _ in range(n)]

@@ -1,0 +1,165 @@
+"""Replica router — the front-end balancer above N engine replicas.
+
+The paper serves mixed production traffic across six accelerator cards
+behind one host (§IV deployment): a host-side router places each request
+on one card's runtime queue. This module is that layer for our unified
+runtime: a ``ReplicaRouter`` fronts N replicas (LM ``InferenceEngine`` or
+``DLRMEngine`` — anything satisfying the small replica protocol below),
+routes each ticket by **queue depth and deadline slack**, and aggregates
+per-replica telemetry into one fleet-level QPS / p50-p95-p99 / SLA-miss /
+shed surface (``Telemetry.merged``).
+
+Replica protocol (duck-typed; both engines implement it):
+
+- ``submit(item, ...) -> Ticket``  — enqueue one unit of work; the
+  returned ticket has ``shed=True`` if the replica's admission control
+  rejected it,
+- ``step_once()``                  — make one unit of forward progress
+  (admit + serve),
+- ``has_work`` (property)          — queued or in-flight work remains,
+- ``inflight`` (property)          — admitted-but-unfinished count,
+- ``scheduler`` / ``telemetry``    — the shared runtime objects.
+
+Routing rule (deterministic, so the property tests can state a bound):
+
+1. load(replica) = queue depth + in-flight count; candidates are the
+   replicas at minimum load — a submit therefore always lands on a
+   current minimum, which bounds the ticket-count spread across replicas
+   by max(1, initial spread) under any arrival sequence.
+2. Among equal-load candidates, a deadline-carrying ticket goes to the
+   candidate with the fewest pending deadline tickets (spread the
+   urgent traffic so one replica's queue doesn't accumulate all the
+   tight-slack work), ties and best-effort tickets round-robin.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Sequence
+
+from repro.serving.scheduler import Ticket
+from repro.serving.telemetry import Telemetry
+
+
+class ReplicaRouter:
+    """Least-loaded, deadline-slack-aware balancer over engine replicas."""
+
+    def __init__(self, replicas: Sequence[Any]):
+        if not replicas:
+            raise ValueError("ReplicaRouter needs at least one replica")
+        self.replicas = list(replicas)
+        self.routed = [0] * len(self.replicas)   # submits per replica
+        self.shed = 0                            # fleet admission rejections
+        self._rr = 0                             # round-robin tie cursor
+        self._serving_s = 0.0
+
+    # ---- routing ---------------------------------------------------------
+    def load(self, i: int) -> int:
+        r = self.replicas[i]
+        return r.scheduler.depth + r.inflight
+
+    def _deadline_depth(self, i: int) -> int:
+        return self.replicas[i].scheduler.deadline_depth
+
+    def route(self, *, has_deadline: bool = False) -> int:
+        """Pick the replica index for the next ticket (see module doc)."""
+        loads = [self.load(i) for i in range(len(self.replicas))]
+        m = min(loads)
+        cand = [i for i, l in enumerate(loads) if l == m]
+        if has_deadline and len(cand) > 1:
+            dd = [self._deadline_depth(i) for i in cand]
+            dmin = min(dd)
+            cand = [i for i, d in zip(cand, dd) if d == dmin]
+        # rotate the round-robin cursor over the surviving candidates
+        pick = cand[self._rr % len(cand)]
+        self._rr += 1
+        return pick
+
+    def submit(self, item: Any, *, slo_ms: Optional[float] = None,
+               priority: Optional[int] = None, **kw) -> Ticket:
+        """Route + enqueue one item; returns the replica's ticket (check
+        ``.shed`` when the replicas run admission control). ``None``
+        slo/priority defer to the item's own fields (LM Requests) or the
+        replica defaults."""
+        has_deadline = (slo_ms is not None
+                        or getattr(item, "slo_ms", None) is not None
+                        or any(r.scheduler.default_slo_ms is not None
+                               for r in self.replicas))
+        i = self.route(has_deadline=has_deadline)
+        t = self.replicas[i].submit(item, slo_ms=slo_ms,
+                                    priority=priority, **kw)
+        if t.shed:
+            self.shed += 1
+        else:
+            self.routed[i] += 1
+        return t
+
+    # ---- driving ---------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return any(r.has_work for r in self.replicas)
+
+    def run_until_drained(self):
+        """Drive every replica to completion, one step each per round.
+        Live-host semantics: wall time is shared, so with k replicas on
+        one device each request's measured latency includes the other
+        replicas' serialized compute — use ``run_concurrent`` when the
+        point is fleet latency as N concurrent cards would deliver it."""
+        t0 = time.perf_counter()
+        while self.has_work:
+            for r in self.replicas:
+                if r.has_work:
+                    r.step_once()
+        self._serving_s += time.perf_counter() - t0
+
+    def run_concurrent(self):
+        """Single-host emulation of N concurrent cards: drain each replica
+        to completion in turn, re-basing its pending tickets' enqueue /
+        deadline stamps to its own drain start (replicas share no state
+        after routing, so a full sequential drain is execution-equivalent
+        to the concurrent one). Each request's latency is then queue wait
+        + service on its *own* card, and the fleet serving window is the
+        slowest replica's drain — what N cards behind one host deliver.
+        Requires a fully-routed, not-yet-started fleet (no in-flight
+        work)."""
+        busiest = 0.0
+        for r in self.replicas:
+            if r.inflight:
+                raise RuntimeError("run_concurrent needs an idle fleet; "
+                                   "use run_until_drained mid-flight")
+            t0 = time.perf_counter()
+            r.scheduler.rebase_pending(t0)
+            while r.has_work:
+                r.step_once()
+            took = time.perf_counter() - t0
+            r.telemetry.record_serving_window(took)
+            busiest = max(busiest, took)
+        self._serving_s += busiest
+
+    # ---- fleet telemetry -------------------------------------------------
+    def fleet_telemetry(self) -> Telemetry:
+        """One fleet-level surface over all replicas (pooled samples, see
+        ``Telemetry.merged``). The serving window is the router's own
+        drain wall time when it drove the fleet (replica windows overlap
+        in real time, so summing them would understate fleet QPS)."""
+        fleet = Telemetry.merged([r.telemetry for r in self.replicas])
+        if self._serving_s > 0:
+            fleet.serving_s = self._serving_s
+        return fleet
+
+    def summary(self) -> dict:
+        out = self.fleet_telemetry().summary()
+        out["replicas"] = len(self.replicas)
+        out["routed_per_replica"] = list(self.routed)
+        return out
+
+    def report(self) -> str:
+        lines = [f"fleet of {len(self.replicas)} replicas, routed "
+                 f"{self.routed} (+{self.shed} shed)",
+                 self.fleet_telemetry().report()]
+        return "\n".join(lines)
+
+
+def spread(router: ReplicaRouter) -> int:
+    """Max-min routed-ticket imbalance — the bound the property tests
+    assert on (≤ 1 for any pure submit sequence from an empty fleet)."""
+    return max(router.routed) - min(router.routed)

@@ -12,7 +12,25 @@ tickets to admit when the engine reports free capacity:
                    padded size falls in the same bucket so one compiled
                    executable serves the whole admitted batch, scoring
                    groups by (members waiting) x (age of oldest) so big
-                   coherent batches win but nothing starves.
+                   coherent batches win but nothing starves,
+- ``priority``   — preemption-free strict priority with linear aging
+                   (paper: mixed production traffic; 1811.09886 finds
+                   co-locating latency-critical and batch traffic without
+                   priority isolation is the dominant SLA-miss cause).
+                   A ticket of priority ``p`` outranks every fresher
+                   ticket of priority ``q > p``; aging guarantees bounded
+                   starvation — after waiting ``p * aging_s`` seconds a
+                   ticket outranks any freshly-arrived priority-0 ticket.
+
+Backpressure / load shedding (429-style): give the scheduler a
+``max_queue`` bound and/or a per-ticket service-time estimate
+(``service_ms_est``) and ``submit`` *sheds* tickets that either overflow
+the queue or provably cannot meet their deadline — the feasibility check
+charges each ticket the estimated service time of every pending ticket
+that outranks it (same or better priority class). Shed tickets are
+returned with ``shed=True``, are never enqueued (so they can never reach
+``admit`` or consume an executor dispatch), and are counted in a
+*rejection* counter separate from SLA misses.
 
 Completion flows back through the scheduler so latency / SLA-miss
 accounting lands in the shared Telemetry regardless of engine.
@@ -39,10 +57,12 @@ class Ticket:
     tid: int
     payload: Any
     size: int = 0                       # tokens / rows — policy hint
+    priority: int = 0                   # 0 = most important (like nice)
     enqueue_t: float = 0.0
     deadline_t: Optional[float] = None  # absolute perf_counter deadline
     admit_t: float = 0.0
     finish_t: float = 0.0
+    shed: bool = False                  # rejected at admission (429)
 
     @property
     def latency_ms(self) -> float:
@@ -50,6 +70,11 @@ class Ticket:
 
     def age(self, now: float) -> float:
         return now - self.enqueue_t
+
+    def slack_s(self, now: float) -> float:
+        """Time left until the deadline (inf for best-effort tickets)."""
+        return (math.inf if self.deadline_t is None
+                else self.deadline_t - now)
 
 
 # ---- admission policies ---------------------------------------------------
@@ -100,10 +125,38 @@ class SizeTimePolicy(Policy):
         return best[:k]
 
 
+class PriorityAgingPolicy(Policy):
+    """Preemption-free strict priority with linear aging.
+
+    Rank key is ``priority - age / aging_s``: a fresh priority-0 ticket
+    scores 0, so a priority-``p`` ticket outranks *any* fresh
+    priority-0 arrival once it has waited more than ``p * aging_s``
+    seconds. That bounds starvation: under continuous admission a
+    ticket waits at most ``p * aging_s`` longer than the work already
+    ahead of it, however many higher-class tickets keep arriving.
+    Within a class (equal effective rank), ties break by arrival order
+    then tid, so the policy is deterministic under a virtual clock.
+    """
+
+    def __init__(self, aging_s: float = 1.0):
+        if aging_s <= 0:
+            raise ValueError("aging_s must be positive")
+        self.aging_s = aging_s
+
+    def rank(self, t: Ticket, now: float) -> float:
+        return t.priority - t.age(now) / self.aging_s
+
+    def select(self, pending, k, now):
+        ranked = sorted(pending, key=lambda t: (self.rank(t, now),
+                                                t.enqueue_t, t.tid))
+        return ranked[:k]
+
+
 POLICIES: Dict[str, Callable[[], Policy]] = {
     "fifo": FIFOPolicy,
     "edf": EDFPolicy,
     "sizetime": SizeTimePolicy,
+    "priority": PriorityAgingPolicy,
 }
 
 
@@ -125,36 +178,77 @@ class Scheduler:
     Engines call ``submit`` on arrival, ``admit(k)`` when k units of
     capacity free up (continuous batching: every freed slot triggers a
     refill attempt), and ``complete`` when a ticket's response is done.
+
+    Admission control (both optional, off by default):
+
+    - ``max_queue``       — bounded queue: submits past the bound shed,
+    - ``service_ms_est``  — estimated per-ticket service time; a ticket
+      whose deadline slack cannot cover the estimated service of every
+      pending ticket in the same-or-better priority class *plus its own*
+      is shed at submit time (it would only be served to miss).
+
+    Shed tickets come back with ``shed=True``, never enter the queue,
+    and count in ``telemetry.shed`` — not in SLA misses.
     """
 
     def __init__(self, policy: str | Policy = "fifo", *,
                  telemetry: Optional[Telemetry] = None,
-                 default_slo_ms: Optional[float] = None):
+                 default_slo_ms: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 service_ms_est: Optional[float] = None):
         self.policy = make_policy(policy)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.default_slo_ms = default_slo_ms
+        self.max_queue = max_queue
+        self.service_ms_est = service_ms_est
         self._pending: List[Ticket] = []
         self._ids = itertools.count()
 
     # -- queue side --------------------------------------------------------
-    def submit(self, payload: Any, *, size: int = 0,
+    def _infeasible(self, t: Ticket, now: float) -> bool:
+        """Deadline-feasibility: can ``t`` still meet its SLA behind the
+        pending work that outranks it? Work ahead = pending tickets of
+        the same or a better (numerically <=) priority class — under the
+        priority policy those are served first, and under FIFO/EDF every
+        ticket is class 0 so this is simply the whole queue."""
+        if self.service_ms_est is None or t.deadline_t is None:
+            return False
+        ahead = sum(1 for p in self._pending if p.priority <= t.priority)
+        need_s = (ahead + 1) * self.service_ms_est / 1e3
+        return t.slack_s(now) < need_s
+
+    def submit(self, payload: Any, *, size: int = 0, priority: int = 0,
                slo_ms: Optional[float] = None,
                now: Optional[float] = None) -> Ticket:
         """Enqueue a payload. ``slo_ms=None`` inherits ``default_slo_ms``;
         pass ``NO_SLO`` for an explicitly deadline-less (best-effort)
-        ticket that never counts toward SLA accounting."""
+        ticket that never counts toward SLA accounting. The returned
+        ticket has ``shed=True`` (and is NOT queued) if admission control
+        rejected it — callers opting into ``max_queue`` /
+        ``service_ms_est`` must check."""
         now = time.perf_counter() if now is None else now
         slo = slo_ms if slo_ms is not None else self.default_slo_ms
         deadline = (now + slo / 1e3) if slo is not None \
             and math.isfinite(slo) else None
-        t = Ticket(next(self._ids), payload, size=size, enqueue_t=now,
-                   deadline_t=deadline)
+        t = Ticket(next(self._ids), payload, size=size, priority=priority,
+                   enqueue_t=now, deadline_t=deadline)
+        if (self.max_queue is not None
+                and len(self._pending) >= self.max_queue) \
+                or self._infeasible(t, now):
+            t.shed = True
+            self.telemetry.record_shed()
+            return t
         self._pending.append(t)
         return t
 
     @property
     def depth(self) -> int:
         return len(self._pending)
+
+    @property
+    def deadline_depth(self) -> int:
+        """Pending tickets that carry a deadline (router slack routing)."""
+        return sum(1 for t in self._pending if t.deadline_t is not None)
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -172,6 +266,21 @@ class Scheduler:
         for t in chosen:
             t.admit_t = now
         return chosen
+
+    def rebase_pending(self, now: Optional[float] = None):
+        """Shift every pending ticket's enqueue/deadline stamp so its age
+        is zero at ``now`` — the single-host emulation of a card whose
+        queue was handed over at routing time but which starts working at
+        ``now`` (``ReplicaRouter.run_concurrent`` drains replicas one
+        after another and uses this to keep each replica's latencies on
+        its own timeline). Only valid before any admission: callers must
+        not rebase a queue with admitted-but-unfinished work."""
+        now = time.perf_counter() if now is None else now
+        for t in self._pending:
+            dt = now - t.enqueue_t
+            t.enqueue_t = now
+            if t.deadline_t is not None:
+                t.deadline_t += dt
 
     def complete(self, ticket: Ticket, now: Optional[float] = None):
         """Stamp finish time and fold latency/SLA into telemetry."""

@@ -48,6 +48,7 @@ class Telemetry:
     latencies_ms: List[float] = field(default_factory=list)
     sla_misses: int = 0
     sla_total: int = 0             # completions that carried a deadline
+    shed: int = 0                  # admission rejections (429) — NOT misses
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -70,6 +71,13 @@ class Telemetry:
         if len(self.queue_depths) > MAX_SAMPLES:
             del self.queue_depths[:-MAX_SAMPLES]
 
+    def record_shed(self):
+        """One admission rejection (ticket shed before it was queued).
+        Deliberately separate from SLA misses: a shed ticket never ran,
+        so it must not pollute latency percentiles or the miss fraction
+        the feasibility check is calibrated against."""
+        self.shed += 1
+
     def record_latency(self, latency_ms: float,
                        deadline_missed: Optional[bool] = None):
         self.latencies_ms.append(latency_ms)
@@ -88,7 +96,7 @@ class Telemetry:
         self.served = self.steps = self.prefills = 0
         self.prefill_batches = self.total_tokens = 0
         self.latencies_ms = []
-        self.sla_misses = self.sla_total = 0
+        self.sla_misses = self.sla_total = self.shed = 0
         self.queue_depths = []
         self.stage_calls = {}
         self.stage_dispatch_s = {}
@@ -126,6 +134,43 @@ class Telemetry:
     def mean_queue_depth(self) -> float:
         return sum(self.queue_depths) / max(len(self.queue_depths), 1)
 
+    # ---- fleet aggregation ----------------------------------------------
+    @classmethod
+    def merged(cls, parts: List["Telemetry"]) -> "Telemetry":
+        """Fleet-level aggregate of per-replica telemetry (the router's
+        one QPS / p50-p95-p99 / SLA-miss surface over N replicas).
+
+        Raw latency / queue-depth samples are *pooled*, not re-binned, so
+        fleet percentiles are exactly the percentiles of the union of the
+        replicas' samples. Counters sum; ``serving_s`` takes the longest
+        replica window (replicas serve concurrently, so the fleet window
+        is the slowest replica's, and fleet QPS = total served / that).
+        The merge is a snapshot — don't keep recording into it.
+        """
+        out = cls()
+        if not parts:
+            return out
+        for p in parts:
+            out.served += p.served
+            out.steps += p.steps
+            out.prefills += p.prefills
+            out.prefill_batches += p.prefill_batches
+            out.total_tokens += p.total_tokens
+            out.sla_misses += p.sla_misses
+            out.sla_total += p.sla_total
+            out.shed += p.shed
+            out.latencies_ms.extend(p.latencies_ms)
+            out.queue_depths.extend(p.queue_depths)
+            for k, v in p.compiles.items():
+                out.compiles[k] = out.compiles.get(k, 0) + v
+            for k, v in p.stage_calls.items():
+                out.stage_calls[k] = out.stage_calls.get(k, 0) + v
+            for k, v in p.stage_dispatch_s.items():
+                out.stage_dispatch_s[k] = out.stage_dispatch_s.get(k, 0.0) + v
+        out.serving_s = max(p.serving_s for p in parts)
+        out.wall_start = min(p.wall_start for p in parts)
+        return out
+
     def summary(self) -> Dict[str, float]:
         """Flat dict for JSON emission (benchmarks/BENCH_serving.json)."""
         out = {"served": self.served, "qps": self.qps(),
@@ -134,6 +179,7 @@ class Telemetry:
                "total_tokens": self.total_tokens,
                "compile_count": self.compile_count,
                "sla_miss_frac": self.sla_miss_frac,
+               "shed": self.shed,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
@@ -153,6 +199,8 @@ class Telemetry:
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")
+        if self.shed:
+            lines.append(f"shed {self.shed} requests at admission (429)")
         if self.compiles:
             c = ", ".join(f"{k}={v}" for k, v in sorted(self.compiles.items()))
             lines.append(f"compiled stages: {c}")

@@ -96,7 +96,49 @@ _install_hypothesis_fallback()
 import jax      # noqa: E402
 import pytest   # noqa: E402
 
+
+def pytest_addoption(parser):
+    # CI runs ``pytest tests/test_scheduler_properties.py
+    # --hypothesis-seed=0``. With the real package that option comes from
+    # the hypothesis pytest plugin; the fallback shim (deterministic,
+    # seed-0 by construction) must accept it too or the CI line dies on
+    # an unknown argument.
+    import sys
+    if getattr(sys.modules.get("hypothesis"), "__is_fallback__", False):
+        parser.addoption(
+            "--hypothesis-seed", action="store", default=None,
+            help="accepted for CI parity; the hypothesis fallback shim "
+                 "is already deterministic (numpy seed 0)")
+
 jax.config.update("jax_enable_x64", False)
+
+
+class StubReplica:
+    """Minimal ReplicaRouter replica-protocol object for clock-free
+    router tests (shared by test_scheduler_properties / test_router):
+    a bare FIFO scheduler whose step admits and instantly completes one
+    ticket."""
+
+    def __init__(self, **sched_kw):
+        from repro.serving.scheduler import Scheduler
+        self.scheduler = Scheduler("fifo", **sched_kw)
+        self.telemetry = self.scheduler.telemetry
+
+    @property
+    def inflight(self):
+        return 0
+
+    @property
+    def has_work(self):
+        return self.scheduler.depth > 0
+
+    def step_once(self):
+        for t in self.scheduler.admit(1):
+            self.scheduler.complete(t)
+
+    def submit(self, item, *, slo_ms=None, priority=None, **kw):
+        return self.scheduler.submit(item, slo_ms=slo_ms,
+                                     priority=priority or 0)
 
 
 @pytest.fixture(scope="session")

@@ -23,6 +23,7 @@ def _run(script, *args, timeout=420):
     ("examples/quickstart.py", ()),
     ("examples/quantization_workflow.py", ()),
     ("examples/serve_recsys.py", ("--batches", "4")),
+    ("examples/serve_router.py", ()),
 ])
 def test_example_runs(script, args):
     r = _run(script, *args)

@@ -1,0 +1,252 @@
+"""ReplicaRouter: routing rule, fleet telemetry aggregation, concurrent-
+drain semantics, priority/shedding through real engines, and the
+BENCH_serving.json schema/writability contract."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import model as M
+from repro.serving.engine import InferenceEngine, Request, make_replicas
+from repro.serving.router import ReplicaRouter, spread
+from repro.serving.telemetry import Telemetry, percentile
+
+
+from conftest import StubReplica as _Stub  # noqa: E402
+
+
+# ---- routing rule ---------------------------------------------------------
+
+def test_routes_to_least_loaded():
+    router = ReplicaRouter([_Stub(), _Stub(), _Stub()])
+    # preload replica 0 with 2 tickets, replica 1 with 1, out of band
+    router.replicas[0].submit("x"); router.replicas[0].submit("y")
+    router.replicas[1].submit("z")
+    t = router.submit("new")
+    assert t.tid == 0                       # replica 2's first ticket
+    assert router.replicas[2].scheduler.depth == 1
+
+
+def test_deadline_tiebreak_spreads_urgent_traffic():
+    router = ReplicaRouter([_Stub(), _Stub()])
+    # equal loads (1 each) but replica 0 holds the deadline ticket
+    router.replicas[0].submit("d", slo_ms=50.0)
+    router.replicas[1].submit("b")
+    router.submit("urgent", slo_ms=10.0)
+    assert router.replicas[1].scheduler.depth == 2   # spread, not piled
+
+
+def test_round_robin_on_full_ties():
+    router = ReplicaRouter([_Stub(), _Stub(), _Stub()])
+    for i in range(6):
+        router.submit(i)
+    assert router.routed == [2, 2, 2]
+    assert spread(router) == 0
+
+
+def test_router_requires_replicas():
+    with pytest.raises(ValueError):
+        ReplicaRouter([])
+
+
+# ---- fleet telemetry aggregation (satellite: pooled percentiles) ----------
+
+def test_fleet_percentiles_match_pooled_raw_samples():
+    """Fleet p50/p95/p99 from Telemetry.merged must equal percentiles
+    computed directly from the pooled per-replica raw samples."""
+    rng = np.random.default_rng(42)
+    parts, pooled = [], []
+    for _ in range(3):
+        t = Telemetry()
+        samples = rng.lognormal(3.0, 1.0, rng.integers(5, 200)).tolist()
+        for s in samples:
+            t.record_latency(s, deadline_missed=bool(rng.integers(0, 2)))
+        parts.append(t)
+        pooled.extend(samples)
+    fleet = Telemetry.merged(parts)
+    got = fleet.latency_percentiles()
+    ref = sorted(pooled)
+    for p, key in ((0.50, "p50"), (0.95, "p95"), (0.99, "p99")):
+        assert got[key] == percentile(ref, p)
+    assert got["max"] == max(pooled)
+    assert fleet.sla_total == sum(p.sla_total for p in parts)
+    assert fleet.sla_misses == sum(p.sla_misses for p in parts)
+    assert fleet.served == 0                # no served++ through record
+
+
+def test_merged_counters_and_compiles_sum():
+    a, b = Telemetry(), Telemetry()
+    a.served, b.served = 3, 4
+    a.record_compile("prefill"); b.record_compile("prefill")
+    b.record_compile("decode")
+    a.record_shed(); a.record_shed(); b.record_shed()
+    a.serving_s, b.serving_s = 1.0, 2.5
+    m = Telemetry.merged([a, b])
+    assert m.served == 7
+    assert m.compiles == {"prefill": 2, "decode": 1}
+    assert m.shed == 3
+    assert m.serving_s == 2.5               # slowest replica window
+    assert "shed" in m.summary()
+
+
+def test_merged_empty_is_empty():
+    m = Telemetry.merged([])
+    assert m.served == 0 and m.latencies_ms == []
+
+
+# ---- LM engines behind the router ----------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _trace(cfg, n=8, slo_ms=None, prios=None):
+    rng = np.random.default_rng(11)
+    lens = (4, 6, 5, 7, 3, 6, 4, 5)
+    return [Request(i, rng.integers(0, cfg.vocab_size, l).astype(np.int32),
+                    max_new_tokens=3, slo_ms=slo_ms,
+                    priority=0 if prios is None else prios[i])
+            for i, l in enumerate(lens[:n])]
+
+
+def test_two_replica_lm_run(lm_setup):
+    cfg, params = lm_setup
+    reps = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
+                         prefill_buckets=(8, 16))
+    router = ReplicaRouter(reps)
+    reqs = _trace(cfg)
+    for r in reqs:
+        router.submit(r, slo_ms=60_000.0)
+    assert spread(router) <= 1
+    router.run_until_drained()
+    fleet = router.fleet_telemetry()
+    assert fleet.served == len(reqs)
+    assert all(r.done for r in reqs)
+    assert fleet.sla_total == len(reqs) and fleet.sla_misses == 0
+    s = router.summary()
+    assert s["replicas"] == 2 and sum(s["routed_per_replica"]) == len(reqs)
+
+
+def test_run_concurrent_rebases_per_replica_timelines(lm_setup):
+    """Sequentially-drained replicas must not charge each other's drain
+    time: with 2 replicas each serving half the trace, every request's
+    latency stays near the single-replica scale instead of growing by a
+    whole replica-drain."""
+    cfg, params = lm_setup
+    reps = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
+                         prefill_buckets=(8, 16))
+    router = ReplicaRouter(reps)
+    for r in _trace(cfg):
+        router.submit(r)
+    router.run_concurrent()
+    # after rebasing, a request's latency cannot exceed its own replica's
+    # drain window (plus stamping slack); without the rebase, replica 1's
+    # latencies would carry replica 0's whole window on top
+    for rep in reps:
+        assert max(rep.telemetry.latencies_ms) \
+            <= rep.telemetry.serving_s * 1e3 + 5.0
+    assert router.fleet_telemetry().served == 8
+
+
+def test_run_concurrent_refuses_inflight_fleet(lm_setup):
+    cfg, params = lm_setup
+    reps = make_replicas(cfg, params, 1, batch_slots=2, max_len=32,
+                         prefill_buckets=(8,))
+    router = ReplicaRouter(reps)
+    for r in _trace(cfg, n=4):
+        router.submit(r)
+    reps[0].step_once()                     # now in flight
+    with pytest.raises(RuntimeError):
+        router.run_concurrent()
+    router.run_until_drained()              # still drainable the live way
+
+
+def test_priority_and_shedding_through_lm_engine(lm_setup):
+    """Overload isolation end-to-end: strict-priority admission serves
+    class 0 first and the feasibility check sheds only class-1 traffic;
+    shed requests consume no prefill/decode dispatches."""
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, batch_slots=2, max_len=32,
+                          prefill_buckets=(8,), policy="priority",
+                          service_ms_est=50.0)
+    prios = [1, 1, 0, 1, 1, 0, 1, 1]
+    reqs = _trace(cfg, prios=prios)
+    for r, p in zip(reqs, prios):
+        # class 0: generous slo; class 1: infeasible once 2 are ahead
+        r.slo_ms = 60_000.0 if p == 0 else 150.0
+    tickets = [eng.submit(r) for r in reqs]
+    assert not any(t.shed for t, p in zip(tickets, prios) if p == 0)
+    assert any(t.shed for t, p in zip(tickets, prios) if p == 1)
+    dispatches_before = dict(eng.telemetry.stage_calls)
+    assert dispatches_before == {}          # nothing ran at submit time
+    while eng.has_work:
+        eng.step_once()
+    served = [r for r, t in zip(reqs, tickets) if not t.shed]
+    assert all(r.done for r in served)
+    assert eng.telemetry.served == len(served)
+    assert eng.telemetry.prefills == len(served)   # shed never prefilled
+    assert eng.telemetry.shed == sum(t.shed for t in tickets)
+
+
+# ---- BENCH_serving.json contract (satellite) ------------------------------
+
+def _fake_summary():
+    t = Telemetry()
+    t.record_latency(10.0, False)
+    return t.summary()
+
+
+def _fake_payload():
+    fleet = dict(_fake_summary(), replicas=1, routed_per_replica=[1])
+    cls = {"total": 1, "served": 1, "shed": 0, "sla_attainment": 1.0}
+    return {"lm": _fake_summary(),
+            "dlrm": dict(_fake_summary(), transfer_bytes_saved_frac=0.5),
+            "router": {"offered_load": 1, "slo_ms": 1.0, "single": fleet,
+                       "dual": fleet, "p99_improved": True,
+                       "misses_improved": True},
+            "overload": {"service_ms_est": 1.0, "high": cls, "low": cls}}
+
+
+def test_bench_payload_schema_validates():
+    from benchmarks.bench_serving import validate_payload
+    validate_payload(_fake_payload())       # telemetry summary == schema
+
+
+def test_bench_payload_schema_rejects_missing_keys():
+    from benchmarks.bench_serving import validate_payload
+    p = _fake_payload()
+    del p["router"]["single"]["latency_ms_p99"]
+    del p["overload"]["high"]["sla_attainment"]
+    with pytest.raises(ValueError) as ei:
+        validate_payload(p)
+    msg = str(ei.value)
+    assert "router.single.latency_ms_p99" in msg
+    assert "overload.high.sla_attainment" in msg
+
+
+def test_bench_emit_writes_valid_json(tmp_path):
+    from benchmarks.bench_serving import emit, validate_payload
+    path = str(tmp_path / "BENCH_serving.json")
+    emit(_fake_payload(), path=path)
+    with open(path) as f:
+        validate_payload(json.load(f))
+
+
+def test_bench_emit_unwritable_results_exits_nonzero(tmp_path, capsys):
+    """The satellite fix: an unwritable results path must abort loudly
+    with a non-zero exit, not silently drop the JSON. A regular file
+    standing where the results dir should be fails makedirs/open with an
+    OSError for any uid (chmod tricks don't bite when tests run as
+    root)."""
+    from benchmarks.bench_serving import emit
+    blocker = tmp_path / "results"
+    blocker.write_text("not a directory")
+    with pytest.raises(SystemExit) as ei:
+        emit(_fake_payload(), path=str(blocker / "x.json"))
+    assert ei.value.code == 1
+    assert "cannot write" in capsys.readouterr().err

@@ -1,0 +1,334 @@
+"""Property-based scheduler-policy invariants (hypothesis; degrades to
+the deterministic conftest shim when the package is missing).
+
+Every policy must state and test its invariants before it ships — the
+contract this suite pins down (see ROADMAP.md "Testing strategy"):
+
+- conservation: across any submit/admit/complete interleaving no ticket
+  is lost or duplicated — submitted == admitted + pending + shed,
+- FIFO admits in arrival order,
+- EDF never inverts deadlines within an admitted batch, and never leaves
+  a strictly-earlier deadline waiting behind an admitted one,
+- size x time batches are bucket-coherent,
+- priority+aging guarantees bounded starvation (a priority-p ticket
+  outranks any fresh priority-0 ticket after waiting p * aging_s),
+- shed tickets never reach admit (so they can never consume an executor
+  dispatch) and count only in the rejection counter,
+- admission sequences are deterministic under a fixed seed,
+- the router always lands a submit on a minimum-load replica, so the
+  routed-count spread over an all-submit sequence is bounded by 1.
+
+All tests drive the scheduler on a virtual clock (the ``now=`` hooks), so
+they are exact — no wall-clock tolerance anywhere.
+"""
+from collections import Counter
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bucketing import pick_bucket
+from repro.serving.router import ReplicaRouter, spread
+from repro.serving.scheduler import (NO_SLO, PriorityAgingPolicy, Scheduler,
+                                     SizeTimePolicy)
+from repro.serving.telemetry import Telemetry
+
+POLICY_NAMES = ("fifo", "edf", "sizetime", "priority")
+
+
+def _random_trace(rng, n):
+    """(size, priority, slo_ms-or-None) per ticket plus arrival times."""
+    sizes = rng.integers(1, 300, n)
+    prios = rng.integers(0, 3, n)
+    slos = [None if rng.random() < 0.3 else float(rng.uniform(5, 500))
+            for _ in range(n)]
+    arrivals = np.cumsum(rng.uniform(0.0, 0.01, n))
+    return sizes, prios, slos, arrivals
+
+
+# ---- conservation ---------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40),
+       policy=st.sampled_from(POLICY_NAMES),
+       max_queue=st.integers(0, 1), k=st.integers(1, 6))
+def test_no_ticket_lost_or_duplicated(seed, n, policy, max_queue, k):
+    """Multiset identity over any interleaving: every submitted tid ends
+    up exactly once in {admitted, still-pending, shed}."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler(policy, max_queue=n // 2 if max_queue else None,
+                  service_ms_est=None)
+    sizes, prios, slos, arrivals = _random_trace(rng, n)
+    submitted, admitted, shed = [], [], []
+    now = 0.0
+    for i in range(n):
+        now = float(arrivals[i])
+        t = s.submit(i, size=int(sizes[i]), priority=int(prios[i]),
+                     slo_ms=slos[i], now=now)
+        submitted.append(t)
+        if t.shed:
+            shed.append(t)
+        if rng.random() < 0.4:                  # interleave admissions
+            got = s.admit(k, now=now)
+            admitted.extend(got)
+            for g in got:
+                s.complete(g, now=now + 0.001)
+    while s.depth:                              # drain
+        admitted.extend(s.admit(k, now=now))
+    tids = Counter(t.tid for t in admitted) \
+        + Counter(t.tid for t in shed)
+    assert set(tids) == {t.tid for t in submitted}
+    assert all(c == 1 for c in tids.values()), "ticket duplicated"
+    assert len(admitted) + len(shed) == n
+
+
+# ---- per-policy ordering invariants --------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       k=st.integers(1, 8))
+def test_fifo_admits_in_arrival_order(seed, n, k):
+    rng = np.random.default_rng(seed)
+    s = Scheduler("fifo")
+    _, _, slos, arrivals = _random_trace(rng, n)
+    for i in range(n):
+        s.submit(i, slo_ms=slos[i], now=float(arrivals[i]))
+    prev = -1
+    while s.depth:
+        for t in s.admit(k, now=99.0):
+            assert t.payload > prev, "FIFO inversion"
+            prev = t.payload
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       k=st.integers(1, 8))
+def test_edf_never_inverts_deadlines(seed, n, k):
+    """Within one admitted batch deadlines are non-decreasing, and no
+    ticket left pending has a strictly earlier deadline than any ticket
+    in the batch (deadline-less tickets sort last)."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler("edf")
+    _, _, slos, arrivals = _random_trace(rng, n)
+    for i in range(n):
+        s.submit(i, slo_ms=slos[i], now=float(arrivals[i]))
+    while s.depth:
+        batch = s.admit(k, now=99.0)
+        dls = [t.deadline_t if t.deadline_t is not None else float("inf")
+               for t in batch]
+        assert dls == sorted(dls), "EDF inverted deadlines within a batch"
+        if s.depth:
+            left = min(t.deadline_t if t.deadline_t is not None
+                       else float("inf") for t in s._pending)
+            assert left >= dls[-1]    # inf >= inf holds for best-effort
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       k=st.integers(1, 8))
+def test_sizetime_batches_are_bucket_coherent(seed, n, k):
+    buckets = (32, 64, 128, 256)
+    rng = np.random.default_rng(seed)
+    s = Scheduler(SizeTimePolicy(buckets))
+    sizes, _, _, arrivals = _random_trace(rng, n)
+    for i in range(n):
+        s.submit(i, size=int(sizes[i]), now=float(arrivals[i]))
+    while s.depth:
+        batch = s.admit(k, now=99.0)
+        got = {pick_bucket(t.size, buckets) for t in batch}
+        assert len(got) == 1, f"size x time batch spans buckets {got}"
+
+
+# ---- priority + aging -----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), prio=st.integers(1, 4),
+       aging_s=st.floats(0.1, 5.0))
+def test_priority_aging_rank_bound(seed, prio, aging_s):
+    """The documented starvation bound: once a priority-p ticket has
+    waited more than p * aging_s, it outranks ANY freshly-arrived
+    priority-0 ticket."""
+    pol = PriorityAgingPolicy(aging_s=aging_s)
+    s = Scheduler(pol)
+    old = s.submit("old", priority=prio, now=0.0)
+    now = prio * aging_s * 1.001            # just past the bound
+    s.submit("fresh", priority=0, now=now)
+    assert pol.rank(old, now) < 0.0
+    assert [t.payload for t in s.admit(1, now=now)] == ["old"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), prio=st.integers(1, 3))
+def test_priority_aging_bounded_starvation_under_stream(seed, prio):
+    """A low-priority ticket competing against an endless stream of fresh
+    priority-0 arrivals (one per round, one admission per round) is
+    admitted within prio * aging_s / dt + backlog + 1 rounds — it cannot
+    starve."""
+    aging_s, dt = 0.5, 0.1
+    rng = np.random.default_rng(seed)
+    s = Scheduler(PriorityAgingPolicy(aging_s=aging_s))
+    victim = s.submit("victim", priority=prio, now=0.0)
+    bound = int(prio * aging_s / dt) + 2
+    for round_i in range(bound + 1):
+        now = (round_i + 1) * dt
+        s.submit(f"fresh{round_i}", priority=0, now=now)
+        got = s.admit(1, now=now)
+        if any(t.tid == victim.tid for t in got):
+            assert round_i <= bound
+            return
+    pytest.fail(f"priority-{prio} ticket starved past the "
+                f"{bound}-round bound")
+
+
+# ---- shedding -------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40),
+       policy=st.sampled_from(POLICY_NAMES))
+def test_shed_tickets_never_reach_admit(seed, n, policy):
+    """Shed tickets are never admitted (so they can never consume an
+    executor dispatch), count only in telemetry.shed, and leave SLA
+    accounting untouched."""
+    rng = np.random.default_rng(seed)
+    tel = Telemetry()
+    s = Scheduler(policy, telemetry=tel, max_queue=3, service_ms_est=10.0)
+    sizes, prios, slos, arrivals = _random_trace(rng, n)
+    shed_tids, admitted = set(), []
+    for i in range(n):
+        t = s.submit(i, size=int(sizes[i]), priority=int(prios[i]),
+                     slo_ms=slos[i], now=float(arrivals[i]))
+        if t.shed:
+            shed_tids.add(t.tid)
+        if rng.random() < 0.3:
+            admitted.extend(s.admit(2, now=float(arrivals[i])))
+    while s.depth:
+        admitted.extend(s.admit(4, now=99.0))
+    assert not (shed_tids & {t.tid for t in admitted})
+    assert tel.shed == len(shed_tids)
+    assert tel.sla_total == 0               # nothing completed yet
+    for t in admitted:
+        s.complete(t, now=100.0)
+    # completions count toward SLA, sheds still only in the shed counter
+    assert tel.sla_total == sum(1 for t in admitted
+                                if t.deadline_t is not None)
+    assert tel.shed == len(shed_tids)
+
+
+# ---- determinism ----------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       policy=st.sampled_from(POLICY_NAMES))
+def test_admission_deterministic_under_fixed_seed(seed, n, policy):
+    """Same trace + same virtual clock => identical admission order."""
+    def run():
+        rng = np.random.default_rng(seed)
+        s = Scheduler(policy, max_queue=n // 2 + 1, service_ms_est=5.0)
+        sizes, prios, slos, arrivals = _random_trace(rng, n)
+        order = []
+        for i in range(n):
+            s.submit(i, size=int(sizes[i]), priority=int(prios[i]),
+                     slo_ms=slos[i], now=float(arrivals[i]))
+            if rng.random() < 0.5:
+                order.extend(t.tid for t in s.admit(2,
+                                                    now=float(arrivals[i])))
+        while s.depth:
+            order.extend(t.tid for t in s.admit(3, now=99.0))
+        return order
+
+    assert run() == run()
+
+
+# ---- SLA boundary semantics (regression pin, satellite) -------------------
+
+def test_sla_boundary_exactly_at_deadline_is_a_hit():
+    """Pin the boundary the router relies on: finishing exactly AT the
+    deadline is a hit; any time past it is a miss; shed tickets appear
+    only in the rejection counter, never in misses or latencies."""
+    tel = Telemetry()
+    s = Scheduler("fifo", telemetry=tel, default_slo_ms=100.0, max_queue=2)
+    at = s.submit("at", now=0.0)        # deadline_t = 0.1
+    past = s.submit("past", now=0.0)
+    shed = s.submit("overflow", now=0.0)
+    assert shed.shed and tel.shed == 1
+    s.admit(2, now=0.0)
+    s.complete(at, now=0.1)             # exactly at the deadline
+    s.complete(past, now=0.1 + 1e-6)    # one tick past it
+    assert tel.sla_total == 2
+    assert tel.sla_misses == 1
+    assert len(tel.latencies_ms) == 2   # shed never produced a latency
+    assert tel.shed == 1
+
+
+def test_best_effort_no_slo_never_counts():
+    tel = Telemetry()
+    s = Scheduler("fifo", telemetry=tel, default_slo_ms=50.0)
+    t = s.submit("be", slo_ms=NO_SLO, now=0.0)
+    s.admit(1, now=0.0)
+    s.complete(t, now=9.0)
+    assert tel.sla_total == 0 and tel.sla_misses == 0
+    assert tel.served == 1
+
+
+# ---- router balance -------------------------------------------------------
+
+from conftest import StubReplica as _StubReplica  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 6),
+       n=st.integers(1, 60))
+def test_router_pure_submit_spread_bounded_by_one(seed, n_replicas, n):
+    """From an empty fleet, any all-submit sequence lands every ticket on
+    a current-minimum replica, so the routed-count spread never exceeds
+    1 — the provable balance bound."""
+    router = ReplicaRouter([_StubReplica() for _ in range(n_replicas)])
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        router.submit(i, slo_ms=float(rng.uniform(10, 100))
+                      if rng.random() < 0.5 else None)
+        assert spread(router) <= 1
+        assert router.shed == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 5),
+       n=st.integers(1, 60))
+def test_router_always_picks_a_min_load_replica(seed, n_replicas, n):
+    """Even with random draining interleaved, every submit lands on a
+    replica whose load was minimal at that instant."""
+    router = ReplicaRouter([_StubReplica() for _ in range(n_replicas)])
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        if rng.random() < 0.4:          # drain a random replica a bit
+            r = router.replicas[int(rng.integers(n_replicas))]
+            if r.has_work:
+                r.step_once()
+        loads = [router.load(j) for j in range(n_replicas)]
+        before = list(router.routed)
+        router.submit(i)
+        j = next(j for j in range(n_replicas)
+                 if router.routed[j] != before[j])
+        assert loads[j] == min(loads), \
+            f"routed to load {loads[j]}, min was {min(loads)}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40))
+def test_router_shed_counted_separately(seed, n):
+    """Fleet-level shed accounting: shed tickets increment router.shed +
+    fleet telemetry.shed, and never count as routed."""
+    router = ReplicaRouter([_StubReplica(max_queue=2) for _ in range(2)])
+    rng = np.random.default_rng(seed)
+    shed = 0
+    for i in range(n):
+        t = router.submit(i)
+        shed += t.shed
+        if rng.random() < 0.3:
+            for r in router.replicas:
+                if r.has_work:
+                    r.step_once()
+    assert router.shed == shed
+    assert router.fleet_telemetry().shed == shed
+    assert sum(router.routed) == n - shed
