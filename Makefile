@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test properties smoke smoke-router bench ci
+.PHONY: test properties smoke smoke-router smoke-chunked bench ci
 
 test:
 	python -m pytest -x -q
@@ -25,7 +25,14 @@ smoke-router:
 	python -m repro.launch.serve --arch dlrm --smoke --requests 6 \
 	    --replicas 2
 
+# chunked-prefill smoke: serve a mixed trace with chunking on, then
+# replay it monolithically and assert token-identical outputs
+smoke-chunked:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 2 --max-len 64 \
+	    --prefill-chunk 16 --verify-chunked
+
 bench:
 	python -m benchmarks.run --only serving
 
-ci: test properties smoke smoke-router bench
+ci: test properties smoke smoke-router smoke-chunked bench

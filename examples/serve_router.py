@@ -11,6 +11,13 @@ production traffic) on the unified runtime:
    batch tickets that could only be served past their deadline are shed
    (429-style) while the latency-critical class keeps its SLA.
 
+The admission estimate is NOT a hand-tuned constant: the engines run
+``service_ms_est="auto"`` and the warm-up pass calibrates the
+feasibility check from live telemetry (p50 of completed service times
+per size bucket — PR 3's estimator). The fleet report also surfaces
+time-to-first-token percentiles next to latency, the tail metric
+chunked prefill optimizes.
+
 Run: PYTHONPATH=src python examples/serve_router.py
 """
 import jax
@@ -24,21 +31,25 @@ from repro.serving.router import ReplicaRouter, spread
 cfg = reduce_for_smoke(get_config("deepseek-7b"))
 params = M.init_params(cfg, jax.random.PRNGKey(0))
 
-# -- build the fleet: 2 replicas, priority policy, feasibility shedding ----
-SERVICE_MS_EST = 80.0          # per-request estimate for the admission check
+# -- build the fleet: 2 replicas, priority policy, LIVE-calibrated
+#    feasibility shedding (no hand-tuned service constant) --------------
 replicas = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
                          prefill_buckets=(8, 16), policy="priority",
-                         service_ms_est=SERVICE_MS_EST)
+                         service_ms_est="auto")
 router = ReplicaRouter(replicas)
 
-# -- warm-up: compile every stage so the admission estimate reflects
-#    steady-state service time, not first-call compilation ----------------
+# -- warm-up: compile every stage AND feed the live service estimator,
+#    so the admission check reflects steady-state service time ---------
 rng = np.random.default_rng(0)
+# 16 warm requests -> 8 completions per replica, enough for each
+# replica's estimator to leave its fallback (min_samples = 5)
 warm = [Request(100 + i, rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
-                max_new_tokens=4) for i in range(8)]
+                max_new_tokens=4) for i in range(16)]
 for r in warm:
     router.submit(r)
 router.run_until_drained()
+EST_MS = replicas[0].scheduler.service_ms_for(6)
+print(f"live-calibrated service estimate: {EST_MS:.1f} ms/request")
 for rep in replicas:
     rep.telemetry.reset_serving_stats()
 router = ReplicaRouter(replicas)
@@ -52,7 +63,7 @@ for i in range(24):
         max_new_tokens=4,
         priority=0 if critical else 1,
         # critical: room for the whole critical class; batch: ~6 services
-        slo_ms=60_000.0 if critical else SERVICE_MS_EST * 6))
+        slo_ms=60_000.0 if critical else EST_MS * 6))
 
 tickets = [router.submit(r) for r in requests]
 print(f"routed {router.routed} (spread {spread(router)}), "
@@ -70,5 +81,9 @@ for name, prio in (("critical", 0), ("batch", 1)):
           f"shed={sum(t.shed for t in ts):2d} "
           f"sla_attainment={len(hits) / max(len(served), 1):.2f}")
 
-print("\nfleet report:")
+fleet = router.fleet_telemetry()
+ttft = fleet.ttft_percentiles()
+print(f"\nTTFT ms: p50={ttft['p50']:.1f} p95={ttft['p95']:.1f} "
+      f"p99={ttft['p99']:.1f} (latency percentiles below)")
+print("fleet report:")
 print(router.report())

@@ -21,6 +21,9 @@ make smoke
 echo "== router smoke: 2 replicas, LM (priority policy) + DLRM =="
 make smoke-router
 
+echo "== chunked-prefill smoke: LM chunked vs monolithic token identity =="
+make smoke-chunked
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== serving benchmark (results/BENCH_serving.json) =="
     make bench

@@ -8,10 +8,17 @@ Both paths share the scheduler/executor/telemetry stack
 fifo|edf|sizetime|priority`` and a latency SLA with ``--slo-ms`` to get
 SLA-miss accounting in the report. ``--replicas N`` fronts N engine
 replicas with the ReplicaRouter (the paper's six-cards-behind-one-host
-deployment): tickets route by queue depth + deadline slack and the report
-is the fleet-level telemetry aggregate. ``--max-queue`` /
-``--service-ms-est`` turn on bounded-queue / deadline-feasibility
-admission control (shed requests are counted separately from misses).
+deployment): tickets route by queue depth + deadline slack
+(``--route feedback`` switches to EWMA-of-dispatch-time costing for
+heterogeneous fleets) and the report is the fleet-level telemetry
+aggregate. ``--max-queue`` / ``--service-ms-est`` turn on bounded-queue /
+deadline-feasibility admission control (shed requests are counted
+separately from misses; pass ``--service-ms-est auto`` to calibrate the
+estimate from live telemetry). ``--prefill-chunk N`` splits long prompts
+into N-token chunks interleaved with decode steps (LM only) — the
+head-of-line-blocking fix; ``--verify-chunked`` replays the same trace
+monolithically and asserts token-identical outputs (the CI smoke).
+Reports include time-to-first-token percentiles alongside latency.
 
 Real-cluster notes: per-host processes share the production mesh via
 jax.distributed.initialize(); the engine's slot batch maps to the
@@ -52,11 +59,15 @@ def serve_lm(args):
     kw = dict(batch_slots=args.slots, max_len=args.max_len,
               prefill_buckets=(16, 32, 64, 128), policy=args.policy,
               slo_ms=args.slo_ms, max_queue=args.max_queue,
-              service_ms_est=args.service_ms_est)
+              service_ms_est=args.service_ms_est,
+              prefill_chunk=args.prefill_chunk)
     reqs = _lm_requests(args, cfg)
     if args.replicas > 1:
+        if args.verify_chunked:
+            raise SystemExit("--verify-chunked runs single-engine only "
+                             "(drop --replicas)")
         router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
-                                             **kw))
+                                             **kw), route=args.route)
         t0 = time.perf_counter()
         for r in reqs:
             router.submit(r)
@@ -73,11 +84,26 @@ def serve_lm(args):
     eng.run(reqs)
     wall = time.perf_counter() - t0
     tel = eng.telemetry
+    chunked = (f", {tel.continuations} chunk continuations"
+               if args.prefill_chunk else "")
     print(f"served {tel.served} requests in {wall:.2f}s "
           f"({tel.total_tokens / wall:.0f} tok/s, {tel.steps} decode steps, "
           f"{tel.prefills} prefills in {tel.prefill_batches} batched "
-          f"dispatches)")
+          f"dispatches{chunked})")
     print(tel.report())
+    if args.verify_chunked:
+        if not args.prefill_chunk:
+            raise SystemExit("--verify-chunked needs --prefill-chunk")
+        ref_kw = dict(kw, prefill_chunk=None)
+        ref = InferenceEngine(cfg, params, **ref_kw)
+        ref_reqs = _lm_requests(args, cfg)
+        ref.run(ref_reqs)
+        bad = [r.rid for r, m in zip(reqs, ref_reqs) if r.output != m.output]
+        if bad:
+            raise SystemExit(f"FAIL: chunked outputs diverge from "
+                             f"monolithic for requests {bad}")
+        print(f"verify-chunked OK: {len(reqs)} requests token-identical "
+              f"to monolithic prefill")
     return tel
 
 
@@ -98,7 +124,8 @@ def serve_dlrm(args):
                for s in range(args.requests)]
     if args.replicas > 1:
         router = ReplicaRouter(dlrm_replicas(cfg, asn, params,
-                                             args.replicas, **kw))
+                                             args.replicas, **kw),
+                               route=args.route)
         # full-trace warm-up per replica (T6 unpack compiles per distinct
         # used-prefix shape), excluded from latency/transfer stats
         for rep in router.replicas:
@@ -128,6 +155,10 @@ def serve_dlrm(args):
     return tel
 
 
+def _service_est(v: str):
+    return v if v == "auto" else float(v)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -141,11 +172,22 @@ def main(argv=None):
                     help="per-request latency SLA for EDF + miss accounting")
     ap.add_argument("--replicas", type=int, default=1,
                     help="front N engine replicas with the ReplicaRouter")
+    ap.add_argument("--route", default="count",
+                    choices=("count", "feedback"),
+                    help="router cost: ticket counts or EWMA of measured "
+                         "per-replica dispatch time")
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bounded queue: shed submits past this depth")
-    ap.add_argument("--service-ms-est", type=float, default=None,
+    ap.add_argument("--service-ms-est", type=_service_est, default=None,
                     help="per-ticket service estimate for deadline-"
-                         "feasibility shedding")
+                         "feasibility shedding (a number, or 'auto' to "
+                         "calibrate from live telemetry)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts into N-token chunks interleaved "
+                         "with decode steps (LM only)")
+    ap.add_argument("--verify-chunked", action="store_true",
+                    help="replay the trace monolithically and assert "
+                         "chunked outputs are token-identical")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full-config", dest="smoke", action="store_false")
     args = ap.parse_args(argv)

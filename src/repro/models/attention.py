@@ -249,6 +249,87 @@ def fill_cache_from_prefill(cache, k, v, kind: str, cfg: ModelConfig):
 
 
 # --------------------------------------------------------------------------
+# chunked prefill (a block of prompt tokens against a live cache)
+# --------------------------------------------------------------------------
+
+def chunk_prefill_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
+    """One prompt chunk per GROUP ROW against the live full-batch cache:
+    x (P,C,d) holds the tick's chunk tokens (P = padded group size, a
+    subset of the cache's slot batch), row j sitting at absolute offset
+    ``start[j]``. ``pos`` is ``(slots, start, write_pos)``:
+
+    - chunk K/V scatters into cache rows ``slots[j]`` at positions
+      ``write_pos[j] + 0..C-1``. The update is O(P x C) on the (donated)
+      cache, so per-chunk cache traffic matches a decode step — NOT a
+      whole-cache copy. Padded rows carry ``write_pos = max_len``; their
+      out-of-bounds scatter indices drop, so a duplicated pad slot can
+      never clobber a real row.
+    - queries then attend their own updated cache row: key j is visible
+      to chunk query i iff j <= start + i — exactly the mask a
+      monolithic prefill applies at those rows, so iterating chunks is
+      prefix-consistent with monolithic prefill.
+
+    Returns (y (P,C,d), new full cache). Global attention only: local
+    ring buffers and state-space blocks carry recurrent state that a
+    chunk boundary would truncate (the engine gates chunking to
+    all-global stacks)."""
+    if kind != "global":
+        raise ValueError("chunked prefill supports global attention only, "
+                         f"got {kind!r}")
+    slots, start, write_pos = pos
+    P, C = x.shape[0], x.shape[1]
+    slots = jnp.asarray(slots, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    write_pos = jnp.asarray(write_pos, jnp.int32)
+    pos_bc = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    if cfg.rope_mode == "mrope":
+        positions = jnp.broadcast_to(pos_bc[None], (3, P, C))
+    else:
+        positions = pos_bc
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    S = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    widx = write_pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+
+    def write_chunk(c, new):
+        return c.at[slots[:, None], widx].set(new.astype(c.dtype),
+                                              mode="drop")
+
+    new_cache = {}
+    if quant:
+        kq, ks = _kv_quant(k_new)
+        vq, vs = _kv_quant(v_new)
+        for name, val in (("k", kq), ("v", vq),
+                          ("k_scale", ks), ("v_scale", vs)):
+            new_cache[name] = write_chunk(cache[name], val)
+        ck = _kv_dequant(new_cache["k"][slots],
+                         new_cache["k_scale"][slots], x.dtype)
+        cv = _kv_dequant(new_cache["v"][slots],
+                         new_cache["v_scale"][slots], x.dtype)
+    else:
+        for name, val in (("k", k_new), ("v", v_new)):
+            new_cache[name] = write_chunk(cache[name], val)
+        # gather only the P group rows for attention (padded rows whose
+        # writes dropped read stale chunk keys — their output is garbage
+        # and the engine discards it)
+        ck, cv = new_cache["k"][slots], new_cache["v"][slots]
+
+    # causal over the absolute positions: key j visible to chunk query i
+    # iff j <= start + i (cache rows past the written prefix are masked,
+    # so stale slots can never leak into a chunk's softmax)
+    idx = jnp.arange(S, dtype=jnp.int32)
+    mask = idx[None, None, :] <= pos_bc[:, :, None]          # (P,C,S)
+    scores = _gqa_scores(q, ck, cfg)                         # (P,K,G,C,S)
+    scores = jnp.where(mask[:, None, None, :, :], scores,
+                       jnp.asarray(NEG_INF, scores.dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    o = _gqa_out(probs, cv)
+    o = shard(o, "batch", "seq", "heads", None)
+    return _out_proj(p, o), new_cache
+
+
+# --------------------------------------------------------------------------
 # decode (single new token against a cache)
 # --------------------------------------------------------------------------
 

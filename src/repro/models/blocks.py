@@ -81,15 +81,26 @@ def apply_block(p, x, cfg: ModelConfig, kind: str, *, mode: str,
                 positions=None, cache=None, pos=None, kv_valid=None,
                 cross_kv=None, cross_valid=None, causal: bool = True,
                 aux=None):
-    """mode: 'full' (train/encode), 'prefill', 'decode'."""
+    """mode: 'full' (train/encode), 'prefill', 'chunk' (one prompt chunk
+    against a live cache — ``pos`` carries per-row chunk offsets), or
+    'decode'."""
     h = apply_norm(p["pre_norm"], x, cfg.norm_type, cfg.norm_eps)
     new_cache = cache
+
+    if mode == "chunk" and kind not in (ATTN_GLOBAL,):
+        raise ValueError(
+            f"chunked prefill needs an all-global-attention stack; "
+            f"block kind {kind!r} carries state a chunk boundary would "
+            f"truncate")
 
     if kind in (ATTN_GLOBAL, ATTN_LOCAL, "decoder"):
         akind = ATTN_GLOBAL if kind == "decoder" else kind
         if mode == "decode":
             y, new_cache = attn.decode_attention(p["attn"], h, cache, pos,
                                                  cfg, akind)
+        elif mode == "chunk":
+            y, new_cache = attn.chunk_prefill_attention(p["attn"], h, cache,
+                                                        pos, cfg, akind)
         else:
             y, kv = attn.full_attention(p["attn"], h, cfg, akind, positions,
                                         kv_valid=kv_valid, causal=causal)

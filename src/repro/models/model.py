@@ -212,7 +212,9 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
         cross_valid = batch.get("enc_valid")
 
     positions = batch.get("positions")
-    if positions is None and mode != "decode":
+    if positions is None and mode not in ("decode", "chunk"):
+        # decode/chunk compute their positions from ``pos`` (per-row
+        # cache offsets) inside the attention layer
         positions = _default_positions(cfg, B, S)
 
     x, new_caches, aux = _run_stack(
@@ -249,6 +251,21 @@ def prefill(params, cfg: ModelConfig, batch, max_len: int, kv_valid=None):
     x, caches, _ = forward(params, cfg, batch, mode="prefill", caches=caches,
                            kv_valid=kv_valid)
     return x[:, -1], caches
+
+
+def chunk_prefill_step(params, cfg: ModelConfig, tokens, caches, slots,
+                       start, write_pos):
+    """Run one prompt chunk per group row against the live full-batch
+    caches: tokens (P,C) for cache rows ``slots`` (P,) at absolute
+    offsets ``start`` (P,) — row j covers positions
+    start[j]..start[j]+C-1. K/V scatters into the caches at
+    ``write_pos[j]`` (pass max_len to park a padded row: its
+    out-of-bounds writes drop); attention sees the whole written prefix,
+    so iterating chunks is prefix-consistent with a monolithic prefill.
+    Returns (hidden (P,C,d), new full caches)."""
+    x, caches, _ = forward(params, cfg, {"tokens": tokens}, mode="chunk",
+                           caches=caches, pos=(slots, start, write_pos))
+    return x, caches
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos):

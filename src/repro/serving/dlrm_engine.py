@@ -43,7 +43,7 @@ class DLRMEngine:
     policy: str = "fifo"
     slo_ms: Optional[float] = None
     max_queue: Optional[int] = None
-    service_ms_est: Optional[float] = None
+    service_ms_est: Optional[float | str] = None   # number or "auto"
     step_group: int = 4       # max batches admitted per step_once (router
                               # interleaving granularity; >=2 keeps the T2
                               # stage overlap alive within a step)

@@ -10,9 +10,18 @@ service binary, TPU-native:
 - **batched prefill**: freed slots are refilled together — admitted
   requests are grouped by prefill bucket and each group prefills in ONE
   bucketed call instead of per-request batch-1 dispatches
+- **chunked prefill** (``prefill_chunk=N``): long prompts split into
+  N-token chunks that interleave with decode steps — the unified tick
+  runs at most ONE chunk group, then one decode step, so a 128-token
+  prefill can no longer stall every decode slot behind it (head-of-line
+  blocking, the tail-TTFT killer in the latency-bounded batching
+  analysis of Park et al. 2018). Mid-prefill requests re-enter the
+  queue as *continuation tickets* (same tid/enqueue/priority/deadline)
+  and chunk K/V lands in the cache at the chunk's offset, so chunked
+  prefill is token-identical to monolithic prefill
 - slot-based KV-cache manager over one statically-shaped cache
-- greedy decode loop with async dispatch, per-request deadline/SLA
-  tracking through the shared Telemetry
+- greedy decode loop with async dispatch, per-request deadline/SLA and
+  time-to-first-token tracking through the shared Telemetry
 
 The DLRM pipelined engine (T2) lives in dlrm_engine.py on the same stack.
 """
@@ -26,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN_GLOBAL, ModelConfig
 from repro.core.bucketing import pick_bucket
 from repro.models import model as model_mod
 from repro.serving.executor import StageExecutor
@@ -46,6 +55,7 @@ class Request:
     finish_t: float = 0.0
     done: bool = False
     shed: bool = False                 # rejected by admission control
+    prefill_pos: int = 0               # prompt tokens already prefilled
 
     @property
     def latency_ms(self) -> float:
@@ -77,7 +87,9 @@ class InferenceEngine:
                  policy: str = "fifo", slo_ms: Optional[float] = None,
                  max_prefill_batch: Optional[int] = None,
                  max_queue: Optional[int] = None,
-                 service_ms_est: Optional[float] = None):
+                 service_ms_est: Optional[float | str] = None,
+                 service_ms_fallback: Optional[float] = None,
+                 prefill_chunk: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
@@ -87,6 +99,24 @@ class InferenceEngine:
         # (kept for A/B tests); default admits up to all free slots at once
         self.max_prefill_batch = max_prefill_batch or batch_slots
 
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            bad = set(cfg.layer_kinds()) - {ATTN_GLOBAL}
+            if bad:
+                raise ValueError(
+                    f"prefill_chunk needs an all-global-attention stack; "
+                    f"{cfg.name} has {sorted(bad)} blocks whose recurrent "
+                    f"state a chunk boundary would truncate")
+            # chunk ladder: the existing bucket ladder truncated at the
+            # chunk size — chunk executables replace the full-length
+            # prefill buckets, which is where the compile-count win
+            # comes from (no (128,P)/(256,P) prefill programs at all)
+            self.chunk_buckets = tuple(sorted(
+                {b for b in self.buckets if b <= prefill_chunk}
+                | {prefill_chunk}))
+
         self.telemetry = Telemetry()
         self.stats = self.telemetry          # legacy accessor name
         self.executor = StageExecutor(self.telemetry)
@@ -94,15 +124,18 @@ class InferenceEngine:
             # batch formation must group on the engine's actual prefill
             # buckets, or "coherent" groups still split into multiple
             # compiled dispatches
-            policy = SizeTimePolicy(self.buckets)
+            policy = SizeTimePolicy(self.chunk_buckets if prefill_chunk
+                                    else self.buckets)
         self.scheduler = Scheduler(policy, telemetry=self.telemetry,
                                    default_slo_ms=slo_ms,
                                    max_queue=max_queue,
-                                   service_ms_est=service_ms_est)
+                                   service_ms_est=service_ms_est,
+                                   service_ms_fallback=service_ms_fallback)
 
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)
         self.active: Dict[int, Ticket] = {}
+        self.prefilling: Dict[int, int] = {}   # ticket tid -> held KV slot
         self.pos = np.zeros(batch_slots, np.int32)
         self.free = list(range(batch_slots))
 
@@ -131,7 +164,35 @@ class InferenceEngine:
             nxt = model_mod.greedy_next(params, cfg, hidden)
             return nxt, caches
 
-        return jax.jit(fn)
+        # in-place cache update (the engine drops its old reference)
+        return jax.jit(fn, donate_argnums=(1,))
+
+    def _build_chunk(self, bucket: int):
+        """Chunk-prefill executable: ``bucket``-token chunks for the P
+        group rows against the live full-batch cache. The chunk K/V
+        scatters into the donated cache at per-row offsets (O(chunk)
+        in-place update, like a decode write — gathering and
+        re-scattering whole cache rows would move the full KV tree every
+        tick and erase the interleaving win), and only the P group rows
+        compute the chunk forward (the rest of the batch doesn't burn
+        flops on parked tokens). Cached under ("chunk_prefill",
+        (bucket, P)) with bucket <= prefill_chunk, so the executable
+        ladder stops at the chunk size instead of growing one program
+        per full prompt-length bucket.
+
+        Padded group rows duplicate slot ``slots[0]`` but carry
+        ``write_pos = max_len``: their scatter indices are out of bounds
+        and drop, so a duplicate can never clobber the real row."""
+        cfg = self.cfg
+
+        def fn(params, caches, slots, tokens, start, write_pos, last_idx):
+            x, caches = model_mod.chunk_prefill_step(
+                params, cfg, tokens, caches, slots, start, write_pos)
+            hidden = x[jnp.arange(x.shape[0]), last_idx]
+            nxt = model_mod.greedy_next(params, cfg, hidden)
+            return nxt, caches
+
+        return jax.jit(fn, donate_argnums=(1,))
 
     def _build_slot_write(self):
         axes = self._batch_axes
@@ -149,7 +210,8 @@ class InferenceEngine:
 
             return jax.tree.map(upd, dst_tree, src_tree, axes)
 
-        return jax.jit(write)
+        # donate the destination tree: scatter in place, no full copy
+        return jax.jit(write, donate_argnums=(0,))
 
     # ---- main loop ---------------------------------------------------------
     def _eff_len(self, req: Request) -> int:
@@ -175,16 +237,23 @@ class InferenceEngine:
     # ---- replica protocol (ReplicaRouter) --------------------------------
     @property
     def inflight(self) -> int:
-        return len(self.active)
+        return len(self.active) + len(self.prefilling)
 
     @property
     def has_work(self) -> bool:
-        return bool(self.scheduler.depth or self.active)
+        return bool(self.scheduler.depth or self.active or self.prefilling)
 
     def step_once(self):
-        """One unit of forward progress: refill freed slots, then one
-        decode step across the active batch."""
-        self._admit()
+        """One engine tick — the unified step. Chunked mode: at most ONE
+        chunk group (a long prompt advances one chunk, or a group of
+        short prompts prefills outright), then one decode step across
+        the active batch — prefill work can stall decode slots for at
+        most one chunk. Monolithic mode: refill every freed slot, then
+        one decode step (the pre-chunking behaviour)."""
+        if self.prefill_chunk is not None:
+            self._admit_chunk()
+        else:
+            self._admit()
         self._step()
 
     def _admit(self):
@@ -228,23 +297,110 @@ class InferenceEngine:
             "slot_write", g, self._build_slot_write,
             self.caches, caches, jnp.asarray(slots, jnp.int32))
         nxt = np.asarray(nxt)
+        now = time.perf_counter()
         for j, (t, slot, L) in enumerate(zip(group, slots, lengths)):
             t.payload.output.append(int(nxt[j]))
+            t.payload.prefill_pos = L
+            self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
             self.active[slot] = t
             self.pos[slot] = L
         self.telemetry.prefills += g
+        self.telemetry.prefill_batches += 1
+
+    # ---- chunked prefill -------------------------------------------------
+    def _prefill_len(self, req: Request) -> int:
+        """Total tokens the chunked path must prefill — matches what the
+        monolithic path would run (effective length, capped by the top
+        bucket exactly like ``min(L, pick_bucket(L))`` caps it)."""
+        return max(min(self._eff_len(req), self.buckets[-1]), 1)
+
+    def _chunk_next_len(self, req: Request) -> int:
+        return min(self.prefill_chunk,
+                   self._prefill_len(req) - req.prefill_pos)
+
+    def _chunk_bucket_of(self, t: Ticket) -> int:
+        return pick_bucket(self._chunk_next_len(t.payload),
+                           self.chunk_buckets)
+
+    def _admit_chunk(self):
+        """Chunked admission: ask the scheduler for ONE bucket-coherent
+        chunk group (fresh tickets capped by free slots; continuations
+        already hold theirs) and run it. Unfinished prompts re-enter the
+        queue as continuation tickets; finished ones sample their first
+        token and move to the decode batch."""
+        if not self.scheduler.depth:
+            return
+        if not self.free and not self.prefilling:
+            return                      # every slot is decoding
+        group = self.scheduler.admit_coherent(
+            self.batch_slots, bucket_fn=self._chunk_bucket_of,
+            new_cap=len(self.free))
+        if group:
+            self._chunk_group(self._chunk_bucket_of(group[0]), group)
+
+    def _chunk_group(self, bucket: int, group: List[Ticket]):
+        """Run one prompt chunk for every ticket in the group in a single
+        full-batch dispatch, with K/V scattered at each row's own offset.
+        Group rows may sit at different prefill offsets (request A's
+        third chunk can batch with request B's first); slots outside the
+        group ride along parked (zero tokens, dropped writes), exactly
+        like idle rows ride a decode step."""
+        g = len(group)
+        P = 1 << (g - 1).bit_length()       # pad like _prefill_group
+        toks = np.zeros((P, bucket), np.int32)
+        start = np.zeros(P, np.int32)
+        wpos = np.full(P, self.max_len, np.int32)   # padded: writes drop
+        last = np.zeros(P, np.int32)
+        slots: List[int] = []
+        for j, t in enumerate(group):
+            req: Request = t.payload
+            off = req.prefill_pos
+            clen = min(self._chunk_next_len(req), bucket)
+            slots.append(self.prefilling.pop(t.tid)
+                         if t.tid in self.prefilling else self.free.pop())
+            toks[j, :clen] = req.tokens[off:off + clen]
+            start[j] = off
+            wpos[j] = off
+            last[j] = clen - 1
+        slots_padded = np.asarray(slots + [slots[0]] * (P - g), np.int32)
+        nxt, self.caches = self.executor.dispatch(
+            "chunk_prefill", (bucket, P), lambda: self._build_chunk(bucket),
+            self.params, self.caches, jnp.asarray(slots_padded),
+            jnp.asarray(toks), jnp.asarray(start), jnp.asarray(wpos),
+            jnp.asarray(last))
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        for j, (t, slot) in enumerate(zip(group, slots)):
+            req = t.payload
+            req.prefill_pos += int(last[j]) + 1
+            if req.prefill_pos >= self._prefill_len(req):
+                req.output.append(int(nxt[j]))
+                self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
+                self.telemetry.prefills += 1
+                self.active[slot] = t
+                self.pos[slot] = req.prefill_pos
+            else:
+                self.prefilling[t.tid] = slot
+                self.scheduler.resubmit(t, size=self._chunk_next_len(req))
         self.telemetry.prefill_batches += 1
 
     def _step(self):
         if not self.active:
             return
         toks = np.zeros((self.batch_slots, 1), np.int32)
+        # inactive rows (free or mid-chunked-prefill) still ride the
+        # static-shape decode dispatch; park their K/V write at
+        # max_len-1 — a position no request ever attends (decoding stops
+        # at max_len-1) — so the dummy write can't clobber a chunk
+        # offset an in-progress prefill has already filled
+        pos_vec = np.full(self.batch_slots, self.max_len - 1, np.int32)
         for s, t in self.active.items():
             toks[s, 0] = t.payload.output[-1]
+            pos_vec[s] = self.pos[s]
         nxt, self.caches = self.executor.dispatch(
             "decode", (), self._build_decode,
             self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(self.pos))
+            jnp.asarray(pos_vec))
         nxt = np.asarray(nxt)
         self.telemetry.steps += 1
         for s in list(self.active):

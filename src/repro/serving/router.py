@@ -30,6 +30,17 @@ Routing rule (deterministic, so the property tests can state a bound):
    candidate with the fewest pending deadline tickets (spread the
    urgent traffic so one replica's queue doesn't accumulate all the
    tight-slack work), ties and best-effort tickets round-robin.
+
+Feedback routing (``route="feedback"``, ROADMAP open item): instead of
+raw ticket counts, each replica's cost is (load + 1) x the EWMA of its
+measured per-step dispatch time, i.e. the estimated time for the new
+ticket to clear that replica. Heterogeneous replicas (one card also
+hosting sparse shards, a thermally-throttled card, ...) then balance by
+*time*, not count: a 3x-slower replica settles at ~1/3 the queue. The
+EWMA is fed by the router's own drive loops (``run_until_drained`` /
+``run_concurrent`` time every ``step_once``) or by ``record_dispatch``
+directly; until a replica has a measurement it inherits the fleet mean,
+and with no measurements at all the rule degrades to count-based.
 """
 from __future__ import annotations
 
@@ -43,10 +54,19 @@ from repro.serving.telemetry import Telemetry
 class ReplicaRouter:
     """Least-loaded, deadline-slack-aware balancer over engine replicas."""
 
-    def __init__(self, replicas: Sequence[Any]):
+    def __init__(self, replicas: Sequence[Any], *, route: str = "count",
+                 ewma_alpha: float = 0.25):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
+        if route not in ("count", "feedback"):
+            raise ValueError(f"route must be 'count' or 'feedback', "
+                             f"got {route!r}")
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError("ewma_alpha must be in (0, 1]")
         self.replicas = list(replicas)
+        self.route_mode = route
+        self.ewma_alpha = ewma_alpha
+        self.ewma_s = [0.0] * len(self.replicas)  # 0 = not yet measured
         self.routed = [0] * len(self.replicas)   # submits per replica
         self.shed = 0                            # fleet admission rejections
         self._rr = 0                             # round-robin tie cursor
@@ -54,15 +74,39 @@ class ReplicaRouter:
 
     # ---- routing ---------------------------------------------------------
     def load(self, i: int) -> int:
+        # fresh_depth, not depth: a chunked request mid-prefill is both a
+        # pending continuation ticket AND an in-flight slot holder —
+        # counting it twice would steer traffic away from replicas that
+        # are merely chunking a long prompt
         r = self.replicas[i]
-        return r.scheduler.depth + r.inflight
+        return r.scheduler.fresh_depth + r.inflight
+
+    def record_dispatch(self, i: int, seconds: float):
+        """Fold one measured step duration into replica i's EWMA (the
+        feedback signal; drive loops call this automatically)."""
+        e = self.ewma_s[i]
+        self.ewma_s[i] = seconds if e == 0.0 else \
+            (1.0 - self.ewma_alpha) * e + self.ewma_alpha * seconds
+
+    def _cost(self, i: int) -> float:
+        """Routing cost. Count mode: raw load. Feedback mode: estimated
+        clearing time of the new ticket = (load + 1) x EWMA step time
+        (an unmeasured replica is charged the fleet-mean EWMA so it
+        neither hoards nor starves before its first measurement)."""
+        if self.route_mode != "feedback":
+            return float(self.load(i))
+        measured = [e for e in self.ewma_s if e > 0.0]
+        if not measured:
+            return float(self.load(i))
+        e = self.ewma_s[i] or (sum(measured) / len(measured))
+        return (self.load(i) + 1) * e
 
     def _deadline_depth(self, i: int) -> int:
         return self.replicas[i].scheduler.deadline_depth
 
     def route(self, *, has_deadline: bool = False) -> int:
         """Pick the replica index for the next ticket (see module doc)."""
-        loads = [self.load(i) for i in range(len(self.replicas))]
+        loads = [self._cost(i) for i in range(len(self.replicas))]
         m = min(loads)
         cand = [i for i, l in enumerate(loads) if l == m]
         if has_deadline and len(cand) > 1:
@@ -106,9 +150,11 @@ class ReplicaRouter:
         point is fleet latency as N concurrent cards would deliver it."""
         t0 = time.perf_counter()
         while self.has_work:
-            for r in self.replicas:
+            for i, r in enumerate(self.replicas):
                 if r.has_work:
+                    s0 = time.perf_counter()
                     r.step_once()
+                    self.record_dispatch(i, time.perf_counter() - s0)
         self._serving_s += time.perf_counter() - t0
 
     def run_concurrent(self):
@@ -122,14 +168,16 @@ class ReplicaRouter:
         Requires a fully-routed, not-yet-started fleet (no in-flight
         work)."""
         busiest = 0.0
-        for r in self.replicas:
+        for i, r in enumerate(self.replicas):
             if r.inflight:
                 raise RuntimeError("run_concurrent needs an idle fleet; "
                                    "use run_until_drained mid-flight")
             t0 = time.perf_counter()
             r.scheduler.rebase_pending(t0)
             while r.has_work:
+                s0 = time.perf_counter()
                 r.step_once()
+                self.record_dispatch(i, time.perf_counter() - s0)
             took = time.perf_counter() - t0
             r.telemetry.record_serving_window(took)
             busiest = max(busiest, took)
@@ -150,6 +198,7 @@ class ReplicaRouter:
         out = self.fleet_telemetry().summary()
         out["replicas"] = len(self.replicas)
         out["routed_per_replica"] = list(self.routed)
+        out["route"] = self.route_mode
         return out
 
     def report(self) -> str:

@@ -43,8 +43,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
-from repro.core.bucketing import pick_bucket
-from repro.serving.telemetry import Telemetry
+from repro.core.bucketing import DEFAULT_BUCKETS, pick_bucket
+from repro.serving.telemetry import Telemetry, percentile
 
 # pass as slo_ms to submit() to force a deadline-less (best-effort) ticket
 # even when the scheduler carries a default_slo_ms
@@ -57,12 +57,15 @@ class Ticket:
     tid: int
     payload: Any
     size: int = 0                       # tokens / rows — policy hint
+    size0: int = 0                      # size at submit (resubmit shrinks
+                                        # ``size`` to the next chunk)
     priority: int = 0                   # 0 = most important (like nice)
     enqueue_t: float = 0.0
     deadline_t: Optional[float] = None  # absolute perf_counter deadline
-    admit_t: float = 0.0
+    admit_t: Optional[float] = None     # stamped at FIRST admission
     finish_t: float = 0.0
     shed: bool = False                  # rejected at admission (429)
+    continuation: bool = False          # re-enqueued chunked-prefill ticket
 
     @property
     def latency_ms(self) -> float:
@@ -170,6 +173,43 @@ def make_policy(name_or_policy) -> Policy:
                          f"choose from {sorted(POLICIES)}")
 
 
+# ---- live service-time estimation -----------------------------------------
+
+class ServiceEstimator:
+    """Admission-estimator calibration from live telemetry (ROADMAP open
+    item): the per-ticket service estimate the feasibility check charges
+    is the p50 of recent completions in the ticket's size bucket, not a
+    hand-tuned constant. Falls back to the pooled p50 across buckets,
+    then to the static seed estimate (``fallback_ms``), until a bucket
+    has accumulated ``min_samples`` observations."""
+
+    def __init__(self, fallback_ms: Optional[float] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 window: int = 64, min_samples: int = 5):
+        self.fallback_ms = fallback_ms
+        self.buckets = tuple(buckets)
+        self.window = window
+        self.min_samples = min_samples
+        self._samples: Dict[int, List[float]] = {}
+        self._pooled: List[float] = []
+
+    def observe(self, size: int, service_ms: float):
+        b = pick_bucket(size, self.buckets)
+        s = self._samples.setdefault(b, [])
+        s.append(service_ms)
+        del s[:-self.window]
+        self._pooled.append(service_ms)
+        del self._pooled[:-self.window * 4]
+
+    def estimate(self, size: int) -> Optional[float]:
+        s = self._samples.get(pick_bucket(size, self.buckets), [])
+        if len(s) >= self.min_samples:
+            return percentile(sorted(s), 0.5)
+        if len(self._pooled) >= self.min_samples:
+            return percentile(sorted(self._pooled), 0.5)
+        return self.fallback_ms
+
+
 # ---- the scheduler --------------------------------------------------------
 
 class Scheduler:
@@ -185,7 +225,11 @@ class Scheduler:
     - ``service_ms_est``  — estimated per-ticket service time; a ticket
       whose deadline slack cannot cover the estimated service of every
       pending ticket in the same-or-better priority class *plus its own*
-      is shed at submit time (it would only be served to miss).
+      is shed at submit time (it would only be served to miss). Pass the
+      string ``"auto"`` to calibrate the estimate from live telemetry
+      instead (p50 of recent completions per size bucket — see
+      ``ServiceEstimator``); ``service_ms_fallback`` seeds the check
+      until enough completions exist.
 
     Shed tickets come back with ``shed=True``, never enter the queue,
     and count in ``telemetry.shed`` — not in SLA misses.
@@ -195,27 +239,53 @@ class Scheduler:
                  telemetry: Optional[Telemetry] = None,
                  default_slo_ms: Optional[float] = None,
                  max_queue: Optional[int] = None,
-                 service_ms_est: Optional[float] = None):
+                 service_ms_est: Optional[float | str] = None,
+                 service_ms_fallback: Optional[float] = None):
         self.policy = make_policy(policy)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.default_slo_ms = default_slo_ms
         self.max_queue = max_queue
-        self.service_ms_est = service_ms_est
+        if service_ms_est == "auto":
+            self.service_ms_est = None
+            self._svc_auto: Optional[ServiceEstimator] = \
+                ServiceEstimator(fallback_ms=service_ms_fallback)
+        elif isinstance(service_ms_est, str):
+            raise ValueError(f"service_ms_est must be a number, 'auto', or "
+                             f"None; got {service_ms_est!r}")
+        else:
+            self.service_ms_est = service_ms_est
+            self._svc_auto = None
         self._pending: List[Ticket] = []
         self._ids = itertools.count()
 
     # -- queue side --------------------------------------------------------
+    def service_ms_for(self, size: int) -> Optional[float]:
+        """Current per-ticket service estimate for a ticket of ``size``
+        (None = no estimate yet, so no feasibility shedding)."""
+        if self._svc_auto is not None:
+            return self._svc_auto.estimate(size)
+        return self.service_ms_est
+
     def _infeasible(self, t: Ticket, now: float) -> bool:
         """Deadline-feasibility: can ``t`` still meet its SLA behind the
         pending work that outranks it? Work ahead = pending tickets of
         the same or a better (numerically <=) priority class — under the
         priority policy those are served first, and under FIFO/EDF every
         ticket is class 0 so this is simply the whole queue."""
-        if self.service_ms_est is None or t.deadline_t is None:
+        if t.deadline_t is None:
             return False
-        ahead = sum(1 for p in self._pending if p.priority <= t.priority)
-        need_s = (ahead + 1) * self.service_ms_est / 1e3
-        return t.slack_s(now) < need_s
+        own = self.service_ms_for(t.size)
+        if own is None:
+            return False
+        ahead = [p for p in self._pending if p.priority <= t.priority]
+        if self._svc_auto is None:
+            need_ms = (len(ahead) + 1) * own
+        else:
+            # per-ticket estimates: the work ahead is charged at each
+            # pending ticket's own size-bucket p50
+            need_ms = own + sum(self.service_ms_for(p.size) or own
+                                for p in ahead)
+        return t.slack_s(now) < need_ms / 1e3
 
     def submit(self, payload: Any, *, size: int = 0, priority: int = 0,
                slo_ms: Optional[float] = None,
@@ -230,8 +300,8 @@ class Scheduler:
         slo = slo_ms if slo_ms is not None else self.default_slo_ms
         deadline = (now + slo / 1e3) if slo is not None \
             and math.isfinite(slo) else None
-        t = Ticket(next(self._ids), payload, size=size, priority=priority,
-                   enqueue_t=now, deadline_t=deadline)
+        t = Ticket(next(self._ids), payload, size=size, size0=size,
+                   priority=priority, enqueue_t=now, deadline_t=deadline)
         if (self.max_queue is not None
                 and len(self._pending) >= self.max_queue) \
                 or self._infeasible(t, now):
@@ -241,9 +311,40 @@ class Scheduler:
         self._pending.append(t)
         return t
 
+    def resubmit(self, ticket: Ticket, *, size: Optional[int] = None,
+                 now: Optional[float] = None) -> Ticket:
+        """Re-enqueue a partially-served ticket — the chunked-prefill
+        *continuation*: the next chunk of a long prompt re-enters the
+        queue so waiting traffic can interleave between chunks. The
+        ticket keeps its tid, enqueue time, priority, and deadline, so
+        aging credit and EDF rank carry over (a continuation never loses
+        ground to fresher arrivals — the bounded-starvation guarantee
+        holds across chunk boundaries). Continuations bypass admission
+        control entirely: the work was already accepted, so shedding it
+        mid-flight would break conservation. ``size`` updates the policy
+        hint to the remaining chunk length. Appended at the back of the
+        queue, so FIFO naturally rotates waiting requests in between a
+        long prompt's chunks."""
+        if ticket.shed:
+            raise ValueError("cannot resubmit a shed ticket")
+        if size is not None:
+            ticket.size = size
+        ticket.continuation = True
+        self._pending.append(ticket)
+        self.telemetry.record_continuation()
+        return ticket
+
     @property
     def depth(self) -> int:
         return len(self._pending)
+
+    @property
+    def fresh_depth(self) -> int:
+        """Pending tickets that are NOT continuations. A continuation's
+        request is already counted in the engine's in-flight set (it
+        holds a KV slot), so load accounting that sums queue depth and
+        in-flight work must use this or count chunked requests twice."""
+        return sum(1 for t in self._pending if not t.continuation)
 
     @property
     def deadline_depth(self) -> int:
@@ -255,7 +356,10 @@ class Scheduler:
 
     # -- engine side -------------------------------------------------------
     def admit(self, k: int, now: Optional[float] = None) -> List[Ticket]:
-        """Pop up to k tickets chosen by the policy; stamps admit_t."""
+        """Pop up to k tickets chosen by the policy; stamps admit_t on
+        first admission (continuation re-admissions keep the original
+        stamp, so service = first-admit -> finish spans the whole
+        chunked prefill)."""
         if k <= 0 or not self._pending:
             return []
         now = time.perf_counter() if now is None else now
@@ -264,8 +368,54 @@ class Scheduler:
         picked = set(id(t) for t in chosen)
         self._pending = [t for t in self._pending if id(t) not in picked]
         for t in chosen:
-            t.admit_t = now
+            if t.admit_t is None:
+                t.admit_t = now
         return chosen
+
+    def admit_coherent(self, k: int, now: Optional[float] = None, *,
+                       bucket_fn: Callable[[Ticket], int],
+                       new_cap: Optional[int] = None) -> List[Ticket]:
+        """Admit up to ``k`` tickets forming ONE bucket-coherent group —
+        the chunked-prefill admission: one compiled chunk executable
+        serves the whole group, and the engine runs at most one group
+        per decode tick. The policy ranks all pending work as usual; the
+        group seeds from the best-ranked admissible ticket and fills
+        with same-``bucket_fn``-bucket tickets in rank order.
+
+        ``new_cap`` bounds how many of the admitted tickets may be fresh
+        (non-continuation): fresh tickets need a free KV slot, while
+        continuations already own one — without the cap a policy could
+        hand the engine more new work than it has slots. Continuations
+        are never cap-filtered, so whenever one is pending the group is
+        non-empty and mid-prefill work cannot deadlock behind
+        slot-starved fresh arrivals."""
+        if k <= 0 or not self._pending:
+            return []
+        now = time.perf_counter() if now is None else now
+        self.telemetry.record_queue_depth(len(self._pending))
+        ranked = self.policy.select(self._pending, len(self._pending), now)
+        group: List[Ticket] = []
+        bucket = None
+        fresh = 0
+        for t in ranked:
+            if len(group) >= k:
+                break
+            if not t.continuation and new_cap is not None \
+                    and fresh >= new_cap:
+                continue
+            b = bucket_fn(t)
+            if bucket is None:
+                bucket = b
+            elif b != bucket:
+                continue
+            group.append(t)
+            fresh += not t.continuation
+        picked = set(id(t) for t in group)
+        self._pending = [t for t in self._pending if id(t) not in picked]
+        for t in group:
+            if t.admit_t is None:
+                t.admit_t = now
+        return group
 
     def rebase_pending(self, now: Optional[float] = None):
         """Shift every pending ticket's enqueue/deadline stamp so its age
@@ -283,10 +433,19 @@ class Scheduler:
                 t.deadline_t += dt
 
     def complete(self, ticket: Ticket, now: Optional[float] = None):
-        """Stamp finish time and fold latency/SLA into telemetry."""
+        """Stamp finish time and fold latency/SLA into telemetry. With
+        ``service_ms_est="auto"``, also feeds the live estimator: the
+        observed service is admit -> finish (queue wait excluded — the
+        feasibility check adds the queue itself on top)."""
         now = time.perf_counter() if now is None else now
         ticket.finish_t = now
         missed = (None if ticket.deadline_t is None
                   else now > ticket.deadline_t)
         self.telemetry.record_latency(ticket.latency_ms, missed)
         self.telemetry.served += 1
+        if self._svc_auto is not None and ticket.admit_t is not None:
+            # size0 + first-admit stamp: a chunked ticket's observation
+            # covers the WHOLE prefill+decode under its submitted size,
+            # not the last chunk's sliver under a tiny bucket
+            self._svc_auto.observe(ticket.size0,
+                                   (now - ticket.admit_t) * 1e3)

@@ -46,9 +46,11 @@ class Telemetry:
 
     # scheduler-side distributions
     latencies_ms: List[float] = field(default_factory=list)
+    ttft_ms: List[float] = field(default_factory=list)   # time-to-first-token
     sla_misses: int = 0
     sla_total: int = 0             # completions that carried a deadline
     shed: int = 0                  # admission rejections (429) — NOT misses
+    continuations: int = 0         # chunked-prefill re-enqueues (not submits)
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -78,6 +80,22 @@ class Telemetry:
         the feasibility check is calibrated against."""
         self.shed += 1
 
+    def record_continuation(self):
+        """One chunked-prefill continuation re-entered the queue. Tracked
+        apart from submits so conservation stays checkable: submitted =
+        finally-admitted + pending + shed, with continuations as
+        intermediate re-admissions of already-accepted work."""
+        self.continuations += 1
+
+    def record_ttft(self, ttft_ms: float):
+        """Time-to-first-token for one request: enqueue -> first generated
+        token materialized. The paper's latency-bounded traffic cares
+        about this, not end-to-end latency — a long prefill ahead of you
+        is pure TTFT; decode steps are per-token."""
+        self.ttft_ms.append(ttft_ms)
+        if len(self.ttft_ms) > MAX_SAMPLES:
+            del self.ttft_ms[:-MAX_SAMPLES]
+
     def record_latency(self, latency_ms: float,
                        deadline_missed: Optional[bool] = None):
         self.latencies_ms.append(latency_ms)
@@ -96,7 +114,9 @@ class Telemetry:
         self.served = self.steps = self.prefills = 0
         self.prefill_batches = self.total_tokens = 0
         self.latencies_ms = []
+        self.ttft_ms = []
         self.sla_misses = self.sla_total = self.shed = 0
+        self.continuations = 0
         self.queue_depths = []
         self.stage_calls = {}
         self.stage_dispatch_s = {}
@@ -122,6 +142,12 @@ class Telemetry:
 
     def latency_percentiles(self) -> Dict[str, float]:
         s = sorted(self.latencies_ms)
+        return {"p50": percentile(s, 0.50), "p95": percentile(s, 0.95),
+                "p99": percentile(s, 0.99),
+                "max": s[-1] if s else 0.0}
+
+    def ttft_percentiles(self) -> Dict[str, float]:
+        s = sorted(self.ttft_ms)
         return {"p50": percentile(s, 0.50), "p95": percentile(s, 0.95),
                 "p99": percentile(s, 0.99),
                 "max": s[-1] if s else 0.0}
@@ -159,7 +185,9 @@ class Telemetry:
             out.sla_misses += p.sla_misses
             out.sla_total += p.sla_total
             out.shed += p.shed
+            out.continuations += p.continuations
             out.latencies_ms.extend(p.latencies_ms)
+            out.ttft_ms.extend(p.ttft_ms)
             out.queue_depths.extend(p.queue_depths)
             for k, v in p.compiles.items():
                 out.compiles[k] = out.compiles.get(k, 0) + v
@@ -180,9 +208,12 @@ class Telemetry:
                "compile_count": self.compile_count,
                "sla_miss_frac": self.sla_miss_frac,
                "shed": self.shed,
+               "continuations": self.continuations,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
+        for k in ("p50", "p95", "p99"):
+            out[f"ttft_ms_{k}"] = self.ttft_percentiles()[k]
         for stage, n in self.stage_calls.items():
             out[f"dispatches_{stage}"] = n
         return out
@@ -196,6 +227,13 @@ class Telemetry:
                  + decode,
                  f"latency ms: p50={pct['p50']:.1f} p95={pct['p95']:.1f} "
                  f"p99={pct['p99']:.1f} max={pct['max']:.1f}"]
+        if self.ttft_ms:
+            tp = self.ttft_percentiles()
+            lines.append(f"TTFT ms: p50={tp['p50']:.1f} p95={tp['p95']:.1f} "
+                         f"p99={tp['p99']:.1f} max={tp['max']:.1f}")
+        if self.continuations:
+            lines.append(f"{self.continuations} chunked-prefill "
+                         f"continuations")
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")

@@ -51,6 +51,71 @@ def test_router_requires_replicas():
         ReplicaRouter([])
 
 
+# ---- EWMA feedback routing (PR 3 satellite) -------------------------------
+
+def test_feedback_routing_starves_slow_replica_proportionally():
+    """route="feedback": with measured per-replica step times folded into
+    the EWMA, a replica 3x slower than its sibling settles at roughly
+    1/3 of the traffic under a pure submit sequence (cost = (load+1) x
+    EWMA), instead of the half that count-based routing would give."""
+    router = ReplicaRouter([_Stub(), _Stub()], route="feedback")
+    router.record_dispatch(0, 0.010)            # fast card: 10 ms steps
+    router.record_dispatch(1, 0.030)            # slow card: 30 ms steps
+    n = 60
+    for i in range(n):
+        router.submit(i)
+    fast, slow = router.routed
+    assert fast + slow == n
+    assert slow < fast                           # less traffic, full stop
+    # proportionality: cost balance implies fast/slow ~ 3; allow slack
+    # for the integer lattice but rule out count-balance (30/30)
+    assert slow <= fast / 2
+    assert abs(fast - 3 * slow) <= 4
+
+
+def test_feedback_routing_without_measurements_degrades_to_count():
+    router = ReplicaRouter([_Stub(), _Stub(), _Stub()], route="feedback")
+    for i in range(9):
+        router.submit(i)
+    assert router.routed == [3, 3, 3]
+    assert spread(router) == 0
+
+
+def test_feedback_unmeasured_replica_charged_fleet_mean():
+    """A replica with no EWMA sample yet neither hoards traffic (cost 0)
+    nor starves: it is charged the fleet-mean step time."""
+    router = ReplicaRouter([_Stub(), _Stub()], route="feedback")
+    router.record_dispatch(0, 0.020)            # only replica 0 measured
+    for i in range(20):
+        router.submit(i)
+    assert min(router.routed) >= 8               # near-even split
+
+
+def test_feedback_ewma_folds_measurements():
+    router = ReplicaRouter([_Stub()], route="feedback", ewma_alpha=0.5)
+    router.record_dispatch(0, 0.010)
+    assert router.ewma_s[0] == pytest.approx(0.010)
+    router.record_dispatch(0, 0.030)
+    assert router.ewma_s[0] == pytest.approx(0.020)
+
+
+def test_drive_loops_feed_the_ewma(lm_setup):
+    cfg, params = lm_setup
+    reps = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
+                         prefill_buckets=(8, 16))
+    router = ReplicaRouter(reps, route="feedback")
+    for r in _trace(cfg):
+        router.submit(r)
+    router.run_until_drained()
+    assert all(e > 0 for e in router.ewma_s)
+    assert router.summary()["route"] == "feedback"
+
+
+def test_router_rejects_unknown_route():
+    with pytest.raises(ValueError):
+        ReplicaRouter([_Stub()], route="fastest")
+
+
 # ---- fleet telemetry aggregation (satellite: pooled percentiles) ----------
 
 def test_fleet_percentiles_match_pooled_raw_samples():
@@ -209,7 +274,12 @@ def _fake_payload():
             "router": {"offered_load": 1, "slo_ms": 1.0, "single": fleet,
                        "dual": fleet, "p99_improved": True,
                        "misses_improved": True},
-            "overload": {"service_ms_est": 1.0, "high": cls, "low": cls}}
+            "overload": {"service_ms_est": 1.0, "high": cls, "low": cls},
+            "chunked_prefill": {"offered_load_ms": 1.0, "requests": 1,
+                                "long_tokens": 1, "prefill_chunk": 1,
+                                "monolithic": _fake_summary(),
+                                "chunked": _fake_summary(),
+                                "ttft_p99_improved": True}}
 
 
 def test_bench_payload_schema_validates():
@@ -222,11 +292,13 @@ def test_bench_payload_schema_rejects_missing_keys():
     p = _fake_payload()
     del p["router"]["single"]["latency_ms_p99"]
     del p["overload"]["high"]["sla_attainment"]
+    del p["chunked_prefill"]["chunked"]["ttft_ms_p99"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
     assert "router.single.latency_ms_p99" in msg
     assert "overload.high.sla_attainment" in msg
+    assert "chunked_prefill.chunked.ttft_ms_p99" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -16,7 +16,13 @@ contract this suite pins down (see ROADMAP.md "Testing strategy"):
   dispatch) and count only in the rejection counter,
 - admission sequences are deterministic under a fixed seed,
 - the router always lands a submit on a minimum-load replica, so the
-  routed-count spread over an all-submit sequence is bounded by 1.
+  routed-count spread over an all-submit sequence is bounded by 1,
+- chunked-prefill continuations (PR 3): conservation holds with
+  continuation tickets in flight (submitted = finally-admitted +
+  pending + shed, resubmits counted separately), a continuation never
+  loses priority/aging credit or its deadline, coherent-group admission
+  is bucket-pure and respects the fresh-ticket slot cap, and chunked
+  admission is deterministic under a fixed seed.
 
 All tests drive the scheduler on a virtual clock (the ``now=`` hooks), so
 they are exact — no wall-clock tolerance anywhere.
@@ -269,6 +275,212 @@ def test_best_effort_no_slo_never_counts():
     s.complete(t, now=9.0)
     assert tel.sla_total == 0 and tel.sla_misses == 0
     assert tel.served == 1
+
+
+# ---- chunked-prefill continuations (PR 3) --------------------------------
+
+def _buckets_fn(buckets=(8, 16, 32)):
+    return lambda t: pick_bucket(max(t.size, 1), buckets)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       policy=st.sampled_from(POLICY_NAMES), k=st.integers(1, 4))
+def test_conservation_with_continuations_in_flight(seed, n, policy, k):
+    """Multiset identity with chunking: a ticket admitted mid-prefill
+    re-enters the queue via resubmit; across any interleaving every
+    submitted tid still ends up exactly once in {finally-admitted,
+    pending, shed}, and the continuation counter equals the number of
+    resubmits — no ticket is lost, duplicated, or shed mid-flight."""
+    rng = np.random.default_rng(seed)
+    tel = Telemetry()
+    s = Scheduler(policy, telemetry=tel, max_queue=n)
+    sizes, prios, slos, arrivals = _random_trace(rng, n)
+    chunks_left = {}                    # tid -> remaining chunks
+    submitted, done, shed = [], [], []
+    resubmits = 0
+    now = 0.0
+    for i in range(n):
+        now = float(arrivals[i])
+        t = s.submit(i, size=int(sizes[i]), priority=int(prios[i]),
+                     slo_ms=slos[i], now=now)
+        submitted.append(t)
+        if t.shed:
+            shed.append(t)
+        else:
+            chunks_left[t.tid] = int(rng.integers(1, 4))
+        if rng.random() < 0.5:
+            got = s.admit_coherent(k, now=now, bucket_fn=_buckets_fn(),
+                                   new_cap=k)
+            for g in got:
+                chunks_left[g.tid] -= 1
+                if chunks_left[g.tid] > 0:
+                    s.resubmit(g, size=max(g.size // 2, 1), now=now)
+                    resubmits += 1
+                else:
+                    done.append(g)
+    while s.depth:                      # drain, one chunk per round
+        now += 0.01
+        for g in s.admit_coherent(k, now=now, bucket_fn=_buckets_fn(),
+                                  new_cap=k):
+            chunks_left[g.tid] -= 1
+            if chunks_left[g.tid] > 0:
+                s.resubmit(g, size=max(g.size // 2, 1), now=now)
+                resubmits += 1
+            else:
+                done.append(g)
+    tids = Counter(t.tid for t in done) + Counter(t.tid for t in shed)
+    assert set(tids) == {t.tid for t in submitted}
+    assert all(c == 1 for c in tids.values()), "ticket duplicated"
+    assert tel.continuations == resubmits
+    assert tel.shed == len(shed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), prio=st.integers(1, 4),
+       aging_s=st.floats(0.1, 5.0))
+def test_continuation_keeps_priority_and_aging_credit(seed, prio, aging_s):
+    """A continuation preserves tid, enqueue_t, priority, and deadline:
+    once the original ticket has waited past prio * aging_s, its
+    continuation outranks a freshly-arrived priority-0 ticket exactly
+    as the original would have — chunking cannot reset the
+    bounded-starvation clock."""
+    pol = PriorityAgingPolicy(aging_s=aging_s)
+    s = Scheduler(pol, default_slo_ms=500.0)
+    old = s.submit("old", priority=prio, now=0.0)
+    deadline = old.deadline_t
+    got = s.admit(1, now=0.1)
+    assert got == [old]
+    s.resubmit(old, size=7, now=0.2)
+    assert old.continuation and old.size == 7
+    assert old.enqueue_t == 0.0                 # aging credit preserved
+    assert old.deadline_t == deadline           # EDF rank preserved
+    now = prio * aging_s * 1.001                # just past the bound
+    s.submit("fresh", priority=0, now=now)
+    assert [t.payload for t in s.admit(1, now=now)] == ["old"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 30),
+       k=st.integers(1, 6), cap=st.integers(0, 3))
+def test_admit_coherent_is_bucket_pure_and_caps_fresh(seed, n, k, cap):
+    """Every coherent group maps to ONE bucket, and at most new_cap of
+    its members are fresh (continuations already own a KV slot, fresh
+    tickets need a free one)."""
+    rng = np.random.default_rng(seed)
+    s = Scheduler("fifo")
+    bucket_fn = _buckets_fn()
+    for i in range(n):
+        t = s.submit(i, size=int(rng.integers(1, 40)),
+                     now=float(i) * 0.01)
+        if rng.random() < 0.3:          # some tickets are continuations
+            s.admit(0)                  # no-op, keeps clock semantics
+            t.continuation = True
+            s.telemetry.record_continuation()
+    while s.depth:
+        before = s.depth
+        group = s.admit_coherent(k, now=99.0, bucket_fn=bucket_fn,
+                                 new_cap=cap)
+        if not group:
+            # only fresh tickets left and cap == 0: nothing admissible
+            assert cap == 0
+            assert not any(t.continuation for t in s._pending)
+            break
+        assert len(group) <= k
+        assert len({bucket_fn(t) for t in group}) == 1, "bucket impure"
+        assert sum(not t.continuation for t in group) <= cap
+        assert s.depth == before - len(group)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       policy=st.sampled_from(POLICY_NAMES))
+def test_chunked_admission_deterministic_under_fixed_seed(seed, n, policy):
+    """Same trace + same virtual clock => identical coherent-admission
+    order, including the resubmit interleavings."""
+    def run():
+        rng = np.random.default_rng(seed)
+        s = Scheduler(policy)
+        sizes, prios, slos, arrivals = _random_trace(rng, n)
+        order = []
+        chunks = {}
+        for i in range(n):
+            t = s.submit(i, size=int(sizes[i]), priority=int(prios[i]),
+                         slo_ms=slos[i], now=float(arrivals[i]))
+            chunks[t.tid] = int(rng.integers(1, 3))
+            if rng.random() < 0.5:
+                for g in s.admit_coherent(2, now=float(arrivals[i]),
+                                          bucket_fn=_buckets_fn(),
+                                          new_cap=2):
+                    order.append(g.tid)
+                    chunks[g.tid] -= 1
+                    if chunks[g.tid] > 0:
+                        s.resubmit(g, now=float(arrivals[i]))
+        now = 99.0
+        while s.depth:
+            now += 0.01
+            for g in s.admit_coherent(3, now=now, bucket_fn=_buckets_fn(),
+                                      new_cap=3):
+                order.append(g.tid)
+                chunks[g.tid] -= 1
+                if chunks[g.tid] > 0:
+                    s.resubmit(g, now=now)
+        return order
+
+    assert run() == run()
+
+
+def test_resubmit_refuses_shed_ticket():
+    s = Scheduler("fifo", max_queue=0)
+    t = s.submit("x", now=0.0)
+    assert t.shed
+    with pytest.raises(ValueError):
+        s.resubmit(t)
+
+
+# ---- live service estimation (auto admission calibration) -----------------
+
+def test_auto_estimator_falls_back_until_samples_exist():
+    """service_ms_est="auto": no shedding before any completions (no
+    estimate), static fallback until min_samples, then the per-bucket
+    p50 of observed admit->finish service times."""
+    s = Scheduler("fifo", service_ms_est="auto", service_ms_fallback=20.0)
+    assert s.service_ms_for(10) == 20.0          # fallback seeds the check
+    for i in range(5):
+        t = s.submit(i, size=10, now=float(i))
+        s.admit(1, now=float(i))
+        s.complete(t, now=float(i) + 0.05)       # 50 ms service each
+    assert s.service_ms_for(10) == pytest.approx(50.0)
+    # a bucket with no samples borrows the pooled p50, not the fallback
+    assert s.service_ms_for(400) == pytest.approx(50.0)
+
+
+def test_auto_estimator_none_without_fallback_means_no_shedding():
+    s = Scheduler("fifo", service_ms_est="auto", default_slo_ms=0.001)
+    t = s.submit("tight", now=0.0)               # absurdly tight deadline
+    assert not t.shed                            # no estimate -> no check
+
+
+def test_auto_estimator_sheds_like_static_once_calibrated():
+    """Once calibrated, the feasibility check sheds a ticket whose slack
+    cannot cover the queue ahead at the measured per-bucket p50."""
+    s = Scheduler("fifo", service_ms_est="auto")
+    for i in range(5):
+        t = s.submit(i, size=8, now=float(i))
+        s.admit(1, now=float(i))
+        s.complete(t, now=float(i) + 0.1)        # 100 ms per ticket
+    for i in range(3):                           # 3 pending ahead
+        s.submit(f"p{i}", size=8, now=10.0)
+    ok = s.submit("roomy", size=8, slo_ms=1_000.0, now=10.0)
+    tight = s.submit("tight", size=8, slo_ms=150.0, now=10.0)
+    assert not ok.shed
+    assert tight.shed                            # needs ~500ms, has 150
+    assert s.service_ms_for(8) == pytest.approx(100.0)
+
+
+def test_rejects_unknown_service_est_string():
+    with pytest.raises(ValueError):
+        Scheduler("fifo", service_ms_est="fast")
 
 
 # ---- router balance -------------------------------------------------------

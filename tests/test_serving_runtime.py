@@ -1,6 +1,8 @@
 """Unified serving runtime: scheduler policies (FIFO/EDF/size x time),
 SLA-miss accounting, slot-refill invariants, batched-prefill equivalence
-vs per-request prefill, N-stage pipeline driver, stage executor cache."""
+vs per-request prefill, chunked-prefill equivalence vs monolithic
+prefill (PR 3), TTFT telemetry, N-stage pipeline driver, stage executor
+cache."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -158,6 +160,127 @@ def test_per_request_slo_flows_through_engine(lm_setup):
     assert eng.telemetry.sla_total == 4
     assert eng.telemetry.sla_misses == 0      # minute-scale SLO on smoke
     assert eng.telemetry.latency_percentiles()["p95"] > 0
+
+
+# ---- chunked prefill (PR 3) ----------------------------------------------
+
+def _mixed_trace(cfg, seed=5, lens=(40, 5, 9, 30, 3, 12, 26, 7)):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size, l).astype(np.int32),
+                    max_new_tokens=4)
+            for i, l in enumerate(lens)]
+
+
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_chunked_prefill_token_identical_to_monolithic(lm_setup, chunk):
+    """Acceptance: chunked prefill (long prompts split into chunk-sized
+    continuation tickets interleaved with decode) produces exactly the
+    tokens monolithic prefill produces, for every request in a mixed
+    long/short trace."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    mono = InferenceEngine(cfg, params, **kw)
+    ref = _mixed_trace(cfg)
+    mono.run(ref)
+    eng = InferenceEngine(cfg, params, prefill_chunk=chunk, **kw)
+    got = _mixed_trace(cfg)
+    eng.run(got)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.output == b.output, a.rid
+    # the 40-token prompt really was chunked: continuations flowed
+    assert eng.telemetry.continuations > 0
+    assert eng.telemetry.prefills == len(got)
+    assert eng.telemetry.served == len(got)
+
+
+def test_chunked_executable_ladder_stops_at_chunk(lm_setup):
+    """The compile-count win: the chunked engine's prefill-side programs
+    are keyed by chunk bucket (<= prefill_chunk), while the monolithic
+    engine compiles one program per full prompt-length bucket — long
+    traffic therefore stops growing the executable ladder."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=1, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    lens = (40, 20, 12, 6)             # spans buckets 8..48 monolithically
+    mono = InferenceEngine(cfg, params, **kw)
+    mono.run(_mixed_trace(cfg, lens=lens))
+    eng = InferenceEngine(cfg, params, prefill_chunk=16, **kw)
+    eng.run(_mixed_trace(cfg, lens=lens))
+    mono_buckets = {k[1][0] for k in mono.executor.cached_keys("prefill")}
+    chunk_buckets = {k[1][0] for k in
+                     eng.executor.cached_keys("chunk_prefill")}
+    assert max(mono_buckets) > 16       # monolithic compiled a long bucket
+    assert max(chunk_buckets) <= 16     # chunked ladder capped at chunk
+    assert not eng.executor.cached_keys("prefill")
+    assert eng.telemetry.compiles["chunk_prefill"] \
+        < mono.telemetry.compiles["prefill"]
+
+
+def test_chunked_slot_states_partition(lm_setup):
+    """Every slot is exactly one of {free, active, prefilling} at every
+    tick, and mid-prefill requests hold their slot across continuation
+    re-admissions."""
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, batch_slots=3, max_len=64,
+                          prefill_buckets=(8, 16, 32, 48),
+                          prefill_chunk=8)
+    for r in _mixed_trace(cfg):
+        eng.submit(r)
+    saw_prefilling = False
+    while eng.has_work:
+        eng.step_once()
+        states = (len(eng.free) + len(eng.active) + len(eng.prefilling))
+        assert states == eng.batch_slots
+        assert not (set(eng.free) & set(eng.active))
+        assert not (set(eng.free) & set(eng.prefilling.values()))
+        assert not (set(eng.active) & set(eng.prefilling.values()))
+        saw_prefilling |= bool(eng.prefilling)
+    assert saw_prefilling               # the long prompt went multi-chunk
+    assert sorted(eng.free) == list(range(eng.batch_slots))
+
+
+def test_chunked_requires_all_global_attention(lm_setup):
+    cfg, params = lm_setup
+    import dataclasses
+    from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL
+    mixed = dataclasses.replace(cfg, num_layers=2,
+                                block_pattern=(ATTN_GLOBAL, ATTN_LOCAL),
+                                window_size=16)
+    with pytest.raises(ValueError, match="all-global-attention"):
+        InferenceEngine(mixed, params, prefill_chunk=8, batch_slots=2,
+                        max_len=32, prefill_buckets=(8,))
+
+
+def test_ttft_recorded_for_both_prefill_paths(lm_setup):
+    """TTFT (enqueue -> first token) lands in telemetry for monolithic
+    and chunked engines alike: one sample per served request, bounded
+    above by full latency, surfaced in summary() and report()."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=2, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    for chunk in (None, 8):
+        eng = InferenceEngine(cfg, params, prefill_chunk=chunk, **kw)
+        eng.run(_mixed_trace(cfg))
+        tel = eng.telemetry
+        assert len(tel.ttft_ms) == tel.served == 8
+        pct = tel.ttft_percentiles()
+        assert 0 < pct["p50"] <= pct["p99"]
+        lat = tel.latency_percentiles()
+        assert pct["max"] <= lat["max"]
+        assert "ttft_ms_p99" in tel.summary()
+        assert "TTFT ms" in tel.report()
+
+
+def test_chunked_run_deterministic(lm_setup):
+    cfg, params = lm_setup
+    kw = dict(batch_slots=2, max_len=64, prefill_buckets=(8, 16, 32),
+              prefill_chunk=8)
+    a = InferenceEngine(cfg, params, **kw)
+    ra = _mixed_trace(cfg)
+    a.run(ra)
+    b = InferenceEngine(cfg, params, **kw)
+    rb = _mixed_trace(cfg)
+    b.run(rb)
+    assert [r.output for r in ra] == [r.output for r in rb]
 
 
 # ---- N-stage pipeline -----------------------------------------------------
