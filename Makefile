@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test properties smoke smoke-router smoke-chunked bench ci
+.PHONY: test properties smoke smoke-router smoke-chunked smoke-steal bench ci
 
 test:
 	python -m pytest -x -q
@@ -32,7 +32,15 @@ smoke-chunked:
 	    --requests 8 --new-tokens 4 --slots 2 --max-len 64 \
 	    --prefill-chunk 16 --verify-chunked
 
+# work-stealing smoke: 2-replica fleet, every request hot-spotted onto
+# replica 0, replica 0 killed mid-run — asserts nonzero telemetry.steals
+# and a fault drain that loses zero tickets
+smoke-steal:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 2 --replicas 2 \
+	    --steal --verify-steal
+
 bench:
 	python -m benchmarks.run --only serving
 
-ci: test properties smoke smoke-router smoke-chunked bench
+ci: test properties smoke smoke-router smoke-chunked smoke-steal bench

@@ -30,6 +30,18 @@ both call it):
   (summary dicts, median-of-3 passes ranked by TTFT p99),
   ``ttft_p99_improved`` (chunking must cut tail TTFT — the
   head-of-line-blocking win).
+- ``work_stealing``: stealing vs no-steal fleet on the SAME seeded
+  hot-keyed arrival stream (80% of arrivals pinned to replica 0),
+  run on the deterministic virtual-clock fleet sim
+  (``repro.serving.fleet_sim`` — real engines on one CPU serialize
+  replica compute, so a steal cannot change wall-clock completion;
+  the sim gives each replica its own service clock, which is exactly
+  what N concurrent cards do): ``requests``, ``replicas``, ``skew``,
+  ``steal``/``no_steal`` (fleet summary dicts),
+  ``served_per_replica_steal``/``..._no_steal``,
+  ``spread_steal``/``spread_no_steal`` (max-min completed work per
+  replica), ``p99_improved`` and ``spread_improved`` (the stealing
+  fleet must cut tail latency AND balance completed work).
 """
 from __future__ import annotations
 
@@ -55,16 +67,17 @@ JSON_PATH = os.path.join("results", "BENCH_serving.json")
 SUMMARY_KEYS = frozenset({
     "served", "qps", "steps", "prefills", "prefill_batches",
     "total_tokens", "compile_count", "sla_miss_frac", "shed",
-    "continuations", "mean_queue_depth", "latency_ms_p50",
-    "latency_ms_p95", "latency_ms_p99", "latency_ms_max",
-    "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
+    "continuations", "steals", "drained", "mean_queue_depth",
+    "latency_ms_p50", "latency_ms_p95", "latency_ms_p99",
+    "latency_ms_max", "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
 })
 
 
 def validate_payload(payload: Dict) -> None:
     """Raise ValueError unless ``payload`` matches the documented schema."""
     missing = []
-    for section in ("lm", "dlrm", "router", "overload", "chunked_prefill"):
+    for section in ("lm", "dlrm", "router", "overload", "chunked_prefill",
+                    "work_stealing"):
         if section not in payload:
             missing.append(section)
     for section in ("lm", "dlrm"):
@@ -95,6 +108,16 @@ def validate_payload(payload: Dict) -> None:
     for mode in ("monolithic", "chunked"):
         for k in sorted(SUMMARY_KEYS - set(chunk.get(mode, {}))):
             missing.append(f"chunked_prefill.{mode}.{k}")
+    ws = payload.get("work_stealing", {})
+    for k in ("requests", "replicas", "skew", "steal", "no_steal",
+              "served_per_replica_steal", "served_per_replica_no_steal",
+              "spread_steal", "spread_no_steal", "p99_improved",
+              "spread_improved"):
+        if k not in ws:
+            missing.append(f"work_stealing.{k}")
+    for mode in ("steal", "no_steal"):
+        for k in sorted(SUMMARY_KEYS - set(ws.get(mode, {}))):
+            missing.append(f"work_stealing.{mode}.{k}")
     if missing:
         raise ValueError("BENCH_serving.json schema violation; missing: "
                          + ", ".join(missing))
@@ -412,14 +435,65 @@ def _chunked_summary():
                 chunk_s["ttft_ms_p99"] < mono_s["ttft_ms_p99"]}
 
 
+# ---- work stealing: skewed stream on the deterministic fleet sim ----------
+
+_WS_LOAD = 120             # arrivals in the seeded stream
+_WS_SKEW = 0.8             # fraction pinned to the hot replica
+_WS_REPLICAS = 3
+_WS_GAP_S = 0.004          # mean arrival gap (virtual seconds)
+_WS_SERVICE_S = 0.01       # per-ticket service time (virtual seconds)
+
+
+def _work_stealing_summary():
+    """Stealing vs no-steal fleet on the SAME seeded hot-keyed stream.
+
+    80% of arrivals pin to replica 0 (session affinity / hot-keyed
+    traffic — the skew routing cannot fix, because these submits never
+    consult the router). Offered load is within fleet capacity
+    (3 replicas x 0.01s service vs one arrival per 4ms) but far beyond
+    the hot replica alone, so without stealing its queue grows without
+    bound while the siblings idle. Virtual clock end to end: both runs
+    are bit-deterministic, and the p99 / completed-work-spread deltas
+    are properties of the policy, not of CPU jitter."""
+    from repro.serving.fleet_sim import FleetSim
+
+    def one(steal: bool):
+        sim = FleetSim(replicas=_WS_REPLICAS, service_s=_WS_SERVICE_S,
+                       slots=1, steal=steal, dt=0.0025, seed=0)
+        rng = np.random.default_rng(1)
+        arrivals = np.cumsum(rng.exponential(_WS_GAP_S, _WS_LOAD))
+        i = 0
+        while i < len(arrivals) or sim.router.has_work:
+            while i < len(arrivals) and arrivals[i] <= sim.now:
+                sim.submit(pin=0 if rng.random() < _WS_SKEW else None)
+                i += 1
+            sim.tick()
+        sim.assert_conserved()
+        return sim.fleet_summary(), sim.served_per_replica()
+
+    no_steal, served_ns = one(False)
+    steal, served_s = one(True)
+    spread_ns = max(served_ns) - min(served_ns)
+    spread_s = max(served_s) - min(served_s)
+    return {"requests": _WS_LOAD, "replicas": _WS_REPLICAS,
+            "skew": _WS_SKEW, "steal": steal, "no_steal": no_steal,
+            "served_per_replica_steal": served_s,
+            "served_per_replica_no_steal": served_ns,
+            "spread_steal": spread_s, "spread_no_steal": spread_ns,
+            "p99_improved":
+                steal["latency_ms_p99"] < no_steal["latency_ms_p99"],
+            "spread_improved": spread_s < spread_ns}
+
+
 def run() -> List[Row]:
     lm = _lm_summary()
     dlrm = _dlrm_summary()
     router = _router_summary()
     overload = _overload_summary()
     chunked = _chunked_summary()
+    stealing = _work_stealing_summary()
     emit({"lm": lm, "dlrm": dlrm, "router": router, "overload": overload,
-          "chunked_prefill": chunked})
+          "chunked_prefill": chunked, "work_stealing": stealing})
     rows = []
     for name, s in (("lm", lm), ("dlrm", dlrm),
                     ("router_single", router["single"]),
@@ -448,4 +522,14 @@ def run() -> List[Row]:
         f"improved={chunked['ttft_p99_improved']};"
         f"chunk={chunked['prefill_chunk']};"
         f"gap_ms={chunked['offered_load_ms']:.2f};measured=true"))
+    rows.append(Row(
+        "serving/work_stealing",
+        stealing["steal"]["latency_ms_p99"] * 1e3,
+        f"steal_p99_ms={stealing['steal']['latency_ms_p99']:.1f};"
+        f"nosteal_p99_ms={stealing['no_steal']['latency_ms_p99']:.1f};"
+        f"p99_improved={stealing['p99_improved']};"
+        f"spread={stealing['spread_steal']}v{stealing['spread_no_steal']};"
+        f"spread_improved={stealing['spread_improved']};"
+        f"steals={stealing['steal']['steals']};skew={stealing['skew']};"
+        f"measured=true"))
     return rows

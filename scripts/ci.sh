@@ -24,6 +24,9 @@ make smoke-router
 echo "== chunked-prefill smoke: LM chunked vs monolithic token identity =="
 make smoke-chunked
 
+echo "== work-stealing smoke: hot-spot steal + mid-run kill drain =="
+make smoke-steal
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== serving benchmark (results/BENCH_serving.json) =="
     make bench

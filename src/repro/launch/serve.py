@@ -11,7 +11,10 @@ replicas with the ReplicaRouter (the paper's six-cards-behind-one-host
 deployment): tickets route by queue depth + deadline slack
 (``--route feedback`` switches to EWMA-of-dispatch-time costing for
 heterogeneous fleets) and the report is the fleet-level telemetry
-aggregate. ``--max-queue`` / ``--service-ms-est`` turn on bounded-queue /
+aggregate. ``--steal`` turns on cross-replica work stealing (idle
+replicas pull pending fresh tickets from backlogged siblings;
+``--verify-steal`` is the CI smoke: hot-spot everything onto replica 0,
+kill it mid-run, assert nonzero steals and zero lost requests). ``--max-queue`` / ``--service-ms-est`` turn on bounded-queue /
 deadline-feasibility admission control (shed requests are counted
 separately from misses; pass ``--service-ms-est auto`` to calibrate the
 estimate from live telemetry). ``--prefill-chunk N`` splits long prompts
@@ -67,7 +70,10 @@ def serve_lm(args):
             raise SystemExit("--verify-chunked runs single-engine only "
                              "(drop --replicas)")
         router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
-                                             **kw), route=args.route)
+                                             **kw), route=args.route,
+                               steal=args.steal)
+        if args.verify_steal:
+            return _verify_steal(router, reqs, args)
         t0 = time.perf_counter()
         for r in reqs:
             router.submit(r)
@@ -79,6 +85,8 @@ def serve_lm(args):
               f"(routed {router.routed}, shed {router.shed})")
         print(router.report())
         return tel
+    if args.verify_steal:
+        raise SystemExit("--verify-steal needs --replicas >= 2 --steal")
     eng = InferenceEngine(cfg, params, **kw)
     t0 = time.perf_counter()
     eng.run(reqs)
@@ -107,6 +115,38 @@ def serve_lm(args):
     return tel
 
 
+def _verify_steal(router, reqs, args):
+    """The CI steal smoke: a hot-keyed stream lands every request on
+    replica 0, so only stealing puts the siblings to work; replica 0 is
+    then killed mid-run and its outstanding load must drain to the
+    survivors with zero lost requests. Exits non-zero on any violation."""
+    if not args.steal:
+        raise SystemExit("--verify-steal needs --steal")
+    for r in reqs:
+        router.replicas[0].submit(r)        # hot spot: bypass the balancer
+    rounds = 0
+    while router.has_work:
+        router.maybe_steal()
+        for i, rep in enumerate(router.replicas):
+            if not router.dead[i] and rep.has_work:
+                rep.step_once()
+        rounds += 1
+        if rounds == 2:
+            router.drain_replica(0)         # the card dies mid-run
+    tel = router.fleet_telemetry()
+    lost = [r.rid for r in reqs if not r.done]
+    if lost:
+        raise SystemExit(f"FAIL: fault drain lost requests {lost}")
+    if tel.steals == 0:
+        raise SystemExit("FAIL: no steals under a hot-keyed stream")
+    if tel.drained == 0:
+        raise SystemExit("FAIL: mid-run kill drained nothing")
+    print(f"verify-steal OK: {len(reqs)} requests, {tel.steals} stolen, "
+          f"{tel.drained} re-homed by the kill, 0 lost")
+    print(router.report())
+    return tel
+
+
 def serve_dlrm(args):
     from repro.configs import dlrm_paper
     from repro.data.synthetic import dlrm_batches
@@ -125,7 +165,7 @@ def serve_dlrm(args):
     if args.replicas > 1:
         router = ReplicaRouter(dlrm_replicas(cfg, asn, params,
                                              args.replicas, **kw),
-                               route=args.route)
+                               route=args.route, steal=args.steal)
         # full-trace warm-up per replica (T6 unpack compiles per distinct
         # used-prefix shape), excluded from latency/transfer stats
         for rep in router.replicas:
@@ -182,6 +222,13 @@ def main(argv=None):
                     help="per-ticket service estimate for deadline-"
                          "feasibility shedding (a number, or 'auto' to "
                          "calibrate from live telemetry)")
+    ap.add_argument("--steal", action="store_true",
+                    help="cross-replica work stealing: idle replicas pull "
+                         "pending fresh tickets from backlogged siblings")
+    ap.add_argument("--verify-steal", action="store_true",
+                    help="hot-spot all requests onto replica 0, kill it "
+                         "mid-run, and assert nonzero steals + zero lost "
+                         "requests (the CI steal smoke)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="split prompts into N-token chunks interleaved "
                          "with decode steps (LM only)")

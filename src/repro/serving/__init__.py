@@ -19,9 +19,17 @@
 - ``router.py``     — ReplicaRouter: front-end balancer over N engine
   replicas (the paper's six-cards-behind-one-host deployment) routing by
   queue depth + deadline slack, with fleet-level telemetry aggregation
-  (``Telemetry.merged``). Priority classes + admission-control shedding
-  live in the scheduler (``priority`` policy, ``max_queue`` /
-  ``service_ms_est``).
+  (``Telemetry.merged``), cross-replica work stealing (``steal=True``:
+  idle replicas pull pending fresh tickets from backlogged siblings
+  under the ``Scheduler.steal_pending``/``absorb`` re-stamping
+  contract), and replica fault drain (``drain_replica``: a dead card's
+  accepted work re-homes to the live replicas, never lost). Priority
+  classes + admission-control shedding live in the scheduler
+  (``priority`` policy, ``max_queue`` / ``service_ms_est``).
+- ``fleet_sim.py``  — deterministic discrete-event fleet simulator
+  (virtual clock, per-replica service times, seeded arrivals) behind
+  the REAL router; drives the work-stealing property suite
+  (tests/fleet_sim.py) and the bench's ``work_stealing`` section.
 
 The N-stage software-pipeline driver itself lives in
 ``repro/core/pipeline.py`` (paper T2, Fig. 6 generalized).

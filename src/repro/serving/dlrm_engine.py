@@ -114,8 +114,28 @@ class DLRMEngine:
         return 0          # the pipeline pass in step_once is synchronous
 
     @property
+    def free_slots(self) -> int:
+        """Steal admission cap (router hook): the pipeline pass is
+        synchronous, so capacity is the per-step admission group."""
+        return self.step_group
+
+    @property
     def has_work(self) -> bool:
         return self.scheduler.depth > 0
+
+    def steal_eligible(self, t) -> bool:
+        """Steal veto (router hook): a pending DLRM batch holds no device
+        state yet, so everything fresh may move; continuations don't
+        exist on this engine but the guard keeps the contract uniform."""
+        return not t.continuation
+
+    def drain_tickets(self):
+        """Fault-drain hook: the whole pending queue (nothing is ever in
+        flight between steps), reset to fresh for re-homing."""
+        out = self.scheduler.steal_pending(None, include_continuations=True)
+        for t in out:
+            t.reset_fresh()
+        return out
 
     def step_once(self) -> List[Any]:
         """Admit one policy-formed group (at most ``step_group`` batches,

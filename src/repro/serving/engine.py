@@ -135,7 +135,12 @@ class InferenceEngine:
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)
         self.active: Dict[int, Ticket] = {}
-        self.prefilling: Dict[int, int] = {}   # ticket tid -> held KV slot
+        # mid-prefill KV-slot ownership, keyed by ticket OBJECT identity:
+        # tids are per-scheduler counters, so a stolen ticket's tid can
+        # collide with a local mid-prefill ticket's — keying on id() keeps
+        # slot ownership with the object (which is pinned by this map and
+        # the pending queue, so its id cannot be recycled underneath us)
+        self.prefilling: Dict[int, int] = {}   # id(ticket) -> held KV slot
         self.pos = np.zeros(batch_slots, np.int32)
         self.free = list(range(batch_slots))
 
@@ -240,8 +245,51 @@ class InferenceEngine:
         return len(self.active) + len(self.prefilling)
 
     @property
+    def free_slots(self) -> int:
+        """Free KV slots — how many stolen tickets this replica could
+        start right now (the router's steal admission cap)."""
+        return len(self.free)
+
+    @property
     def has_work(self) -> bool:
         return bool(self.scheduler.depth or self.active or self.prefilling)
+
+    def steal_eligible(self, t: Ticket) -> bool:
+        """Steal veto (router hook): continuations and mid-prefill tickets
+        own a KV slot on THIS replica — moving one would strand the
+        partially-written cache rows. Only fresh, not-yet-started tickets
+        may leave."""
+        return not t.continuation and id(t) not in self.prefilling
+
+    def drain_tickets(self) -> List[Ticket]:
+        """Fault-drain hook (``ReplicaRouter.drain_replica``): hand back
+        every accepted-but-unfinished ticket — the pending queue
+        (continuations included) plus the in-flight decode batch — reset
+        to fresh, because the KV state died with the card. Evicted
+        requests restart from token zero on their new home; greedy decode
+        regenerates the same output. Clears all slot state.
+
+        Telemetry contract under a fault: counters measure work
+        PERFORMED, not work delivered — the victim's prefills /
+        total_tokens / TTFT samples for evicted work stand (that compute
+        genuinely ran and its first token was genuinely emitted before
+        the card died), and the surviving replica records the re-serve
+        again. Only ``served`` stays delivery-exact: a ticket completes
+        once. The wasted duplicate work is the measured cost of the
+        fault."""
+        out = self.scheduler.steal_pending(None, include_continuations=True)
+        out.extend(t for _, t in sorted(self.active.items()))
+        self.active.clear()
+        self.prefilling.clear()
+        self.free = list(range(self.batch_slots))
+        self.pos[:] = 0
+        for t in out:
+            req: Request = t.payload
+            req.output = []
+            req.prefill_pos = 0
+            req.done = False
+            t.reset_fresh()
+        return out
 
     def step_once(self):
         """One engine tick — the unified step. Chunked mode: at most ONE
@@ -356,8 +404,8 @@ class InferenceEngine:
             req: Request = t.payload
             off = req.prefill_pos
             clen = min(self._chunk_next_len(req), bucket)
-            slots.append(self.prefilling.pop(t.tid)
-                         if t.tid in self.prefilling else self.free.pop())
+            slots.append(self.prefilling.pop(id(t))
+                         if id(t) in self.prefilling else self.free.pop())
             toks[j, :clen] = req.tokens[off:off + clen]
             start[j] = off
             wpos[j] = off
@@ -380,7 +428,7 @@ class InferenceEngine:
                 self.active[slot] = t
                 self.pos[slot] = req.prefill_pos
             else:
-                self.prefilling[t.tid] = slot
+                self.prefilling[id(t)] = slot
                 self.scheduler.resubmit(t, size=self._chunk_next_len(req))
         self.telemetry.prefill_batches += 1
 

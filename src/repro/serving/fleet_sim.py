@@ -1,0 +1,211 @@
+"""Deterministic discrete-event fleet simulator — the harness that makes
+the work-stealing and fault-drain claims testable at fleet scale.
+
+Real engines on one CPU cannot demonstrate a stealing win: with every
+replica's compute serialized onto the same device, moving queued work
+between replicas changes *which* replica burns the wall time, not when
+the work finishes. The simulator gives each replica its own virtual
+service clock (configurable per-step service time, the paper's
+heterogeneous-cards reality) under ONE shared virtual ``now``, so
+stealing genuinely shortens completion times exactly as it would across
+N concurrent cards — and every run is bit-deterministic (seeded arrival
+processes, no wall-clock reads anywhere), which is what lets the
+property suite drive thousands of submit/steal/fail/complete
+interleavings and assert exact conservation.
+
+``SimReplica`` satisfies the ReplicaRouter replica protocol (submit /
+step via ``step(now)`` / has_work / inflight / free_slots /
+steal_eligible / drain_tickets), so the router under test is the REAL
+router — only the engines are stubs.
+
+Used by ``tests/fleet_sim.py`` (the property-suite harness) and
+``benchmarks/bench_serving.py`` (the ``work_stealing`` section).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.serving.router import ReplicaRouter
+from repro.serving.scheduler import Scheduler, Ticket
+
+
+class SimReplica:
+    """Stub replica with configurable per-step service time and a fixed
+    slot count, driven on a virtual clock. A ticket admitted at ``now``
+    completes at ``now + service_s`` (stamped exactly — completion uses
+    the due time, not the tick that observed it)."""
+
+    def __init__(self, service_s: float = 0.01, slots: int = 1,
+                 policy: str = "fifo", **sched_kw):
+        self.scheduler = Scheduler(policy, **sched_kw)
+        self.telemetry = self.scheduler.telemetry
+        self.service_s = service_s
+        self.slots = slots
+        self.active: List[Tuple[Ticket, float]] = []   # (ticket, due time)
+
+    # ---- replica protocol ------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        return len(self.active)
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - len(self.active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.depth or self.active)
+
+    def submit(self, item, *, slo_ms=None, priority=None, size: int = 0,
+               now: Optional[float] = None, **kw) -> Ticket:
+        return self.scheduler.submit(item, size=size,
+                                     priority=priority or 0,
+                                     slo_ms=slo_ms, now=now)
+
+    def steal_eligible(self, t: Ticket) -> bool:
+        return not t.continuation
+
+    def drain_tickets(self, now: Optional[float] = None) -> List[Ticket]:
+        """Fault path: pending queue + evicted in-flight work, reset to
+        fresh (partial service on the dead card is lost)."""
+        out = self.scheduler.steal_pending(None, now=now,
+                                           include_continuations=True)
+        out.extend(t for t, _ in self.active)
+        self.active = []
+        for t in out:
+            t.reset_fresh()
+        return out
+
+    def step(self, now: float) -> List[Ticket]:
+        """One virtual tick: complete due work at its exact due time, then
+        admit into the freed slots. Returns the completed tickets."""
+        done = [(t, due) for t, due in self.active if due <= now]
+        self.active = [(t, due) for t, due in self.active if due > now]
+        for t, due in done:
+            self.scheduler.complete(t, now=due)
+        for t in self.scheduler.admit(self.free_slots, now=now):
+            self.active.append((t, now + self.service_s))
+        return [t for t, _ in done]
+
+    # step_once exists for protocol completeness (wall-clock callers);
+    # the simulator always drives step(now) on the virtual clock
+    def step_once(self):  # pragma: no cover - sim uses step(now)
+        raise RuntimeError("SimReplica runs on a virtual clock; "
+                           "drive it with step(now) via FleetSim")
+
+
+class FleetSim:
+    """Discrete-event fleet: N SimReplicas behind the real ReplicaRouter,
+    one shared virtual clock, seeded arrivals. Tracks every submitted
+    ticket so conservation (submitted = completed + pending-anywhere +
+    shed, no duplication) is checkable after ANY interleaving of
+    submit / tick / steal / fail. Ticket identity is the sim-global
+    ``payload`` sequence number — tids are per-scheduler and collide
+    across replicas by construction."""
+
+    def __init__(self, *, replicas: int = 3,
+                 service_s: Union[float, Sequence[float]] = 0.01,
+                 slots: int = 1, steal: bool = True, policy: str = "fifo",
+                 dt: float = 0.005, seed: int = 0, **sched_kw):
+        if np.isscalar(service_s):
+            service_s = [float(service_s)] * replicas
+        self.replicas = [SimReplica(service_s=float(service_s[i]),
+                                    slots=slots, policy=policy, **sched_kw)
+                         for i in range(replicas)]
+        self.router = ReplicaRouter(self.replicas, steal=steal)
+        self.dt = dt
+        self.now = 0.0
+        self.rng = np.random.default_rng(seed)
+        self.submitted: List[Ticket] = []
+        self.shed: List[Ticket] = []
+        self.completed: List[Ticket] = []
+
+    # ---- event sources ---------------------------------------------------
+    def submit(self, *, size: int = 1, priority: int = 0,
+               slo_ms: Optional[float] = None,
+               pin: Optional[int] = None) -> Ticket:
+        """One arrival at virtual ``now``. ``pin`` bypasses the router and
+        lands the ticket straight on one replica's queue — the hot-keyed
+        / session-affinity skew that work stealing exists to fix."""
+        payload = len(self.submitted)
+        if pin is None:
+            t = self.router.submit(payload, slo_ms=slo_ms,
+                                   priority=priority, size=size,
+                                   now=self.now)
+        else:
+            t = self.replicas[pin].submit(payload, slo_ms=slo_ms,
+                                          priority=priority, size=size,
+                                          now=self.now)
+        self.submitted.append(t)
+        if t.shed:
+            self.shed.append(t)
+        return t
+
+    def tick(self) -> List[Ticket]:
+        """Advance the virtual clock one dt: every live replica completes
+        due work and admits, then one stealing round. Returns tickets
+        completed this tick."""
+        self.now += self.dt
+        done: List[Ticket] = []
+        for i, r in enumerate(self.replicas):
+            if not self.router.dead[i]:
+                done.extend(r.step(self.now))
+        self.router.maybe_steal(now=self.now)
+        self.completed.extend(done)
+        return done
+
+    def fail(self, idx: int) -> int:
+        """Kill replica ``idx`` at virtual ``now``: fault drain through
+        the real router path. Returns tickets re-homed."""
+        return self.router.drain_replica(idx, now=self.now)
+
+    def drain(self, max_ticks: int = 100_000):
+        """Tick until the fleet is empty (bounded — a conservation bug
+        that wedges the fleet fails loudly instead of hanging)."""
+        for _ in range(max_ticks):
+            if not self.router.has_work:
+                return
+            self.tick()
+        raise RuntimeError(f"fleet not drained after {max_ticks} ticks: "
+                           f"pending {[r.scheduler.depth for r in self.replicas]}, "
+                           f"inflight {[r.inflight for r in self.replicas]}")
+
+    # ---- invariant surface -----------------------------------------------
+    def pending_payloads(self) -> List[int]:
+        """Every accepted-but-unfinished payload across the fleet: pending
+        queues plus in-flight slots, dead replicas included (a correct
+        drain leaves them empty)."""
+        out = []
+        for r in self.replicas:
+            out.extend(t.payload for t in r.scheduler._pending)
+            out.extend(t.payload for t, _ in r.active)
+        return out
+
+    def assert_conserved(self):
+        """submitted = completed + pending-anywhere + shed, each exactly
+        once — across any submit/steal/fail/complete interleaving."""
+        accepted = {t.payload for t in self.submitted if not t.shed}
+        counts: Dict[int, int] = {}
+        for p in [t.payload for t in self.completed] \
+                + self.pending_payloads():
+            counts[p] = counts.get(p, 0) + 1
+        dup = {p: c for p, c in counts.items() if c > 1}
+        assert not dup, f"tickets duplicated across queues: {dup}"
+        lost = accepted - set(counts)
+        assert not lost, f"accepted tickets lost: {sorted(lost)}"
+        extra = set(counts) - accepted
+        assert not extra, f"unsubmitted tickets materialized: {extra}"
+        assert len(self.shed) == sum(t.shed for t in self.submitted)
+
+    def fleet_summary(self) -> dict:
+        """Router summary with the serving window pinned to virtual time
+        (QPS and latencies are then all on the same clock)."""
+        for r in self.replicas:
+            r.telemetry.serving_s = self.now
+        self.router._serving_s = self.now
+        return self.router.summary()
+
+    def served_per_replica(self) -> List[int]:
+        return [r.telemetry.served for r in self.replicas]

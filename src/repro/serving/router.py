@@ -41,6 +41,31 @@ EWMA is fed by the router's own drive loops (``run_until_drained`` /
 ``run_concurrent`` time every ``step_once``) or by ``record_dispatch``
 directly; until a replica has a measurement it inherits the fleet mean,
 and with no measurements at all the rule degrades to count-based.
+
+Cross-replica work stealing (``steal=True``, PR 4): routing balances
+*arrivals*, but skewed sizes / hot-keyed streams / heterogeneous cards
+still leave one replica backlogged while a sibling idles — and on the
+paper's six-cards-one-host shape an idle card wastes the whole fleet's
+headroom. ``maybe_steal`` (called each drive round) lets every idle
+replica (no pending fresh work, free slots) pull pending FRESH tickets
+from the most-backlogged live sibling: steal-half of the victim's
+un-startable backlog, capped by the thief's free slots, chosen as the
+tickets the victim's policy would serve LAST. Re-stamping is the
+scheduler contract (``Scheduler.steal_pending`` / ``absorb``):
+tid / priority / deadline preserved, enqueue rebased only across
+timelines, so aging credit, EDF rank, and TTFT-from-original-submit all
+survive the move. Continuations and mid-prefill tickets are never
+stolen — they own a KV slot on their home replica (engines veto them via
+``steal_eligible``).
+
+Replica fault drain (``drain_replica(idx)``): a card that degrades or
+dies is marked dead and its ENTIRE accepted-but-unfinished load — the
+pending queue plus whatever the engine can evict from its slots
+(``drain_tickets``, which resets evicted work to fresh: the KV state
+died with the card) — is re-homed onto the live replicas, least-loaded
+first. Accepted work is never lost to a card failure; the victim's
+``telemetry.drained`` counts how much work the fault moved. Dead
+replicas take no routes, no steals, and no drive steps.
 """
 from __future__ import annotations
 
@@ -55,7 +80,7 @@ class ReplicaRouter:
     """Least-loaded, deadline-slack-aware balancer over engine replicas."""
 
     def __init__(self, replicas: Sequence[Any], *, route: str = "count",
-                 ewma_alpha: float = 0.25):
+                 ewma_alpha: float = 0.25, steal: bool = False):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         if route not in ("count", "feedback"):
@@ -66,9 +91,13 @@ class ReplicaRouter:
         self.replicas = list(replicas)
         self.route_mode = route
         self.ewma_alpha = ewma_alpha
+        self.steal_enabled = steal
         self.ewma_s = [0.0] * len(self.replicas)  # 0 = not yet measured
         self.routed = [0] * len(self.replicas)   # submits per replica
         self.shed = 0                            # fleet admission rejections
+        self.dead = [False] * len(self.replicas)  # drained fault replicas
+        self.steals_per_replica = [0] * len(self.replicas)  # by the THIEF
+        self.rehomed = [0] * len(self.replicas)  # drain re-homes received
         self._rr = 0                             # round-robin tie cursor
         self._serving_s = 0.0
 
@@ -104,11 +133,31 @@ class ReplicaRouter:
     def _deadline_depth(self, i: int) -> int:
         return self.replicas[i].scheduler.deadline_depth
 
+    @property
+    def alive(self) -> List[int]:
+        """Indices of replicas that have not been fault-drained."""
+        return [i for i in range(len(self.replicas)) if not self.dead[i]]
+
+    def free_slots(self, i: int) -> int:
+        """Free serving capacity of replica i (steal admission cap). The
+        engines expose ``free_slots`` (LM: free KV slots; DLRM: the step
+        admission group); a replica without the attribute is treated as
+        one slot that is free whenever nothing is in flight."""
+        fs = getattr(self.replicas[i], "free_slots", None)
+        if fs is not None:
+            return int(fs)
+        return 1 if self.replicas[i].inflight == 0 else 0
+
     def route(self, *, has_deadline: bool = False) -> int:
-        """Pick the replica index for the next ticket (see module doc)."""
-        loads = [self._cost(i) for i in range(len(self.replicas))]
-        m = min(loads)
-        cand = [i for i, l in enumerate(loads) if l == m]
+        """Pick the replica index for the next ticket (see module doc).
+        Fault-drained replicas take no traffic."""
+        alive = self.alive
+        if not alive:
+            raise RuntimeError("every replica is fault-drained; nothing "
+                               "can take traffic")
+        loads = {i: self._cost(i) for i in alive}
+        m = min(loads.values())
+        cand = [i for i in alive if loads[i] == m]
         if has_deadline and len(cand) > 1:
             dd = [self._deadline_depth(i) for i in cand]
             dmin = min(dd)
@@ -137,21 +186,104 @@ class ReplicaRouter:
             self.routed[i] += 1
         return t
 
+    # ---- work stealing / fault drain -------------------------------------
+    def _stealable_backlog(self, i: int) -> int:
+        """Fresh pending work replica i cannot start right now (its own
+        free slots will soak up the rest next tick — stealing that part
+        would just add churn)."""
+        return max(self.replicas[i].scheduler.fresh_depth
+                   - self.free_slots(i), 0)
+
+    def maybe_steal(self, now: Optional[float] = None) -> int:
+        """One stealing round (no-op unless ``steal=True``): every idle
+        live replica — no pending fresh work, free slots — pulls pending
+        fresh tickets from the most-backlogged live sibling. Steal-half
+        of the victim's un-startable backlog, capped by the thief's free
+        slots; the victim's ``steal_eligible`` hook vetoes mid-prefill
+        work. Deterministic: thieves act in index order, victims break
+        ties by lowest index. Returns the number of tickets moved."""
+        if not self.steal_enabled:
+            return 0
+        moved = 0
+        for i in self.alive:
+            thief = self.replicas[i]
+            if thief.scheduler.fresh_depth > 0:
+                continue                    # has its own queue to serve
+            cap = self.free_slots(i)
+            if cap <= 0:
+                continue
+            best, best_backlog = -1, 0
+            for j in self.alive:
+                if j == i:
+                    continue
+                b = self._stealable_backlog(j)
+                if b > best_backlog:
+                    best, best_backlog = j, b
+            if best < 0:
+                continue
+            victim = self.replicas[best]
+            k = min(cap, max(best_backlog // 2, 1))
+            stolen = victim.scheduler.steal_pending(
+                k, now=now, eligible=getattr(victim, "steal_eligible", None))
+            if not stolen:
+                continue
+            thief.scheduler.absorb(stolen, now=now)
+            self.steals_per_replica[i] += len(stolen)
+            moved += len(stolen)
+        return moved
+
+    def drain_replica(self, idx: int, now: Optional[float] = None) -> int:
+        """Fault path: mark replica ``idx`` dead and re-home its entire
+        accepted-but-unfinished load onto the live replicas, least-loaded
+        first (ties to the lowest index). The engine's ``drain_tickets``
+        hook hands back pending work plus evicted in-flight work reset to
+        fresh (the card's KV state is gone); a replica without the hook
+        contributes its whole pending queue, continuations included.
+        Accepted work is never lost: every ticket lands on exactly one
+        live queue. Returns the number of tickets re-homed. Idempotent —
+        draining a dead replica is a no-op."""
+        if self.dead[idx]:
+            return 0
+        r = self.replicas[idx]
+        self.dead[idx] = True
+        drain = getattr(r, "drain_tickets", None)
+        if drain is not None:
+            tickets = drain()
+        else:
+            tickets = r.scheduler.steal_pending(
+                None, now=now, include_continuations=True)
+            for t in tickets:
+                t.reset_fresh()
+        r.telemetry.record_drained(len(tickets))
+        live = self.alive
+        if tickets and not live:
+            raise RuntimeError(f"replica {idx} drained {len(tickets)} "
+                               f"tickets but no live replica remains to "
+                               f"re-home them")
+        for t in tickets:
+            j = min(live, key=lambda i: (self.load(i), i))
+            self.replicas[j].scheduler.absorb([t], now=now, record=False)
+            self.rehomed[j] += 1
+        return len(tickets)
+
     # ---- driving ---------------------------------------------------------
     @property
     def has_work(self) -> bool:
-        return any(r.has_work for r in self.replicas)
+        return any(r.has_work for i, r in enumerate(self.replicas)
+                   if not self.dead[i])
 
     def run_until_drained(self):
-        """Drive every replica to completion, one step each per round.
-        Live-host semantics: wall time is shared, so with k replicas on
-        one device each request's measured latency includes the other
-        replicas' serialized compute — use ``run_concurrent`` when the
-        point is fleet latency as N concurrent cards would deliver it."""
+        """Drive every live replica to completion, one step each per round
+        (with a stealing round first when ``steal=True``). Live-host
+        semantics: wall time is shared, so with k replicas on one device
+        each request's measured latency includes the other replicas'
+        serialized compute — use ``run_concurrent`` when the point is
+        fleet latency as N concurrent cards would deliver it."""
         t0 = time.perf_counter()
         while self.has_work:
+            self.maybe_steal()
             for i, r in enumerate(self.replicas):
-                if r.has_work:
+                if not self.dead[i] and r.has_work:
                     s0 = time.perf_counter()
                     r.step_once()
                     self.record_dispatch(i, time.perf_counter() - s0)
@@ -162,7 +294,13 @@ class ReplicaRouter:
         to completion in turn, re-basing its pending tickets' enqueue /
         deadline stamps to its own drain start (replicas share no state
         after routing, so a full sequential drain is execution-equivalent
-        to the concurrent one). Each request's latency is then queue wait
+        to the concurrent one). Work stealing deliberately does NOT run
+        here: a sequential drain has no meaningful "idle sibling" instant
+        (every other replica is either already finished or not yet
+        started on its own timeline), so ``steal=True`` only affects the
+        live drivers — ``run_until_drained`` and external loops calling
+        ``maybe_steal``; use the fleet sim when the point is stealing
+        behaviour under concurrent-card timing. Each request's latency is then queue wait
         + service on its *own* card, and the fleet serving window is the
         slowest replica's drain — what N cards behind one host deliver.
         Requires a fully-routed, not-yet-started fleet (no in-flight
@@ -199,12 +337,19 @@ class ReplicaRouter:
         out["replicas"] = len(self.replicas)
         out["routed_per_replica"] = list(self.routed)
         out["route"] = self.route_mode
+        out["steals_per_replica"] = list(self.steals_per_replica)
+        out["dead_replicas"] = [i for i, d in enumerate(self.dead) if d]
         return out
 
     def report(self) -> str:
         lines = [f"fleet of {len(self.replicas)} replicas, routed "
-                 f"{self.routed} (+{self.shed} shed)",
-                 self.fleet_telemetry().report()]
+                 f"{self.routed} (+{self.shed} shed)"]
+        if any(self.steals_per_replica):
+            lines.append(f"steals per replica {self.steals_per_replica}")
+        if any(self.dead):
+            dead = [i for i, d in enumerate(self.dead) if d]
+            lines.append(f"dead replicas {dead}, re-homed {self.rehomed}")
+        lines.append(self.fleet_telemetry().report())
         return "\n".join(lines)
 
 

@@ -66,6 +66,7 @@ class Ticket:
     finish_t: float = 0.0
     shed: bool = False                  # rejected at admission (429)
     continuation: bool = False          # re-enqueued chunked-prefill ticket
+    stolen: bool = False                # re-homed by cross-replica stealing
 
     @property
     def latency_ms(self) -> float:
@@ -78,6 +79,17 @@ class Ticket:
         """Time left until the deadline (inf for best-effort tickets)."""
         return (math.inf if self.deadline_t is None
                 else self.deadline_t - now)
+
+    def reset_fresh(self):
+        """Reset to a not-yet-started ticket — the fault-drain re-homing
+        contract (one definition, shared by every drain path): any
+        partial service is forfeit, so the ticket re-enters its new home
+        as fresh work. tid / priority / enqueue / deadline stay — only
+        progress state clears. Engines layer their payload/slot cleanup
+        on top (the scheduler cannot know payload semantics)."""
+        self.continuation = False
+        self.admit_t = None
+        self.size = self.size0
 
 
 # ---- admission policies ---------------------------------------------------
@@ -416,6 +428,84 @@ class Scheduler:
             if t.admit_t is None:
                 t.admit_t = now
         return group
+
+    # -- cross-replica work movement (ReplicaRouter stealing / drain) ------
+    def steal_pending(self, k: Optional[int] = None,
+                      now: Optional[float] = None, *,
+                      eligible: Optional[Callable[[Ticket], bool]] = None,
+                      include_continuations: bool = False) -> List[Ticket]:
+        """Remove and return up to ``k`` pending tickets for re-homing on a
+        sibling replica (``None`` = every eligible ticket — the fault-drain
+        path). Selection is the *reverse* of the policy ranking: the thief
+        takes the tickets this replica would serve LAST, so the victim's
+        most urgent work stays local and the move maximizes the latency
+        win for the back of the queue. Policies without a total order
+        (size x time returns one coherent group) fall back to arrival
+        order, which is what they tie-break on anyway.
+
+        Continuations (and anything ``eligible`` vetoes — the engines veto
+        mid-prefill tickets) are never stolen: a continuation owns a KV
+        slot on its home replica, so moving it would strand device state.
+        ``include_continuations=True`` is reserved for ``drain_replica``,
+        where the home card is dead and the caller resets the tickets to
+        fresh. The removed tickets are NOT re-stamped here — pair with
+        ``absorb`` on the destination scheduler."""
+        if not self._pending:
+            return []
+        now = time.perf_counter() if now is None else now
+        ranked = self.policy.select(self._pending, len(self._pending), now)
+        if len(ranked) != len(self._pending):
+            ranked = self._pending          # partial-order policy: arrival
+        victims: List[Ticket] = []
+        for t in reversed(ranked):
+            if k is not None and len(victims) >= k:
+                break
+            if t.continuation and not include_continuations:
+                continue
+            if eligible is not None and not eligible(t):
+                continue
+            victims.append(t)
+        picked = set(id(t) for t in victims)
+        self._pending = [t for t in self._pending if id(t) not in picked]
+        return victims
+
+    def absorb(self, tickets: Sequence[Ticket],
+               now: Optional[float] = None, *,
+               from_now: Optional[float] = None, record: bool = True):
+        """Accept tickets removed from a sibling via ``steal_pending``.
+
+        Re-stamping rules (the work-stealing contract): ``tid``,
+        ``priority``, and the deadline are preserved verbatim, so EDF rank
+        and the strict-priority class survive the move. When the
+        destination runs on a different timeline (``from_now`` = the
+        source clock at steal time), enqueue/deadline shift by the clock
+        delta — ``rebase_pending``-style accounting — so the ticket's AGE
+        (its aging credit toward the bounded-starvation guarantee) and
+        its deadline slack are preserved exactly rather than its raw
+        stamps. On a shared clock (``from_now=None``) the stamps are
+        already right and move untouched.
+
+        ``record=True`` marks the tickets stolen and counts them in this
+        replica's ``telemetry.steals`` (per-replica steal attribution);
+        the fault-drain path passes ``record=False`` and accounts the
+        move in the victim's ``drained`` counter instead."""
+        if from_now is not None:
+            now = time.perf_counter() if now is None else now
+            dt = now - from_now
+        else:
+            dt = 0.0
+        for t in tickets:
+            if t.shed:
+                raise ValueError("cannot absorb a shed ticket")
+            if dt:
+                t.enqueue_t += dt
+                if t.deadline_t is not None:
+                    t.deadline_t += dt
+            if record:
+                t.stolen = True
+            self._pending.append(t)
+        if record and tickets:
+            self.telemetry.record_steal(len(tickets))
 
     def rebase_pending(self, now: Optional[float] = None):
         """Shift every pending ticket's enqueue/deadline stamp so its age

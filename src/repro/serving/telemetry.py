@@ -7,6 +7,7 @@ scale, so the runtime has to measure the queue, not just the device.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 from dataclasses import dataclass, field
@@ -51,6 +52,9 @@ class Telemetry:
     sla_total: int = 0             # completions that carried a deadline
     shed: int = 0                  # admission rejections (429) — NOT misses
     continuations: int = 0         # chunked-prefill re-enqueues (not submits)
+    steals: int = 0                # tickets this replica pulled from siblings
+    drained: int = 0               # tickets re-homed OFF this replica by a
+                                   # fault drain (the card died)
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -87,6 +91,19 @@ class Telemetry:
         intermediate re-admissions of already-accepted work."""
         self.continuations += 1
 
+    def record_steal(self, n: int = 1):
+        """``n`` tickets pulled from a backlogged sibling's queue onto this
+        replica (cross-replica work stealing). Counted on the THIEF —
+        per-replica attribution of who did the balancing work; the router
+        keeps the per-replica breakdown in ``steals_per_replica``."""
+        self.steals += n
+
+    def record_drained(self, n: int = 1):
+        """``n`` accepted tickets re-homed off this replica by a fault
+        drain (the card died mid-run). Counted on the VICTIM: the fleet
+        total says how much accepted work survived card failures."""
+        self.drained += n
+
     def record_ttft(self, ttft_ms: float):
         """Time-to-first-token for one request: enqueue -> first generated
         token materialized. The paper's latency-bounded traffic cares
@@ -106,22 +123,36 @@ class Telemetry:
             if deadline_missed:
                 self.sla_misses += 1
 
+    # fields that are NOT traffic: they survive reset and merge specially
+    _KEEP_ON_RESET = frozenset({"compiles"})
+
     def reset_serving_stats(self):
         """Zero every traffic-scoped counter/distribution (after warm-up) —
         including per-stage dispatch counts/times, so summary() stays
         internally consistent. Only ``compiles`` survives: executables are
-        cumulative engine state, not traffic."""
-        self.served = self.steps = self.prefills = 0
-        self.prefill_batches = self.total_tokens = 0
-        self.latencies_ms = []
-        self.ttft_ms = []
-        self.sla_misses = self.sla_total = self.shed = 0
-        self.continuations = 0
-        self.queue_depths = []
-        self.stage_calls = {}
-        self.stage_dispatch_s = {}
-        self.serving_s = 0.0
-        self.wall_start = time.perf_counter()
+        cumulative engine state, not traffic.
+
+        Iterates the dataclass fields instead of naming them, so a newly
+        added counter can never be silently left carrying warm-up traffic
+        (the recurring "new counter forgotten in reset/merge" bug class)."""
+        for f in dataclasses.fields(self):
+            if f.name in self._KEEP_ON_RESET:
+                continue
+            if f.name == "wall_start":
+                self.wall_start = time.perf_counter()
+                continue
+            cur = getattr(self, f.name)
+            if isinstance(cur, int):
+                setattr(self, f.name, 0)
+            elif isinstance(cur, float):
+                setattr(self, f.name, 0.0)
+            elif isinstance(cur, list):
+                setattr(self, f.name, [])
+            elif isinstance(cur, dict):
+                setattr(self, f.name, {})
+            else:                           # a new field of an unknown kind
+                raise TypeError(f"don't know how to reset Telemetry field "
+                                f"{f.name!r} of type {type(cur).__name__}")
 
     # ---- derived ---------------------------------------------------------
     @property
@@ -172,31 +203,42 @@ class Telemetry:
         replica window (replicas serve concurrently, so the fleet window
         is the slowest replica's, and fleet QPS = total served / that).
         The merge is a snapshot — don't keep recording into it.
+
+        Like ``reset_serving_stats``, the merge iterates the dataclass
+        fields generically (ints sum, sample lists pool, per-stage dicts
+        sum per key; ``serving_s`` takes the slowest replica's window and
+        ``wall_start`` the earliest) — a newly added counter merges
+        correctly by construction instead of silently vanishing from the
+        fleet surface.
         """
         out = cls()
         if not parts:
             return out
-        for p in parts:
-            out.served += p.served
-            out.steps += p.steps
-            out.prefills += p.prefills
-            out.prefill_batches += p.prefill_batches
-            out.total_tokens += p.total_tokens
-            out.sla_misses += p.sla_misses
-            out.sla_total += p.sla_total
-            out.shed += p.shed
-            out.continuations += p.continuations
-            out.latencies_ms.extend(p.latencies_ms)
-            out.ttft_ms.extend(p.ttft_ms)
-            out.queue_depths.extend(p.queue_depths)
-            for k, v in p.compiles.items():
-                out.compiles[k] = out.compiles.get(k, 0) + v
-            for k, v in p.stage_calls.items():
-                out.stage_calls[k] = out.stage_calls.get(k, 0) + v
-            for k, v in p.stage_dispatch_s.items():
-                out.stage_dispatch_s[k] = out.stage_dispatch_s.get(k, 0.0) + v
-        out.serving_s = max(p.serving_s for p in parts)
-        out.wall_start = min(p.wall_start for p in parts)
+        for f in dataclasses.fields(cls):
+            vals = [getattr(p, f.name) for p in parts]
+            if f.name == "serving_s":       # replicas serve concurrently:
+                out.serving_s = max(vals)   # the fleet window is the
+                continue                    # slowest replica's
+            if f.name == "wall_start":
+                out.wall_start = min(vals)
+                continue
+            cur = getattr(out, f.name)
+            if isinstance(cur, int):
+                setattr(out, f.name, sum(vals))
+            elif isinstance(cur, list):     # pooled raw samples: fleet
+                pooled = []                 # percentiles are exactly the
+                for v in vals:              # percentiles of the union
+                    pooled.extend(v)
+                setattr(out, f.name, pooled)
+            elif isinstance(cur, dict):
+                merged_d: Dict = {}
+                for v in vals:
+                    for k, x in v.items():
+                        merged_d[k] = merged_d.get(k, 0) + x
+                setattr(out, f.name, merged_d)
+            else:
+                raise TypeError(f"don't know how to merge Telemetry field "
+                                f"{f.name!r} of type {type(cur).__name__}")
         return out
 
     def summary(self) -> Dict[str, float]:
@@ -209,6 +251,8 @@ class Telemetry:
                "sla_miss_frac": self.sla_miss_frac,
                "shed": self.shed,
                "continuations": self.continuations,
+               "steals": self.steals,
+               "drained": self.drained,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
@@ -234,6 +278,11 @@ class Telemetry:
         if self.continuations:
             lines.append(f"{self.continuations} chunked-prefill "
                          f"continuations")
+        if self.steals:
+            lines.append(f"{self.steals} tickets stolen from backlogged "
+                         f"siblings")
+        if self.drained:
+            lines.append(f"{self.drained} tickets re-homed by fault drain")
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")

@@ -31,6 +31,21 @@ def _install_hypothesis_fallback():
 
     FALLBACK_EXAMPLES = 5
 
+    class _Unsatisfied(Exception):
+        """Raised by the shim's assume(); the @given wrapper skips the
+        example, mirroring real hypothesis filtering."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied()
+        return True
+
+    def note(msg):
+        # real hypothesis attaches notes to the failing example report;
+        # the deterministic shim just prints (visible with pytest -s / on
+        # failure via captured stdout)
+        print(f"note: {msg}")
+
     class _Strategy:
         def __init__(self, draw):
             self.draw = draw
@@ -61,7 +76,10 @@ def _install_hypothesis_fallback():
                 n = getattr(wrapper, "_max_examples",
                             getattr(fn, "_max_examples", FALLBACK_EXAMPLES))
                 for _ in range(n):
-                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+                    try:
+                        fn(**{k: s.draw(rng) for k, s in strategies.items()})
+                    except _Unsatisfied:
+                        continue            # assume() filtered the example
 
             # plain attribute copy (not functools.wraps): pytest must see a
             # zero-arg signature, or it would try to inject the strategy
@@ -86,6 +104,7 @@ def _install_hypothesis_fallback():
     st.integers, st.floats = integers, floats
     st.booleans, st.sampled_from = booleans, sampled_from
     hyp.given, hyp.settings, hyp.strategies = given, settings, st
+    hyp.assume, hyp.note = assume, note
     hyp.__is_fallback__ = True
     sys.modules["hypothesis"] = hyp
     sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,50 @@
+"""Fleet-simulation property harness (PR 4 work stealing).
+
+The simulator core lives in ``repro.serving.fleet_sim`` (it is runtime
+infrastructure: the bench's ``work_stealing`` section runs it too); this
+module is the test-facing surface — re-exports plus the seeded
+random-schedule driver the property suite uses to push the fleet through
+thousands of submit / steal / fail / complete interleavings with zero
+wall-clock flakiness. Everything is keyed off one ``numpy`` Generator, so
+a fixed seed reproduces the exact schedule, completion order, and steal
+attribution.
+"""
+import numpy as np
+
+from repro.serving.fleet_sim import FleetSim, SimReplica  # noqa: F401
+
+
+def random_schedule(sim: FleetSim, n_ops: int, *, p_submit: float = 0.55,
+                    skew: float = 0.0, hot: int = 0,
+                    fail_at: int = -1, slo_ms=None,
+                    max_priority: int = 0) -> int:
+    """Drive ``sim`` through ``n_ops`` seeded events: each op is a submit
+    (probability ``p_submit``; pinned to replica ``hot`` with probability
+    ``skew`` — the hot-keyed stream) or a tick; op ``fail_at`` (if in
+    range and a live sibling remains) kills the currently most-loaded
+    live replica mid-run. Returns the index of the failed replica (-1 if
+    none). The caller drains and asserts afterwards."""
+    failed = -1
+    for op in range(n_ops):
+        if op == fail_at and len(sim.router.alive) > 1:
+            alive = sim.router.alive
+            failed = max(alive, key=lambda i: (sim.router.load(i), i))
+            sim.fail(failed)
+        if sim.rng.random() < p_submit:
+            pin = None
+            if skew > 0 and sim.rng.random() < skew \
+                    and not sim.router.dead[hot]:
+                pin = hot
+            sim.submit(size=int(sim.rng.integers(1, 8)),
+                       priority=int(sim.rng.integers(0, max_priority + 1)),
+                       slo_ms=slo_ms, pin=pin)
+        else:
+            sim.tick()
+    return failed
+
+
+def run_to_completion(sim: FleetSim) -> list:
+    """Drain the fleet and return the completion order as payload ids
+    (the determinism fingerprint, together with steal attribution)."""
+    sim.drain()
+    return [t.payload for t in sim.completed]

@@ -116,6 +116,174 @@ def test_router_rejects_unknown_route():
         ReplicaRouter([_Stub()], route="fastest")
 
 
+# ---- work stealing + fault drain (PR 4) -----------------------------------
+
+def test_steal_moves_backlog_to_idle_replica_no_double_count():
+    """A steal that lands a ticket on an idle replica must move it, not
+    copy it: fleet-wide outstanding load (the PR 3 fresh_depth
+    accounting) is unchanged, the victim stops counting the ticket, and
+    the steal is attributed to the thief."""
+    router = ReplicaRouter([_Stub(), _Stub()], steal=True)
+    for i in range(6):
+        router.replicas[0].submit(i)            # hot-keyed stream
+    before = sum(router.load(i) for i in range(2))
+    moved = router.maybe_steal()
+    assert moved >= 1
+    assert router.replicas[1].scheduler.depth == moved
+    assert router.replicas[0].scheduler.depth == 6 - moved
+    assert sum(router.load(i) for i in range(2)) == before  # no double count
+    assert router.replicas[1].telemetry.steals == moved     # thief's counter
+    assert router.replicas[0].telemetry.steals == 0
+    assert router.steals_per_replica == [0, moved]
+    assert router.fleet_telemetry().steals == moved
+    assert "steals" in router.summary() and \
+        router.summary()["steals_per_replica"] == [0, moved]
+
+
+def test_steal_disabled_by_default_and_busy_thief_never_steals():
+    router = ReplicaRouter([_Stub(), _Stub()])
+    router.replicas[0].submit("x")
+    router.replicas[0].submit("y")
+    assert router.maybe_steal() == 0            # steal=False: no-op
+    stealing = ReplicaRouter([_Stub(), _Stub()], steal=True)
+    stealing.replicas[0].submit("x")
+    stealing.replicas[1].submit("y")            # thief has its own queue
+    assert stealing.maybe_steal() == 0
+
+
+def test_stolen_ticket_latency_measured_from_original_submit():
+    """TTFT / latency boundary: the stolen ticket keeps its original
+    enqueue stamp on a shared clock, so time-to-first-token and latency
+    are measured from the ORIGINAL submit, not from steal time."""
+    from repro.serving.scheduler import Scheduler
+    victim, thief = Scheduler("fifo"), Scheduler("fifo")
+    t = victim.submit("r", now=0.0)
+    stolen = victim.steal_pending(1, now=5.0)
+    thief.absorb(stolen, now=5.0)
+    assert t.enqueue_t == 0.0                   # steal did not re-base
+    got = thief.admit(1, now=5.0)
+    thief.complete(got[0], now=6.0)
+    assert got[0].latency_ms == pytest.approx(6000.0)   # not 1000
+
+
+def test_drain_replica_rehomes_pending_and_marks_dead():
+    router = ReplicaRouter([_Stub(), _Stub()])
+    for i in range(5):
+        router.replicas[0].submit(i)
+    router.replicas[1].submit("own")
+    moved = router.drain_replica(0)
+    assert moved == 5
+    assert router.dead == [True, False]
+    assert router.replicas[0].scheduler.depth == 0
+    assert router.replicas[1].scheduler.depth == 6
+    assert router.replicas[0].telemetry.drained == 5    # victim's counter
+    assert router.fleet_telemetry().drained == 5
+    assert router.rehomed == [0, 5]
+    assert router.drain_replica(0) == 0                 # idempotent
+    router.submit("new")                                # routes around dead
+    assert router.replicas[1].scheduler.depth == 7
+    with pytest.raises(RuntimeError):
+        router.drain_replica(1)         # nowhere left to re-home 7 tickets
+
+
+def test_lm_fleet_steals_under_hot_spot_and_survives_mid_run_kill(lm_setup):
+    """End-to-end through real LM engines: a hot-spot stream on replica 0
+    gets stolen by idle replica 1; killing replica 0 mid-run re-homes
+    its outstanding work and every request still finishes (zero lost
+    tickets through the fault — conservation holds)."""
+    cfg, params = lm_setup
+    reps = make_replicas(cfg, params, 2, batch_slots=2, max_len=32,
+                         prefill_buckets=(8, 16))
+    router = ReplicaRouter(reps, steal=True)
+    reqs = _trace(cfg)
+    for r in reqs:
+        reps[0].submit(r)                       # all pinned to one card
+    rounds = 0
+    while router.has_work:
+        router.maybe_steal()
+        for i, rep in enumerate(router.replicas):
+            if not router.dead[i] and rep.has_work:
+                rep.step_once()
+        rounds += 1
+        if rounds == 2:
+            router.drain_replica(0)
+    fleet = router.fleet_telemetry()
+    assert all(r.done for r in reqs)            # zero lost through the kill
+    assert fleet.served == len(reqs)
+    assert fleet.steals > 0
+    assert fleet.drained > 0
+    assert router.dead == [True, False]
+    assert not reps[0].has_work and reps[0].free_slots == 2
+
+
+def test_lm_engine_steal_eligibility_vetoes_mid_prefill():
+    """The engine hook: fresh tickets are stealable, continuations and
+    mid-prefill tickets (KV slot holders) are not."""
+    from repro.serving.scheduler import Ticket
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, batch_slots=2, max_len=32,
+                          prefill_buckets=(8, 16))
+    fresh = Ticket(0, None)
+    cont = Ticket(1, None, continuation=True)
+    midprefill = Ticket(2, None)
+    eng.prefilling[id(midprefill)] = 0      # keyed by object, not tid:
+    collider = Ticket(2, None)              # a stolen ticket may reuse a
+    assert eng.steal_eligible(fresh)        # sibling scheduler's tid
+    assert not eng.steal_eligible(cont)
+    assert not eng.steal_eligible(midprefill)
+    assert eng.steal_eligible(collider)
+
+
+def test_steal_with_chunked_prefill_tid_collision_is_safe(lm_setup):
+    """Regression: tids are per-scheduler counters, so a stolen fresh
+    ticket can carry the SAME tid as a ticket mid-prefill on the thief.
+    KV-slot ownership is keyed by ticket identity, not tid — with a
+    tid-keyed map the stolen prompt, admitted in its own chunk group
+    (different bucket) while the long prompt was still mid-prefill,
+    inherited the mid-prefill ticket's KV slot and the long prompt
+    silently decoded garbage."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=2, max_len=32, prefill_buckets=(2, 4, 16))
+    reps = make_replicas(cfg, params, 2, prefill_chunk=4, **kw)
+    router = ReplicaRouter(reps, steal=True)
+    rng = np.random.default_rng(5)
+    long_toks = rng.integers(0, cfg.vocab_size, 14).astype(np.int32)
+    short_toks = rng.integers(0, cfg.vocab_size, 2).astype(np.int32)
+    # replica 0: fill both slots, then queue a fresh ticket with tid 2 —
+    # its 2-token chunk lands in bucket 2, the long prompt's in bucket 4
+    for i in range(2):
+        reps[0].submit(Request(80 + i, short_toks.copy(), max_new_tokens=6))
+    reps[0].step_once()
+    collider_req = Request(1, short_toks.copy(), max_new_tokens=3)
+    collider_t = reps[0].submit(collider_req)
+    # replica 1: burn tids 0/1, then park the long prompt mid-prefill:
+    # prefilling now holds a ticket whose tid is ALSO 2
+    for i in range(2):
+        reps[1].submit(Request(90 + i, short_toks.copy(), max_new_tokens=2))
+    while reps[1].has_work:
+        reps[1].step_once()
+    long_req = Request(0, long_toks, max_new_tokens=3)
+    long_t = reps[1].submit(long_req)
+    reps[1].step_once()
+    assert collider_t.tid == long_t.tid == 2
+    assert len(reps[1].prefilling) == 1 and reps[1].free_slots == 1
+    # replica 1 (no fresh queue, one free slot) steals the collider; the
+    # resubmit/absorb append order then admits it in a bucket-2 group of
+    # its own while the long prompt still owns its mid-prefill slot
+    assert router.maybe_steal() == 1 and collider_t.stolen
+    router.run_until_drained()
+    assert long_req.done and collider_req.done
+    # token identity against a fresh monolithic engine: slot corruption
+    # from a tid-keyed prefilling map shows up as diverging outputs
+    ref = InferenceEngine(cfg, params, **kw)
+    ref_long = Request(0, long_toks.copy(), max_new_tokens=3)
+    ref_short = Request(1, short_toks.copy(), max_new_tokens=3)
+    ref.run([ref_long, ref_short])
+    assert long_req.output == ref_long.output
+    assert collider_req.output == ref_short.output
+
+
 # ---- fleet telemetry aggregation (satellite: pooled percentiles) ----------
 
 def test_fleet_percentiles_match_pooled_raw_samples():
@@ -159,6 +327,58 @@ def test_merged_counters_and_compiles_sum():
 def test_merged_empty_is_empty():
     m = Telemetry.merged([])
     assert m.served == 0 and m.latencies_ms == []
+
+
+def test_merged_round_trips_every_counter_field():
+    """The "new counter forgotten in merge" regression guard: set EVERY
+    Telemetry dataclass field nonzero by iterating the fields (not by
+    naming them — a newly added counter is covered automatically) and
+    check merged([t]) reproduces each one while merged([t, t]) sums the
+    counters, pools the sample lists, and per-key-sums the dicts."""
+    import dataclasses
+    t = Telemetry()
+    for i, f in enumerate(dataclasses.fields(Telemetry), start=1):
+        if f.name == "wall_start":
+            continue
+        cur = getattr(t, f.name)
+        if isinstance(cur, int):
+            setattr(t, f.name, i)
+        elif isinstance(cur, float):
+            setattr(t, f.name, float(i))
+        elif isinstance(cur, list):
+            setattr(t, f.name, [i])
+        elif isinstance(cur, dict):
+            setattr(t, f.name, {"k": i})
+        else:
+            pytest.fail(f"unmergeable Telemetry field kind: {f.name}")
+    m1, m2 = Telemetry.merged([t]), Telemetry.merged([t, t])
+    for f in dataclasses.fields(Telemetry):
+        if f.name == "wall_start":
+            continue
+        v = getattr(t, f.name)
+        if f.name == "serving_s":           # fleet window = slowest replica
+            assert getattr(m1, f.name) == v and getattr(m2, f.name) == v
+        elif isinstance(v, int):
+            assert getattr(m1, f.name) == v, f.name
+            assert getattr(m2, f.name) == 2 * v, f.name
+        elif isinstance(v, list):
+            assert getattr(m1, f.name) == v and getattr(m2, f.name) == v + v
+        elif isinstance(v, dict):
+            assert getattr(m1, f.name) == v
+            assert getattr(m2, f.name) == {"k": 2 * v["k"]}
+    # the PR 4 counters specifically must reach the JSON surface
+    s = m2.summary()
+    assert s["steals"] == 2 * t.steals and s["drained"] == 2 * t.drained
+
+
+def test_reset_clears_new_counters_but_keeps_compiles():
+    t = Telemetry()
+    t.record_steal(3)
+    t.record_drained(2)
+    t.record_compile("prefill")
+    t.reset_serving_stats()
+    assert t.steals == 0 and t.drained == 0
+    assert t.compiles == {"prefill": 1}      # executables are engine state
 
 
 # ---- LM engines behind the router ----------------------------------------
@@ -279,7 +499,15 @@ def _fake_payload():
                                 "long_tokens": 1, "prefill_chunk": 1,
                                 "monolithic": _fake_summary(),
                                 "chunked": _fake_summary(),
-                                "ttft_p99_improved": True}}
+                                "ttft_p99_improved": True},
+            "work_stealing": {"requests": 1, "replicas": 2, "skew": 0.5,
+                              "steal": _fake_summary(),
+                              "no_steal": _fake_summary(),
+                              "served_per_replica_steal": [1, 0],
+                              "served_per_replica_no_steal": [1, 0],
+                              "spread_steal": 0, "spread_no_steal": 1,
+                              "p99_improved": True,
+                              "spread_improved": True}}
 
 
 def test_bench_payload_schema_validates():
@@ -293,12 +521,16 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["router"]["single"]["latency_ms_p99"]
     del p["overload"]["high"]["sla_attainment"]
     del p["chunked_prefill"]["chunked"]["ttft_ms_p99"]
+    del p["work_stealing"]["steal"]["steals"]
+    del p["work_stealing"]["spread_improved"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
     assert "router.single.latency_ms_p99" in msg
     assert "overload.high.sla_attainment" in msg
     assert "chunked_prefill.chunked.ttft_ms_p99" in msg
+    assert "work_stealing.steal.steals" in msg
+    assert "work_stealing.spread_improved" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -22,7 +22,14 @@ contract this suite pins down (see ROADMAP.md "Testing strategy"):
   pending + shed, resubmits counted separately), a continuation never
   loses priority/aging credit or its deadline, coherent-group admission
   is bucket-pure and respects the fresh-ticket slot cap, and chunked
-  admission is deterministic under a fixed seed.
+  admission is deterministic under a fixed seed,
+- cross-replica work stealing + fault drain (PR 4, via the
+  deterministic fleet sim in fleet_sim.py): fleet-wide conservation
+  under arbitrary submit/steal/fail/complete interleavings (submitted =
+  completed + pending-anywhere + shed, no duplication across queues), a
+  stolen ticket keeps its tid/priority/deadline and aging credit — and
+  is never a continuation, stealing is deterministic under a fixed
+  seed, and drain_replica re-homes every pending ticket exactly once.
 
 All tests drive the scheduler on a virtual clock (the ``now=`` hooks), so
 they are exact — no wall-clock tolerance anywhere.
@@ -31,7 +38,7 @@ from collections import Counter
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis import assume, given, note, settings
 from hypothesis import strategies as st
 
 from repro.core.bucketing import pick_bucket
@@ -524,6 +531,119 @@ def test_router_always_picks_a_min_load_replica(seed, n_replicas, n):
                  if router.routed[j] != before[j])
         assert loads[j] == min(loads), \
             f"routed to load {loads[j]}, min was {min(loads)}"
+
+
+# ---- cross-replica work stealing + fault drain (PR 4) ---------------------
+
+from fleet_sim import FleetSim, random_schedule, run_to_completion  # noqa: E402
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 4),
+       n_ops=st.integers(5, 120), steal=st.booleans(), fail=st.booleans(),
+       policy=st.sampled_from(POLICY_NAMES))
+def test_fleet_conservation_under_steal_and_fault(seed, n_replicas, n_ops,
+                                                  steal, fail, policy):
+    """Fleet-wide multiset identity through ANY seeded interleaving of
+    submit (hot-keyed skew), virtual ticks, stealing rounds, and a
+    mid-run replica kill: submitted = completed + pending-anywhere +
+    shed, with no ticket duplicated across queues — and after the drain
+    every accepted ticket still completes."""
+    sim = FleetSim(replicas=n_replicas, seed=seed, steal=steal,
+                   policy=policy, slots=1 + seed % 2,
+                   service_s=[0.004 * (1 + i) for i in range(n_replicas)],
+                   max_queue=12)
+    failed = random_schedule(sim, n_ops, skew=0.5, hot=0, max_priority=2,
+                             fail_at=n_ops // 2 if fail else -1)
+    run_to_completion(sim)
+    note(f"failed={failed} shed={len(sim.shed)} "
+         f"steals={sum(sim.router.steals_per_replica)}")
+    sim.assert_conserved()
+    assert len(sim.completed) == sum(1 for t in sim.submitted if not t.shed)
+    if failed >= 0:
+        assert not sim.replicas[failed].has_work
+
+
+@settings(max_examples=25, deadline=None)
+@given(prio=st.integers(1, 4), aging_s=st.floats(0.1, 5.0),
+       clock_skew=st.floats(0.0, 3.0))
+def test_stolen_ticket_keeps_credit_and_is_never_a_continuation(
+        prio, aging_s, clock_skew):
+    """The re-stamping contract: a stolen ticket keeps tid / priority /
+    deadline, its AGE (aging credit) survives even a cross-timeline move
+    (rebase_pending-style accounting shifts enqueue/deadline by the
+    clock delta, preserving age and slack exactly), and a continuation
+    is never handed to the thief — it owns a KV slot at home."""
+    pol = PriorityAgingPolicy(aging_s=aging_s)
+    victim = Scheduler(pol, default_slo_ms=5_000.0)
+    old = victim.submit("old", priority=prio, now=0.0)
+    tid, deadline = old.tid, old.deadline_t
+    cont = victim.submit("cont", priority=0, now=0.0)
+    assert victim.admit(1, now=0.0) == [cont]   # rank 0 beats rank prio
+    victim.resubmit(cont, now=0.01)             # now a continuation
+    t_steal = prio * aging_s * 1.001            # just past the aging bound
+    stolen = victim.steal_pending(5, now=t_steal)
+    assert stolen == [old], "steal must skip the continuation"
+    assert victim.depth == 1 and victim._pending[0] is cont
+    thief = Scheduler(PriorityAgingPolicy(aging_s=aging_s))
+    thief_now = t_steal + clock_skew            # thief's own timeline
+    thief.absorb(stolen, now=thief_now, from_now=t_steal)
+    assert old.tid == tid and old.priority == prio and old.stolen
+    # age preserved exactly across the timeline shift...
+    assert old.age(thief_now) == pytest.approx(t_steal)
+    # ...and so is deadline slack (EDF rank survives the move)
+    assert old.deadline_t - thief_now == pytest.approx(deadline - t_steal)
+    thief.submit("fresh", priority=0, now=thief_now)
+    # past the aging bound, the stolen ticket still outranks fresh class-0
+    assert [t.payload for t in thief.admit(1, now=thief_now)] == ["old"]
+    assert thief.telemetry.steals == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 4),
+       n_ops=st.integers(5, 80))
+def test_stealing_deterministic_under_fixed_seed(seed, n_replicas, n_ops):
+    """Same seed => identical completion order, steal attribution, and
+    routing — the whole steal schedule is a pure function of the seed."""
+    def run():
+        sim = FleetSim(replicas=n_replicas, seed=seed, steal=True,
+                       service_s=[0.003 * (1 + i)
+                                  for i in range(n_replicas)])
+        random_schedule(sim, n_ops, skew=0.6, hot=0)
+        order = run_to_completion(sim)
+        return (order, list(sim.router.steals_per_replica),
+                list(sim.router.routed))
+
+    assert run() == run()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 4),
+       n=st.integers(1, 40), ticks=st.integers(0, 5),
+       fail_idx=st.integers(0, 3))
+def test_drain_rehomes_every_pending_ticket_exactly_once(seed, n_replicas,
+                                                         n, ticks, fail_idx):
+    """drain_replica moves the dead replica's whole outstanding load onto
+    live queues with no loss and no duplication, counts it in the
+    victim's drained counter, and is idempotent."""
+    assume(fail_idx < n_replicas)               # exercises the shim too
+    sim = FleetSim(replicas=n_replicas, seed=seed, steal=False)
+    for _ in range(n):
+        sim.submit(pin=fail_idx)
+    for _ in range(ticks):
+        sim.tick()
+    before = Counter(sim.pending_payloads())
+    victim = sim.replicas[fail_idx]
+    outstanding = victim.scheduler.depth + victim.inflight
+    moved = sim.fail(fail_idx)
+    assert moved == outstanding
+    assert victim.scheduler.depth == 0 and victim.inflight == 0
+    assert Counter(sim.pending_payloads()) == before   # exactly once each
+    assert victim.telemetry.drained == moved
+    assert sim.fail(fail_idx) == 0              # idempotent
+    note(f"moved={moved} after {ticks} ticks")
+    run_to_completion(sim)
+    sim.assert_conserved()
 
 
 @settings(max_examples=25, deadline=None)
