@@ -26,9 +26,14 @@ smoke-router:
 	    --replicas 2
 
 # chunked-prefill smoke: serve a mixed trace with chunking on, then
-# replay it monolithically and assert token-identical outputs
+# replay it monolithically and assert token-identical outputs — on the
+# all-global arch AND on a stateful hybrid (RG-LRU + local ring), the
+# stacks the SequenceStateManager (PR 5) opened to chunking
 smoke-chunked:
 	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 2 --max-len 64 \
+	    --prefill-chunk 16 --verify-chunked
+	python -m repro.launch.serve --arch recurrentgemma-9b --smoke \
 	    --requests 8 --new-tokens 4 --slots 2 --max-len 64 \
 	    --prefill-chunk 16 --verify-chunked
 

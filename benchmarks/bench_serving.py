@@ -25,11 +25,16 @@ both call it):
 - ``chunked_prefill``: chunked vs monolithic prefill at the SAME offered
   load on a mixed workload (1 long batch-class prompt inside a timed
   stream of short latency-critical requests, strict-priority policy on
-  both sides): ``offered_load_ms`` (arrival gap), ``requests``,
-  ``long_tokens``, ``prefill_chunk``, ``monolithic``/``chunked``
-  (summary dicts, median-of-3 passes ranked by TTFT p99),
-  ``ttft_p99_improved`` (chunking must cut tail TTFT — the
-  head-of-line-blocking win).
+  both sides): ``arch`` (the measured architecture), ``offered_load_ms``
+  (arrival gap), ``requests``, ``long_tokens``, ``prefill_chunk``,
+  ``monolithic``/``chunked`` (summary dicts, median-of-3 passes ranked
+  by TTFT p99), ``ttft_p99_improved`` (chunking must cut tail TTFT —
+  the head-of-line-blocking win), and ``stateful`` — the PR 5 second
+  run on a stateful architecture (RG-LRU + local-ring hybrid, locked
+  out of chunking before the SequenceStateManager): ``arch``,
+  ``requests``, ``prefill_chunk``, ``monolithic``/``chunked`` summary
+  dicts, ``token_identical`` (chunked output must match monolithic
+  token for token).
 - ``work_stealing``: stealing vs no-steal fleet on the SAME seeded
   hot-keyed arrival stream (80% of arrivals pinned to replica 0),
   run on the deterministic virtual-clock fleet sim
@@ -101,13 +106,22 @@ def validate_payload(payload: Dict) -> None:
             if k not in over.get(cls, {}):
                 missing.append(f"overload.{cls}.{k}")
     chunk = payload.get("chunked_prefill", {})
-    for k in ("offered_load_ms", "requests", "long_tokens", "prefill_chunk",
-              "monolithic", "chunked", "ttft_p99_improved"):
+    for k in ("arch", "offered_load_ms", "requests", "long_tokens",
+              "prefill_chunk", "monolithic", "chunked", "ttft_p99_improved",
+              "stateful"):
         if k not in chunk:
             missing.append(f"chunked_prefill.{k}")
     for mode in ("monolithic", "chunked"):
         for k in sorted(SUMMARY_KEYS - set(chunk.get(mode, {}))):
             missing.append(f"chunked_prefill.{mode}.{k}")
+    stateful = chunk.get("stateful", {})
+    for k in ("arch", "requests", "prefill_chunk", "monolithic", "chunked",
+              "token_identical"):
+        if k not in stateful:
+            missing.append(f"chunked_prefill.stateful.{k}")
+    for mode in ("monolithic", "chunked"):
+        for k in sorted(SUMMARY_KEYS - set(stateful.get(mode, {}))):
+            missing.append(f"chunked_prefill.stateful.{mode}.{k}")
     ws = payload.get("work_stealing", {})
     for k in ("requests", "replicas", "skew", "steal", "no_steal",
               "served_per_replica_steal", "served_per_replica_no_steal",
@@ -428,11 +442,50 @@ def _chunked_summary():
         chunk_s = _chunk_median(chunked, cfg, gap_ms)
         if chunk_s["ttft_ms_p99"] < mono_s["ttft_ms_p99"]:
             break
-    return {"offered_load_ms": gap_ms, "requests": _CHUNK_LOAD,
+    return {"arch": "deepseek-7b", "offered_load_ms": gap_ms,
+            "requests": _CHUNK_LOAD,
             "long_tokens": _LONG_TOKENS, "prefill_chunk": _CHUNK,
             "monolithic": mono_s, "chunked": chunk_s,
             "ttft_p99_improved":
-                chunk_s["ttft_ms_p99"] < mono_s["ttft_ms_p99"]}
+                chunk_s["ttft_ms_p99"] < mono_s["ttft_ms_p99"],
+            "stateful": _stateful_chunked_summary()}
+
+
+_STATEFUL_ARCH = "recurrentgemma-9b"       # RG-LRU + local ring hybrid
+_STATEFUL_CHUNK = 16
+
+
+def _stateful_chunked_summary():
+    """The PR 5 acceptance run: chunked prefill on a stateful stack
+    (RG-LRU recurrence + local-attention ring — gated out of chunking
+    entirely before the SequenceStateManager) must be token-identical
+    to monolithic prefill on the same mixed long/short trace. Reported
+    alongside both engines' summaries; correctness, not tail latency,
+    is the claim (the TTFT comparison lives in the main section)."""
+    cfg = reduce_for_smoke(get_config(_STATEFUL_ARCH))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+
+    def trace():
+        rng = np.random.default_rng(29)
+        lens = (40, 5, 9, 30, 3, 12, 26, 7)
+        return [Request(i, rng.integers(0, cfg.vocab_size, l)
+                        .astype(np.int32), max_new_tokens=4)
+                for i, l in enumerate(lens)]
+
+    mono = InferenceEngine(cfg, params, **kw)
+    ref = trace()
+    mono.run(ref)
+    chunked = InferenceEngine(cfg, params, prefill_chunk=_STATEFUL_CHUNK,
+                              **kw)
+    got = trace()
+    chunked.run(got)
+    identical = all(a.output == b.output for a, b in zip(got, ref))
+    return {"arch": _STATEFUL_ARCH, "requests": len(ref),
+            "prefill_chunk": _STATEFUL_CHUNK,
+            "monolithic": mono.telemetry.summary(),
+            "chunked": chunked.telemetry.summary(),
+            "token_identical": identical}
 
 
 # ---- work stealing: skewed stream on the deterministic fleet sim ----------
@@ -522,6 +575,14 @@ def run() -> List[Row]:
         f"improved={chunked['ttft_p99_improved']};"
         f"chunk={chunked['prefill_chunk']};"
         f"gap_ms={chunked['offered_load_ms']:.2f};measured=true"))
+    sf = chunked["stateful"]
+    rows.append(Row(
+        "serving/chunked_stateful",
+        sf["chunked"]["latency_ms_p50"] * 1e3,
+        f"arch={sf['arch']};chunk={sf['prefill_chunk']};"
+        f"token_identical={sf['token_identical']};"
+        f"continuations={sf['chunked']['continuations']};"
+        f"requests={sf['requests']};measured=true"))
     rows.append(Row(
         "serving/work_stealing",
         stealing["steal"]["latency_ms_p99"] * 1e3,

@@ -21,7 +21,8 @@ make smoke
 echo "== router smoke: 2 replicas, LM (priority policy) + DLRM =="
 make smoke-router
 
-echo "== chunked-prefill smoke: LM chunked vs monolithic token identity =="
+echo "== chunked-prefill smoke: chunked vs monolithic token identity =="
+echo "==   (all-global arch + stateful RG-LRU/local-ring hybrid) =="
 make smoke-chunked
 
 echo "== work-stealing smoke: hot-spot steal + mid-run kill drain =="

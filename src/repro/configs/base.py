@@ -19,6 +19,12 @@ ATTN_LOCAL = "local"        # sliding-window attention
 SSM = "ssm"                 # Mamba2 SSD block
 RECURRENT = "recurrent"     # Griffin RG-LRU block
 
+# block kinds with a per-slot chunked-prefill contract (the single source
+# of truth: models/blocks.py gates mode="chunk" on it, and
+# serving/state.py keys its slot-state handlers off it) — every
+# state-carrying kind chunks; only cross-attention 'decoder' blocks don't
+CHUNKABLE_KINDS = (ATTN_GLOBAL, ATTN_LOCAL, SSM, RECURRENT)
+
 
 @dataclass(frozen=True)
 class MoEConfig:

@@ -19,8 +19,11 @@ deadline-feasibility admission control (shed requests are counted
 separately from misses; pass ``--service-ms-est auto`` to calibrate the
 estimate from live telemetry). ``--prefill-chunk N`` splits long prompts
 into N-token chunks interleaved with decode steps (LM only) — the
-head-of-line-blocking fix; ``--verify-chunked`` replays the same trace
-monolithically and asserts token-identical outputs (the CI smoke).
+head-of-line-blocking fix, for EVERY block pattern (global, local-ring,
+SSM, RG-LRU, hybrids — the SequenceStateManager carries per-slot state
+across chunk boundaries, PR 5); ``--verify-chunked`` replays the same
+trace monolithically and asserts token-identical outputs (the CI smoke
+runs it on deepseek-7b and on the recurrentgemma-9b stateful hybrid).
 Reports include time-to-first-token percentiles alongside latency.
 
 Real-cluster notes: per-host processes share the production mesh via

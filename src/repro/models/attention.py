@@ -90,6 +90,16 @@ def _kv_dequant(q, scale, dtype):
             * scale.astype(jnp.float32)[..., None]).astype(dtype)
 
 
+def _ring_newest_positions(last, win: int):
+    """Per ring slot r, the newest absolute position p <= ``last`` (B,)
+    with p % win == r; negative means that slot was never written. The
+    ONE ring-layout derivation both the monolithic fill and the chunked
+    path share — the token-identity contract needs them to agree."""
+    r = jnp.arange(win, dtype=jnp.int32)[None, :]
+    last = last[:, None]
+    return last - jnp.mod(last - r, win)                   # (B, win)
+
+
 # --------------------------------------------------------------------------
 # projections
 # --------------------------------------------------------------------------
@@ -220,8 +230,17 @@ def full_attention(p, x, cfg: ModelConfig, kind: str, positions,
     return _out_proj(p, o), (k, v)
 
 
-def fill_cache_from_prefill(cache, k, v, kind: str, cfg: ModelConfig):
-    """Write prefill K/V into the cache (ring layout for local layers)."""
+def fill_cache_from_prefill(cache, k, v, kind: str, cfg: ModelConfig,
+                            kv_valid=None):
+    """Write prefill K/V into the cache (ring layout for local layers).
+
+    ``kv_valid`` (B, S) marks the real tokens of each padded row. The
+    local ring keeps, per row, the LAST ``min(window, length)`` real
+    positions at their ring slots — a length-aware fill. (The old fill
+    kept the last ``window`` positions of the PADDED sequence, so a
+    short prompt in a long bucket parked padding junk in the ring —
+    attended by decode once ``pos`` crossed the window. The chunked-path
+    identity tests pinned the fix.)"""
     S = k.shape[1]
     slots = cache["k"].shape[1]
     quant = "k_scale" in cache
@@ -231,15 +250,19 @@ def fill_cache_from_prefill(cache, k, v, kind: str, cfg: ModelConfig):
         vq, vs = _kv_quant(v)
         pairs = [("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)]
     out = {}
-    if kind == "local" and S > slots:
-        # keep the last ``window`` tokens, placed at ring positions
-        roll = (S - slots) % slots
-        # ring index of the oldest kept token
-        idx = (jnp.arange(slots) + roll) % slots
+    if kind == "local":
+        B = k.shape[0]
+        lengths = (kv_valid.sum(-1).astype(jnp.int32) if kv_valid is not None
+                   else jnp.full((B,), S, jnp.int32))
+        p_r = _ring_newest_positions(lengths - 1, slots)       # (B, slots)
+        idx = jnp.clip(p_r, 0, S - 1)
+        written = p_r >= 0
         for name, val in pairs:
-            val = val[:, S - slots:]
-            out[name] = jnp.zeros_like(cache[name]).at[:, idx].set(
-                val.astype(cache[name].dtype))
+            tail = (1,) * (val.ndim - 2)
+            g = jnp.take_along_axis(val, idx.reshape(idx.shape + tail),
+                                    axis=1)
+            g = jnp.where(written.reshape(written.shape + tail), g, 0)
+            out[name] = g.astype(cache[name].dtype)
         return out
     for name, val in pairs:
         start = (0,) * cache[name].ndim
@@ -256,7 +279,9 @@ def chunk_prefill_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
     """One prompt chunk per GROUP ROW against the live full-batch cache:
     x (P,C,d) holds the tick's chunk tokens (P = padded group size, a
     subset of the cache's slot batch), row j sitting at absolute offset
-    ``start[j]``. ``pos`` is ``(slots, start, write_pos)``:
+    ``start[j]``. ``pos`` is ``(slots, start, write_pos, lengths)``
+    (``lengths[j]`` = real tokens in row j's chunk; 0 marks a padded
+    row). Global attention:
 
     - chunk K/V scatters into cache rows ``slots[j]`` at positions
       ``write_pos[j] + 0..C-1``. The update is O(P x C) on the (donated)
@@ -269,18 +294,31 @@ def chunk_prefill_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
       monolithic prefill applies at those rows, so iterating chunks is
       prefix-consistent with monolithic prefill.
 
-    Returns (y (P,C,d), new full cache). Global attention only: local
-    ring buffers and state-space blocks carry recurrent state that a
-    chunk boundary would truncate (the engine gates chunking to
-    all-global stacks)."""
-    if kind != "global":
-        raise ValueError("chunked prefill supports global attention only, "
-                         f"got {kind!r}")
-    slots, start, write_pos = pos
+    Local (sliding-window) attention — the ring-buffer chunk contract
+    (PR 5): the ring holds only the last ``window`` keys, so queries
+    cannot attend a post-write ring (writing the chunk may evict keys
+    the chunk's own early queries still need). Instead:
+
+    - queries attend the PRE-chunk ring (positions ``start-window`` ..
+      ``start-1`` at their ring slots, masked to the written window)
+      concatenated with the in-chunk keys (causal, window-limited) —
+      exactly the key set a monolithic sliding-window prefill exposes,
+    - chunk K/V then scatters at ring offsets ``(start + i) % window``,
+      keeping only each ring slot's LAST real write (positions past
+      ``lengths[j]`` and intra-chunk evictions route out of bounds and
+      drop), so the post-chunk ring again holds the newest ``window``
+      real positions.
+
+    Returns (y (P,C,d), new full cache)."""
+    if kind not in ("global", "local"):
+        raise ValueError("chunked prefill supports global and local "
+                         f"attention, got {kind!r}")
+    slots, start, write_pos, lengths = pos
     P, C = x.shape[0], x.shape[1]
     slots = jnp.asarray(slots, jnp.int32)
     start = jnp.asarray(start, jnp.int32)
     write_pos = jnp.asarray(write_pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
     pos_bc = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
     if cfg.rope_mode == "mrope":
         positions = jnp.broadcast_to(pos_bc[None], (3, P, C))
@@ -290,6 +328,11 @@ def chunk_prefill_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
 
     S = cache["k"].shape[1]
     quant = "k_scale" in cache
+
+    if kind == "local":
+        return _chunk_prefill_local(p, q, k_new, v_new, cache, slots, start,
+                                    write_pos, lengths, pos_bc, cfg, x.dtype)
+
     widx = write_pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
 
     def write_chunk(c, new):
@@ -329,15 +372,88 @@ def chunk_prefill_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
     return _out_proj(p, o), new_cache
 
 
+def _chunk_prefill_local(p, q, k_new, v_new, cache, slots, start, write_pos,
+                         lengths, pos_bc, cfg: ModelConfig, dtype):
+    """Local-attention half of ``chunk_prefill_attention`` (see there).
+    ``q``/``k_new``/``v_new`` are the already-projected chunk tensors."""
+    P, C = pos_bc.shape
+    B = cache["k"].shape[0]
+    win = cache["k"].shape[1]
+    quant = "k_scale" in cache
+
+    # ring write: keep, per ring slot, only the LAST real write of this
+    # chunk (j >= lengths - win), and only real tokens (j < lengths);
+    # everything else routes out of bounds and drops. Padded rows
+    # (lengths == 0) additionally route their batch index out of bounds,
+    # so a duplicated pad slot can never clobber a real row.
+    j = jnp.arange(C, dtype=jnp.int32)[None, :]
+    keep = (j < lengths[:, None]) & (j >= lengths[:, None] - win)
+    rows = jnp.where(lengths > 0, slots, B)
+    widx = jnp.where(keep, jnp.mod(write_pos[:, None] + j, win), win)
+
+    def ring_write(c, new):
+        return c.at[rows[:, None], widx].set(new.astype(c.dtype),
+                                             mode="drop")
+
+    new_cache = {}
+    if quant:
+        kq, ks = _kv_quant(k_new)
+        vq, vs = _kv_quant(v_new)
+        for name, val in (("k", kq), ("v", vq),
+                          ("k_scale", ks), ("v_scale", vs)):
+            new_cache[name] = ring_write(cache[name], val)
+        ring_k = _kv_dequant(cache["k"][slots], cache["k_scale"][slots],
+                             dtype)
+        ring_v = _kv_dequant(cache["v"][slots], cache["v_scale"][slots],
+                             dtype)
+        ck_new = _kv_dequant(kq, ks, dtype)
+        cv_new = _kv_dequant(vq, vs, dtype)
+    else:
+        for name, val in (("k", k_new), ("v", v_new)):
+            new_cache[name] = ring_write(cache[name], val)
+        ring_k, ring_v = cache["k"][slots], cache["v"][slots]
+        ck_new, cv_new = k_new, v_new
+
+    # pre-chunk ring slot r holds absolute position p_r = the newest
+    # p <= start-1 with p % win == r (negative -> never written); chunk
+    # query i (absolute q_i = start+i) sees it iff q_i - p_r < win
+    p_r = _ring_newest_positions(start - 1, win)             # (P,win)
+    ring_mask = (p_r[:, None, :] >= 0) \
+        & (pos_bc[:, :, None] - p_r[:, None, :] < win)       # (P,C,win)
+    # in-chunk keys: causal + window over the chunk-relative offsets
+    i = jnp.arange(C, dtype=jnp.int32)
+    chunk_mask = (i[:, None] >= i[None, :]) \
+        & (i[:, None] - i[None, :] < win)                    # (C,C)
+    chunk_mask = jnp.broadcast_to(chunk_mask[None], (P, C, C))
+
+    ck = jnp.concatenate([ring_k, ck_new], axis=1)           # (P,win+C,..)
+    cv = jnp.concatenate([ring_v, cv_new], axis=1)
+    mask = jnp.concatenate([ring_mask, chunk_mask], axis=2)  # (P,C,win+C)
+    scores = _gqa_scores(q, ck, cfg)                         # (P,K,G,C,·)
+    scores = jnp.where(mask[:, None, None, :, :], scores,
+                       jnp.asarray(NEG_INF, scores.dtype))
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    o = _gqa_out(probs, cv)
+    o = shard(o, "batch", "seq", "heads", None)
+    return _out_proj(p, o), new_cache
+
+
 # --------------------------------------------------------------------------
 # decode (single new token against a cache)
 # --------------------------------------------------------------------------
 
-def decode_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
+def decode_attention(p, x, cache, pos, cfg: ModelConfig, kind: str,
+                     active=None):
     """x (B,1,d); pos int32 scalar OR per-sequence (B,) vector (#tokens
     already in each slot's cache — continuous batching decodes slots at
-    different positions). Returns (y (B,1,d), new_cache). Dispatches to the
-    sequence-sharded path when the mesh shards the cache sequence axis."""
+    different positions). ``active`` (B,) bool marks the rows really
+    decoding: inactive rows (free or mid-chunked-prefill) ride the
+    static-shape dispatch but must leave their cache row untouched — a
+    dummy write at ``pos % window`` would clobber a mid-prefill row's
+    ring, so inactive rows write back the value already at their write
+    position (an O(B) gather, not a cache copy). Returns (y (B,1,d),
+    new_cache). Dispatches to the sequence-sharded path when the mesh
+    shards the cache sequence axis."""
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     per_slot = pos.ndim == 1
@@ -352,14 +468,27 @@ def decode_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
     write_at = jnp.mod(pos_b, slots) if kind == "local" else pos_b
     quant = "k_scale" in cache
 
-    if kind == "global" and mesh_axis_size("kv_seq") > 1 and not quant:
-        o, new_cache = _decode_seq_sharded(
-            q, k_new, v_new, cache, pos if not per_slot else pos_b[0], cfg)
+    # sequence-sharded fast path: scalar-position batches only — it has
+    # no per-slot write offsets and no active-mask freeze, so serving's
+    # continuous batching (per-slot pos, inactive rows) must take the
+    # general path below, which is correct under any mesh
+    if kind == "global" and mesh_axis_size("kv_seq") > 1 and not quant \
+            and not per_slot and active is None:
+        o, new_cache = _decode_seq_sharded(q, k_new, v_new, cache, pos, cfg)
         return _out_proj(p, o), new_cache
 
     def write_one(c, new, at):
         start = (at,) + (0,) * (c.ndim - 1)
         return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), start)
+
+    def guard(val, name):
+        """Inactive rows re-write the value already at their write slot."""
+        if active is None:
+            return val
+        at = write_at.reshape((B,) + (1,) * (val.ndim - 1))
+        old = jnp.take_along_axis(cache[name], at, axis=1).astype(val.dtype)
+        act = jnp.asarray(active, bool).reshape((B,) + (1,) * (val.ndim - 1))
+        return jnp.where(act, val, old)
 
     new_cache = {}
     if quant:
@@ -367,12 +496,14 @@ def decode_attention(p, x, cache, pos, cfg: ModelConfig, kind: str):
         vq, vs = _kv_quant(v_new)
         for name, val in (("k", kq), ("v", vq),
                           ("k_scale", ks), ("v_scale", vs)):
-            new_cache[name] = jax.vmap(write_one)(cache[name], val, write_at)
+            new_cache[name] = jax.vmap(write_one)(cache[name],
+                                                  guard(val, name), write_at)
         ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], x.dtype)
         cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
         for name, val in (("k", k_new), ("v", v_new)):
-            new_cache[name] = jax.vmap(write_one)(cache[name], val, write_at)
+            new_cache[name] = jax.vmap(write_one)(cache[name],
+                                                  guard(val, name), write_at)
         ck, cv = new_cache["k"], new_cache["v"]
     idx = jnp.arange(slots)
     if kind == "local":

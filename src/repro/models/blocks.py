@@ -11,7 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, SSM, ModelConfig
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, CHUNKABLE_KINDS,
+                                RECURRENT, SSM, ModelConfig)
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
@@ -80,24 +81,29 @@ def _residual_mlp(p, x, cfg: ModelConfig, aux):
 def apply_block(p, x, cfg: ModelConfig, kind: str, *, mode: str,
                 positions=None, cache=None, pos=None, kv_valid=None,
                 cross_kv=None, cross_valid=None, causal: bool = True,
-                aux=None):
+                aux=None, active=None):
     """mode: 'full' (train/encode), 'prefill', 'chunk' (one prompt chunk
-    against a live cache — ``pos`` carries per-row chunk offsets), or
-    'decode'."""
+    against a live cache — ``pos`` carries per-row chunk coordinates
+    ``(slots, start, write_pos, lengths)``), or 'decode' (``active``
+    (B,) bool marks the rows really decoding; inactive rows' per-slot
+    state is frozen so a dummy step cannot corrupt a mid-chunked-prefill
+    row). Every state-carrying kind chunks: global KV scatters at
+    offsets, local rings write at ring offsets, SSM / RG-LRU carry the
+    entering state + conv tail across the boundary."""
     h = apply_norm(p["pre_norm"], x, cfg.norm_type, cfg.norm_eps)
     new_cache = cache
 
-    if mode == "chunk" and kind not in (ATTN_GLOBAL,):
+    if mode == "chunk" and kind not in CHUNKABLE_KINDS:
         raise ValueError(
-            f"chunked prefill needs an all-global-attention stack; "
-            f"block kind {kind!r} carries state a chunk boundary would "
-            f"truncate")
+            f"chunked prefill cannot cross block kind {kind!r}: "
+            f"cross-attention decoder state has no per-slot chunk "
+            f"contract (see repro.serving.state.require_chunkable)")
 
     if kind in (ATTN_GLOBAL, ATTN_LOCAL, "decoder"):
         akind = ATTN_GLOBAL if kind == "decoder" else kind
         if mode == "decode":
             y, new_cache = attn.decode_attention(p["attn"], h, cache, pos,
-                                                 cfg, akind)
+                                                 cfg, akind, active=active)
         elif mode == "chunk":
             y, new_cache = attn.chunk_prefill_attention(p["attn"], h, cache,
                                                         pos, cfg, akind)
@@ -106,20 +112,31 @@ def apply_block(p, x, cfg: ModelConfig, kind: str, *, mode: str,
                                         kv_valid=kv_valid, causal=causal)
             if mode == "prefill":
                 new_cache = attn.fill_cache_from_prefill(cache, kv[0], kv[1],
-                                                         akind, cfg)
+                                                         akind, cfg,
+                                                         kv_valid=kv_valid)
     elif kind == SSM:
         if mode == "decode":
-            y, new_cache = ssm_mod.ssm_decode_step(p["ssm"], h, cache, cfg)
+            y, new_cache = ssm_mod.ssm_decode_step(p["ssm"], h, cache, cfg,
+                                                   active=active)
+        elif mode == "chunk":
+            y, new_cache = ssm_mod.ssm_chunk_step(p["ssm"], h, cache, cfg,
+                                                  pos)
         else:
             y, new_cache = ssm_mod.ssm_forward(p["ssm"], h, cfg,
-                                               return_state=(mode == "prefill"))
+                                               return_state=(mode == "prefill"),
+                                               valid=kv_valid)
         return x + y, new_cache, aux               # mamba: no MLP half
     elif kind == RECURRENT:
         if mode == "decode":
-            y, new_cache = rglru_mod.rglru_decode_step(p["rec"], h, cache, cfg)
+            y, new_cache = rglru_mod.rglru_decode_step(p["rec"], h, cache,
+                                                       cfg, active=active)
+        elif mode == "chunk":
+            y, new_cache = rglru_mod.rglru_chunk_step(p["rec"], h, cache,
+                                                      cfg, pos)
         else:
             y, new_cache = rglru_mod.rglru_forward(p["rec"], h, cfg,
-                                                   return_state=(mode == "prefill"))
+                                                   return_state=(mode == "prefill"),
+                                                   valid=kv_valid)
     else:
         raise ValueError(kind)
 

@@ -98,6 +98,34 @@ def softcap(x, cap: Optional[float]):
     return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
 
 
+def causal_conv_with_carry(x, w, b, carry):
+    """Depthwise causal conv of ``x`` (B,C,ch) with kernel ``w`` (K,ch)
+    whose left context is ``carry`` (B,K-1,ch) — the last K-1 pre-conv
+    inputs of the preceding chunk (zeros at sequence start). Equivalent
+    to zero-padded `_causal_conv` over the concatenated sequence,
+    restricted to the new positions; the boundary indexing lives here
+    ONCE for every recurrent chunk path."""
+    K = w.shape[0]
+    C = x.shape[1]
+    full = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    out = sum(full[:, i:i + C, :] * w[i] for i in range(K)) + b
+    return out, full
+
+
+def tail_at_lengths(seq, lengths, k: int, prepend=None):
+    """Last ``k`` entries of ``seq`` (B,S,...) ENDING at per-row position
+    ``lengths`` (B,) — the causal-conv carry for a row whose real content
+    stops mid-sequence. Entries before position 0 read from ``prepend``
+    (B,k,...) — the carry entering this sequence — or zeros when None
+    (sequence start)."""
+    if prepend is None:
+        prepend = jnp.zeros((seq.shape[0], k) + seq.shape[2:], seq.dtype)
+    full = jnp.concatenate([prepend.astype(seq.dtype), seq], axis=1)
+    idx = lengths[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    idx = idx.reshape(idx.shape + (1,) * (seq.ndim - 2))
+    return jnp.take_along_axis(full, idx, axis=1)
+
+
 # --------------------------------------------------------------------------
 # RoPE (standard + Qwen2-VL M-RoPE)
 # --------------------------------------------------------------------------

@@ -98,7 +98,7 @@ def _default_positions(cfg: ModelConfig, B: int, S: int, offset=0):
 def _run_stack(params_scan, params_tail, x, cfg: ModelConfig, kinds_unit,
                kinds_tail, *, mode, positions=None, caches=None, pos=None,
                kv_valid=None, cross_kv=None, cross_valid=None,
-               causal=True, remat=False):
+               causal=True, remat=False, active=None):
     """Scan the superblock unit, then the unrolled tail."""
     n_pos = len(kinds_unit)
     aux0 = jnp.zeros((), jnp.float32)
@@ -115,7 +115,8 @@ def _run_stack(params_scan, params_tail, x, cfg: ModelConfig, kinds_unit,
                 cache=None if c_unit is None else c_unit[i], pos=pos,
                 kv_valid=kv_valid,
                 cross_kv=None if ck_unit is None else ck_unit[i],
-                cross_valid=cross_valid, causal=causal, aux=aux)
+                cross_valid=cross_valid, causal=causal, aux=aux,
+                active=active)
             new_caches.append(nc)
         ys = tuple(new_caches) if mode != "full" else None
         return (x, aux), ys
@@ -139,7 +140,7 @@ def _run_stack(params_scan, params_tail, x, cfg: ModelConfig, kinds_unit,
         x, nc, aux = blk.apply_block(
             params_tail[i], x, cfg, kind, mode=mode, positions=positions,
             cache=c, pos=pos, kv_valid=kv_valid, cross_kv=ck,
-            cross_valid=cross_valid, causal=causal, aux=aux)
+            cross_valid=cross_valid, causal=causal, aux=aux, active=active)
         tail_caches.append(nc)
 
     new_caches = None
@@ -188,7 +189,7 @@ def build_cross_kv(params, cfg: ModelConfig, enc_hidden):
 
 def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
             mode: str = "full", caches=None, pos=None, kv_valid=None,
-            remat: bool = False):
+            remat: bool = False, active=None):
     """Returns (hidden (B,S,d), new_caches, aux).
 
     batch: {'tokens' (B,S)} or {'embeds' (B,S,d)}; enc-dec additionally
@@ -221,7 +222,7 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
         params["scan"], params["tail"], x, cfg, unit, tail, mode=mode,
         positions=positions, caches=caches, pos=pos, kv_valid=kv_valid,
         cross_kv=cross_kv, cross_valid=cross_valid,
-        causal=(cfg.family != "encoder"), remat=remat)
+        causal=(cfg.family != "encoder"), remat=remat, active=active)
 
     x = apply_norm(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
     if cfg.encdec is not None and new_caches is not None and cross_kv is not None:
@@ -254,26 +255,33 @@ def prefill(params, cfg: ModelConfig, batch, max_len: int, kv_valid=None):
 
 
 def chunk_prefill_step(params, cfg: ModelConfig, tokens, caches, slots,
-                       start, write_pos):
+                       start, write_pos, lengths):
     """Run one prompt chunk per group row against the live full-batch
     caches: tokens (P,C) for cache rows ``slots`` (P,) at absolute
     offsets ``start`` (P,) — row j covers positions
-    start[j]..start[j]+C-1. K/V scatters into the caches at
+    start[j]..start[j]+C-1, of which the first ``lengths[j]`` are real
+    (``lengths == 0`` marks a padded group row). Global K/V scatters at
     ``write_pos[j]`` (pass max_len to park a padded row: its
-    out-of-bounds writes drop); attention sees the whole written prefix,
-    so iterating chunks is prefix-consistent with a monolithic prefill.
+    out-of-bounds writes drop) and queries attend the whole written
+    prefix; local rings write at ring offsets; SSM / RG-LRU blocks seed
+    their recurrence from the entering per-slot state and scatter the
+    exit state back — so iterating chunks is prefix-consistent with a
+    monolithic prefill for EVERY block pattern.
     Returns (hidden (P,C,d), new full caches)."""
     x, caches, _ = forward(params, cfg, {"tokens": tokens}, mode="chunk",
-                           caches=caches, pos=(slots, start, write_pos))
+                           caches=caches,
+                           pos=(slots, start, write_pos, lengths))
     return x, caches
 
 
-def decode_step(params, cfg: ModelConfig, tokens, caches, pos):
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos, active=None):
     """One decode step: tokens (B,1) [or embeds (B,1,d)] at position ``pos``.
-    Returns (last hidden (B,d), new caches)."""
+    ``active`` (B,) bool freezes the per-slot state of rows that are not
+    really decoding (free / mid-chunked-prefill rows riding the
+    static-shape dispatch). Returns (last hidden (B,d), new caches)."""
     batch = {"tokens": tokens} if tokens.ndim == 2 else {"embeds": tokens}
     x, caches, _ = forward(params, cfg, batch, mode="decode", caches=caches,
-                           pos=pos)
+                           pos=pos, active=active)
     return x[:, -1], caches
 
 

@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import mk_param
+from repro.models.common import (causal_conv_with_carry, mk_param,
+                                 tail_at_lengths)
 from repro.sharding.rules import shard
 
 N_BLOCKS = 8        # block-diagonal gate projections
@@ -81,35 +82,110 @@ def _causal_conv(x, w, b):
     return sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K)) + b
 
 
-def rglru_forward(p, x, cfg: ModelConfig, return_state: bool = False):
-    """x (B,S,d) -> (B,S,d) [, cache]."""
+def _combine(c1, c2):
+    """Associative combine for h_t = a_t h_{t-1} + b_t."""
+    a1, b1 = c1
+    a2, b2 = c2
+    return a2 * a1, a2 * b1 + b2
+
+
+def rglru_forward(p, x, cfg: ModelConfig, return_state: bool = False,
+                  valid=None):
+    """x (B,S,d) -> (B,S,d) [, cache].
+
+    ``valid`` (B,S) marks the real tokens of a padded row: invalid
+    positions get a = 1, b = 0 (the recurrence carries through
+    unchanged), so the returned state is the state after exactly
+    ``length`` real tokens and the conv tail ends at the real length —
+    a padded serving prefill no longer hands decode a state advanced by
+    the zero-token bucket tail."""
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_gate"]))
     u_pre = jnp.einsum("bsd,dw->bsw", x, p["proj_x"])
     u = _causal_conv(u_pre, p["conv_w"], p["conv_b"])
     a, b = _gates(p, u)
+    if valid is not None:
+        a = jnp.where(valid[..., None], a, 1.0)
+        b = jnp.where(valid[..., None], b, 0.0)
     # h_t = a_t h_{t-1} + b_t via associative scan along seq
-    def combine(c1, c2):
-        a1, b1 = c1
-        a2, b2 = c2
-        return a2 * a1, a2 * b1 + b2
-    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
     y = (gate.astype(jnp.float32) * h).astype(x.dtype)
     out = jnp.einsum("bsw,wd->bsd", y, p["proj_out"])
     out = shard(out, "batch", "seq", None)
     if return_state:
         K = cfg.recurrent.d_conv - 1
-        tail = u_pre[:, -K:]
-        padn = K - tail.shape[1]
-        if padn > 0:
-            tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
-        cache = {"h": h[:, -1].astype(jnp.float32),
+        if valid is None:
+            h_last = h[:, -1]
+            tail = u_pre[:, -K:]
+            padn = K - tail.shape[1]
+            if padn > 0:
+                tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
+        else:
+            lengths = valid.sum(-1).astype(jnp.int32)
+            h_last = jnp.take_along_axis(
+                h, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+            tail = tail_at_lengths(u_pre, lengths, K)
+        cache = {"h": h_last.astype(jnp.float32),
                  "conv": tail.astype(jnp.dtype(cfg.activation_dtype))}
         return out, cache
     return out, None
 
 
-def rglru_decode_step(p, x, cache, cfg: ModelConfig):
-    """x (B,1,d) single step."""
+def rglru_chunk_step(p, x, cache, cfg: ModelConfig, pos):
+    """One prompt chunk for the P group rows against the full-batch
+    recurrent cache — the chunked-prefill path for RG-LRU (PR 5):
+    x (P,C,d) are the chunk tokens, ``pos = (slots, start, write_pos,
+    lengths)`` the engine's per-row chunk coordinates (``write_pos`` is
+    positional-cache bookkeeping, unused here).
+
+    Gather the entering hidden state and conv tail at ``slots`` (zeros
+    on a request's first chunk — the row may hold a previous occupant's
+    exit state), run the gated recurrence seeded with them (the scan is
+    linear in the entering state: h_t = (prod a) h0 + h_t^zero), and
+    scatter the exit state + conv tail back. Tokens past ``lengths[j]``
+    carry a = 1, b = 0 so bucket padding cannot advance the state;
+    padded group rows (lengths == 0) scatter out of bounds and drop."""
+    slots, start, _write_pos, lengths = pos
+    slots = jnp.asarray(slots, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    P, C, _ = x.shape
+    B_full = cache["h"].shape[0]
+    K = p["conv_w"].shape[0]
+    first = (start == 0)
+    h0 = jnp.where(first[:, None], 0.0, cache["h"][slots])      # (P,w) f32
+    carry = jnp.where(first[:, None, None], 0, cache["conv"][slots])
+
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_gate"]))
+    u_pre = jnp.einsum("bsd,dw->bsw", x, p["proj_x"])
+    u, _ = causal_conv_with_carry(u_pre, p["conv_w"], p["conv_b"], carry)
+    a, b = _gates(p, u)
+    valid = (jnp.arange(C, dtype=jnp.int32)[None, :] < lengths[:, None])
+    a = jnp.where(valid[..., None], a, 1.0)
+    b = jnp.where(valid[..., None], b, 0.0)
+    a_cum, h_zero = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    h = a_cum * h0[:, None, :] + h_zero                         # (P,C,w)
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["proj_out"])
+    out = shard(out, "batch", "seq", None)
+
+    h_last = jnp.take_along_axis(
+        h, jnp.maximum(lengths - 1, 0)[:, None, None], axis=1)[:, 0]
+    tail = tail_at_lengths(u_pre, lengths, K - 1, prepend=carry)
+    scat = jnp.where(lengths > 0, slots, B_full)
+    new_cache = {
+        "h": cache["h"].at[scat].set(h_last.astype(jnp.float32),
+                                     mode="drop"),
+        "conv": cache["conv"].at[scat].set(
+            tail.astype(cache["conv"].dtype), mode="drop"),
+    }
+    return out, new_cache
+
+
+def rglru_decode_step(p, x, cache, cfg: ModelConfig, active=None):
+    """x (B,1,d) single step. ``active`` (B,) bool freezes inactive
+    rows' state/conv (free or mid-chunked-prefill rows ride the
+    static-shape dispatch with a dummy token — advancing their
+    recurrence would corrupt the prefill they are in the middle of)."""
     gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["proj_gate"]))
     u_new = jnp.einsum("bsd,dw->bsw", x, p["proj_x"])
     window = jnp.concatenate([cache["conv"],
@@ -119,4 +195,9 @@ def rglru_decode_step(p, x, cache, cfg: ModelConfig):
     h = a[:, 0] * cache["h"] + b[:, 0]
     y = (gate.astype(jnp.float32) * h[:, None]).astype(x.dtype)
     out = jnp.einsum("bsw,wd->bsd", y, p["proj_out"])
-    return out, {"h": h, "conv": window[:, 1:]}
+    new_h, new_conv = h, window[:, 1:]
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        new_h = jnp.where(act[:, None], new_h, cache["h"])
+        new_conv = jnp.where(act[:, None, None], new_conv, cache["conv"])
+    return out, {"h": new_h, "conv": new_conv}

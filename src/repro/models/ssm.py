@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.common import mk_param
+from repro.models.common import (causal_conv_with_carry, mk_param,
+                                 tail_at_lengths)
 from repro.sharding.rules import shard
 
 
@@ -135,18 +136,29 @@ def _gated_out(p, y, z, cfg: ModelConfig):
                       p["out_proj"])
 
 
-def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
-    """Full-sequence Mamba2 mixer. x (B,S,d) -> y (B,S,d) [, cache]."""
+def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False,
+                valid=None):
+    """Full-sequence Mamba2 mixer. x (B,S,d) -> y (B,S,d) [, cache].
+
+    ``valid`` (B,S) marks the real tokens of a padded row (serving
+    prefill pads prompts to a bucket). Invalid positions get dt = 0, so
+    they neither decay nor feed the state — the returned state is the
+    state after exactly ``length`` real tokens, and the conv tail is the
+    last pre-conv inputs ENDING at the real length (not at the padded
+    bucket edge). Without this, a padded prefill handed decode a state
+    polluted by the zero-token tail."""
     s, d_in, nh, conv_dim = _dims(cfg)
     B_, S, _ = x.shape
     zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
-    z, xBC, dtraw = _split_proj(zxbcdt, cfg)
-    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"])
-                      .astype(jnp.float32)).astype(xBC.dtype)
+    z, xBC_pre, dtraw = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(xBC_pre.dtype)
     xs = xBC[..., :d_in].reshape(B_, S, nh, s.head_dim)
     Bmat = xBC[..., d_in:d_in + s.d_state]
     Cmat = xBC[..., d_in + s.d_state:]
     dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"])                                        # (nh,)
     # pad sequence to a chunk multiple
     chunk = min(s.chunk_size, S) if S % min(s.chunk_size, S) == 0 else S
@@ -157,10 +169,82 @@ def ssm_forward(p, x, cfg: ModelConfig, return_state: bool = False):
     out = _gated_out(p, y, z, cfg)
     out = shard(out, "batch", "seq", None)
     if return_state:
-        cache = {"state": final,
-                 "conv": xBC_raw_tail(x, p, cfg, S)}
-        return out, cache
+        if valid is None:
+            tail = xBC_raw_tail(x, p, cfg, S)
+        else:
+            tail = tail_at_lengths(xBC_pre,
+                                   valid.sum(-1).astype(jnp.int32),
+                                   s.d_conv - 1)
+            tail = tail.astype(jnp.dtype(cfg.activation_dtype))
+        return out, {"state": final, "conv": tail}
     return out, None
+
+
+def ssm_chunk_step(p, x, cache, cfg: ModelConfig, pos):
+    """One prompt chunk for the P group rows against the full-batch
+    recurrent cache — the chunked-prefill path for Mamba2 (PR 5):
+    x (P,C,d) are the chunk tokens, ``pos = (slots, start, write_pos,
+    lengths)`` the engine's per-row chunk coordinates (``write_pos``
+    is positional-cache bookkeeping, unused here).
+
+    The recurrence carries across the chunk boundary: gather the
+    entering state and causal-conv tail at ``slots`` (zeros on a
+    request's FIRST chunk — the cache row may hold a previous
+    occupant's exit state), run the SSD scan seeded with them, and
+    scatter the exit state + new conv tail back. Tokens past
+    ``lengths[j]`` (bucket padding) get dt = 0 so they cannot touch the
+    state, and padded group rows (lengths == 0) scatter out of bounds
+    and drop. Token-identical to running the whole prompt through
+    ``ssm_forward`` because the seeded scan computes the same linear
+    recurrence h_t = exp(dtA_t) h_{t-1} + dt_t x_t B_t, just split at
+    the chunk edge. Returns (y (P,C,d), new full cache)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    P, C, _ = x.shape
+    slots, start, _write_pos, lengths = pos
+    slots = jnp.asarray(slots, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    B_full = cache["state"].shape[0]
+    first = (start == 0)
+    h0 = jnp.where(first[:, None, None, None], 0.0,
+                   cache["state"][slots])                   # (P,nh,hd,n)
+    carry = jnp.where(first[:, None, None], 0,
+                      cache["conv"][slots])                 # (P,K-1,convdim)
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xBC_pre, dtraw = _split_proj(zxbcdt, cfg)
+    K = p["conv_w"].shape[0]
+    xBC, _ = causal_conv_with_carry(xBC_pre, p["conv_w"], p["conv_b"],
+                                    carry)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(xBC_pre.dtype)
+    xs = xBC[..., :d_in].reshape(P, C, nh, s.head_dim)
+    Bmat = xBC[..., d_in:d_in + s.d_state]
+    Cmat = xBC[..., d_in + s.d_state:]
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32) + p["dt_bias"])
+    valid = jnp.arange(C, dtype=jnp.int32)[None, :] < lengths[:, None]
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    dtA = dt * A                                            # (P,C,nh) f32
+    y, final = ssd_chunked(xs * dt[..., None].astype(xs.dtype),
+                           dtA, Bmat, Cmat, C)
+    # the entering state is linear in the recurrence: h_t picks up
+    # h0 * exp(cumsum dtA), the exit state h0 * exp(total dtA)
+    acs = jnp.cumsum(dtA, axis=1)                           # (P,C,nh)
+    y = y + jnp.einsum("bln,bhpn,blh->blhp", Cmat, h0.astype(Cmat.dtype),
+                       jnp.exp(acs).astype(Cmat.dtype))
+    final = final + h0 * jnp.exp(acs[:, -1])[..., None, None]
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    out = _gated_out(p, y.reshape(P, C, d_in), z, cfg)
+    out = shard(out, "batch", "seq", None)
+
+    tail = tail_at_lengths(xBC_pre, lengths, K - 1, prepend=carry)
+    scat = jnp.where(lengths > 0, slots, B_full)
+    new_cache = {
+        "state": cache["state"].at[scat].set(final, mode="drop"),
+        "conv": cache["conv"].at[scat].set(
+            tail.astype(cache["conv"].dtype), mode="drop"),
+    }
+    return out, new_cache
 
 
 def xBC_raw_tail(x, p, cfg: ModelConfig, S: int):
@@ -175,8 +259,12 @@ def xBC_raw_tail(x, p, cfg: ModelConfig, S: int):
     return xBC.astype(jnp.dtype(cfg.activation_dtype))
 
 
-def ssm_decode_step(p, x, cache, cfg: ModelConfig):
-    """x (B,1,d) single-token step with carried (state, conv) cache."""
+def ssm_decode_step(p, x, cache, cfg: ModelConfig, active=None):
+    """x (B,1,d) single-token step with carried (state, conv) cache.
+    ``active`` (B,) bool freezes inactive rows' state/conv (free or
+    mid-chunked-prefill rows ride the static-shape dispatch with a dummy
+    token — updating their recurrent state would corrupt the prefill
+    they are in the middle of)."""
     s, d_in, nh, conv_dim = _dims(cfg)
     B_ = x.shape[0]
     zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
@@ -198,4 +286,10 @@ def ssm_decode_step(p, x, cache, cfg: ModelConfig):
     y = y + xs * p["D"][None, :, None].astype(xs.dtype)
     y = y.reshape(B_, 1, d_in)
     out = _gated_out(p, y, z, cfg)
-    return out, {"state": state, "conv": window[:, 1:]}
+    new_state, new_conv = state, window[:, 1:]
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        new_state = jnp.where(act[:, None, None, None], new_state,
+                              cache["state"])
+        new_conv = jnp.where(act[:, None, None], new_conv, cache["conv"])
+    return out, {"state": new_state, "conv": new_conv}

@@ -12,7 +12,15 @@
   consumed by launch/serve.py, the examples, and benchmarks.
 - ``engine.py``     — LM engine: continuous slot-batched greedy decode
   with bucketed **batched prefill** (freed slots refill together in one
-  bucketed call) on the shared scheduler/executor.
+  bucketed call) and **chunked prefill** for every block pattern on the
+  shared scheduler/executor.
+- ``state.py``      — SequenceStateManager (PR 5): the per-slot state
+  contract behind the LM engine — free/active/prefilling slot
+  partitions, decode-side read surface, steal-veto and fault-drain
+  rules, and the slot-state kinds (KV rows, local rings, recurrent
+  state) that let chunked prefill carry state across chunk boundaries
+  for ANY architecture; ``require_chunkable`` is the precise capability
+  check that replaced the old all-global-attention gate.
 - ``dlrm_engine.py``— DLRM engine: 4-stage ingest→sparse→dense→post
   instance of the N-stage pipeline (core/pipeline.py) with the T6
   transfer path as stage 0.
@@ -39,8 +47,10 @@ from repro.serving.router import ReplicaRouter
 from repro.serving.scheduler import (NO_SLO, EDFPolicy, FIFOPolicy, Policy,
                                      PriorityAgingPolicy, Scheduler,
                                      SizeTimePolicy, Ticket)
+from repro.serving.state import SequenceStateManager, require_chunkable
 from repro.serving.telemetry import Telemetry
 
 __all__ = ["StageExecutor", "Scheduler", "Ticket", "Policy", "FIFOPolicy",
            "EDFPolicy", "SizeTimePolicy", "PriorityAgingPolicy",
-           "ReplicaRouter", "Telemetry", "NO_SLO"]
+           "ReplicaRouter", "SequenceStateManager", "require_chunkable",
+           "Telemetry", "NO_SLO"]

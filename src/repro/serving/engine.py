@@ -17,9 +17,18 @@ service binary, TPU-native:
   blocking, the tail-TTFT killer in the latency-bounded batching
   analysis of Park et al. 2018). Mid-prefill requests re-enter the
   queue as *continuation tickets* (same tid/enqueue/priority/deadline)
-  and chunk K/V lands in the cache at the chunk's offset, so chunked
-  prefill is token-identical to monolithic prefill
-- slot-based KV-cache manager over one statically-shaped cache
+  and every block kind carries its per-slot state across the chunk
+  boundary — global K/V scatters at the chunk's offset, local rings
+  write at ring offsets, SSM / RG-LRU blocks carry the entering
+  recurrent state + conv tail (PR 5) — so chunked prefill is
+  token-identical to monolithic prefill for EVERY ``block_pattern``
+  (the old all-global gate is gone; only cross-attention
+  encoder-decoder stacks stay unchunkable, see
+  ``repro.serving.state.require_chunkable``)
+- per-slot sequence state behind the ``SequenceStateManager``
+  (serving/state.py): one free / active / prefilling partition over the
+  statically-shaped cache, with the steal-veto and fault-drain slot
+  rules — the bookkeeping this engine used to carry inline
 - greedy decode loop with async dispatch, per-request deadline/SLA and
   time-to-first-token tracking through the shared Telemetry
 
@@ -35,11 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ATTN_GLOBAL, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.bucketing import pick_bucket
 from repro.models import model as model_mod
 from repro.serving.executor import StageExecutor
 from repro.serving.scheduler import Scheduler, SizeTimePolicy, Ticket
+from repro.serving.state import SequenceStateManager, require_chunkable
 from repro.serving.telemetry import Telemetry
 
 
@@ -103,12 +113,11 @@ class InferenceEngine:
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError("prefill_chunk must be >= 1")
-            bad = set(cfg.layer_kinds()) - {ATTN_GLOBAL}
-            if bad:
-                raise ValueError(
-                    f"prefill_chunk needs an all-global-attention stack; "
-                    f"{cfg.name} has {sorted(bad)} blocks whose recurrent "
-                    f"state a chunk boundary would truncate")
+            # precise capability check (PR 5): every state-carrying block
+            # kind chunks — global KV, local rings, SSM / RG-LRU state —
+            # so this raises only for kinds with no per-slot chunk
+            # contract (cross-attention encoder-decoder stacks)
+            require_chunkable(cfg)
             # chunk ladder: the existing bucket ladder truncated at the
             # chunk size — chunk executables replace the full-length
             # prefill buckets, which is where the compile-count win
@@ -134,15 +143,28 @@ class InferenceEngine:
 
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)
-        self.active: Dict[int, Ticket] = {}
-        # mid-prefill KV-slot ownership, keyed by ticket OBJECT identity:
-        # tids are per-scheduler counters, so a stolen ticket's tid can
-        # collide with a local mid-prefill ticket's — keying on id() keeps
-        # slot ownership with the object (which is pinned by this map and
-        # the pending queue, so its id cannot be recycled underneath us)
-        self.prefilling: Dict[int, int] = {}   # id(ticket) -> held KV slot
-        self.pos = np.zeros(batch_slots, np.int32)
-        self.free = list(range(batch_slots))
+        # per-slot sequence state: the free/active/prefilling partition,
+        # per-slot decode positions, and the steal/drain slot rules all
+        # live in the manager (serving/state.py)
+        self.states = SequenceStateManager(batch_slots, cfg)
+
+    # slot-state views (the manager owns them; tests and the router's
+    # engine hooks read these)
+    @property
+    def free(self) -> List[int]:
+        return self.states.free
+
+    @property
+    def active(self) -> Dict[int, Ticket]:
+        return self.states.active
+
+    @property
+    def prefilling(self) -> Dict[int, int]:
+        return self.states.prefilling
+
+    @property
+    def pos(self) -> np.ndarray:
+        return self.states.pos
 
     # ---- compiled stages -------------------------------------------------
     def _build_prefill(self, bucket: int):
@@ -163,9 +185,10 @@ class InferenceEngine:
     def _build_decode(self):
         cfg = self.cfg
 
-        def fn(params, caches, tokens, pos_vec):
+        def fn(params, caches, tokens, pos_vec, active):
             hidden, caches = model_mod.decode_step(params, cfg, tokens,
-                                                   caches, pos_vec)
+                                                   caches, pos_vec,
+                                                   active=active)
             nxt = model_mod.greedy_next(params, cfg, hidden)
             return nxt, caches
 
@@ -186,13 +209,17 @@ class InferenceEngine:
         per full prompt-length bucket.
 
         Padded group rows duplicate slot ``slots[0]`` but carry
-        ``write_pos = max_len``: their scatter indices are out of bounds
-        and drop, so a duplicate can never clobber the real row."""
+        ``write_pos = max_len`` and ``lengths = 0``: their scatter
+        indices (positional caches) or batch rows (ring / recurrent
+        caches) are out of bounds and drop, so a duplicate can never
+        clobber the real row."""
         cfg = self.cfg
 
-        def fn(params, caches, slots, tokens, start, write_pos, last_idx):
+        def fn(params, caches, slots, tokens, start, write_pos, lengths,
+               last_idx):
             x, caches = model_mod.chunk_prefill_step(
-                params, cfg, tokens, caches, slots, start, write_pos)
+                params, cfg, tokens, caches, slots, start, write_pos,
+                lengths)
             hidden = x[jnp.arange(x.shape[0]), last_idx]
             nxt = model_mod.greedy_next(params, cfg, hidden)
             return nxt, caches
@@ -242,24 +269,24 @@ class InferenceEngine:
     # ---- replica protocol (ReplicaRouter) --------------------------------
     @property
     def inflight(self) -> int:
-        return len(self.active) + len(self.prefilling)
+        return self.states.inflight
 
     @property
     def free_slots(self) -> int:
-        """Free KV slots — how many stolen tickets this replica could
+        """Free slots — how many stolen tickets this replica could
         start right now (the router's steal admission cap)."""
-        return len(self.free)
+        return self.states.free_count
 
     @property
     def has_work(self) -> bool:
-        return bool(self.scheduler.depth or self.active or self.prefilling)
+        return bool(self.scheduler.depth or self.states.inflight)
 
     def steal_eligible(self, t: Ticket) -> bool:
-        """Steal veto (router hook): continuations and mid-prefill tickets
-        own a KV slot on THIS replica — moving one would strand the
-        partially-written cache rows. Only fresh, not-yet-started tickets
-        may leave."""
-        return not t.continuation and id(t) not in self.prefilling
+        """Steal veto (router hook, delegated to the SequenceStateManager):
+        continuations and mid-prefill tickets own a slot on THIS replica —
+        moving one would strand the partially-written cache rows. Only
+        fresh, not-yet-started tickets may leave."""
+        return self.states.steal_eligible(t)
 
     def drain_tickets(self) -> List[Ticket]:
         """Fault-drain hook (``ReplicaRouter.drain_replica``): hand back
@@ -278,11 +305,7 @@ class InferenceEngine:
         once. The wasted duplicate work is the measured cost of the
         fault."""
         out = self.scheduler.steal_pending(None, include_continuations=True)
-        out.extend(t for _, t in sorted(self.active.items()))
-        self.active.clear()
-        self.prefilling.clear()
-        self.free = list(range(self.batch_slots))
-        self.pos[:] = 0
+        out.extend(self.states.evict_all())
         for t in out:
             req: Request = t.payload
             req.output = []
@@ -340,7 +363,7 @@ class InferenceEngine:
         nxt, caches = self.executor.dispatch(
             "prefill", (bucket, P), lambda: self._build_prefill(bucket),
             self.params, jnp.asarray(toks), jnp.asarray(lens))
-        slots = [self.free.pop() for _ in group]
+        slots = [self.states.acquire(t) for t in group]
         self.caches = self.executor.dispatch(
             "slot_write", g, self._build_slot_write,
             self.caches, caches, jnp.asarray(slots, jnp.int32))
@@ -350,8 +373,7 @@ class InferenceEngine:
             t.payload.output.append(int(nxt[j]))
             t.payload.prefill_pos = L
             self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
-            self.active[slot] = t
-            self.pos[slot] = L
+            self.states.activate(t, slot, L)
         self.telemetry.prefills += g
         self.telemetry.prefill_batches += 1
 
@@ -398,24 +420,25 @@ class InferenceEngine:
         toks = np.zeros((P, bucket), np.int32)
         start = np.zeros(P, np.int32)
         wpos = np.full(P, self.max_len, np.int32)   # padded: writes drop
+        lens = np.zeros(P, np.int32)                # padded: rows drop
         last = np.zeros(P, np.int32)
         slots: List[int] = []
         for j, t in enumerate(group):
             req: Request = t.payload
             off = req.prefill_pos
             clen = min(self._chunk_next_len(req), bucket)
-            slots.append(self.prefilling.pop(id(t))
-                         if id(t) in self.prefilling else self.free.pop())
+            slots.append(self.states.acquire(t))
             toks[j, :clen] = req.tokens[off:off + clen]
             start[j] = off
             wpos[j] = off
+            lens[j] = clen
             last[j] = clen - 1
         slots_padded = np.asarray(slots + [slots[0]] * (P - g), np.int32)
         nxt, self.caches = self.executor.dispatch(
             "chunk_prefill", (bucket, P), lambda: self._build_chunk(bucket),
             self.params, self.caches, jnp.asarray(slots_padded),
             jnp.asarray(toks), jnp.asarray(start), jnp.asarray(wpos),
-            jnp.asarray(last))
+            jnp.asarray(lens), jnp.asarray(last))
         nxt = np.asarray(nxt)
         now = time.perf_counter()
         for j, (t, slot) in enumerate(zip(group, slots)):
@@ -425,10 +448,9 @@ class InferenceEngine:
                 req.output.append(int(nxt[j]))
                 self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
                 self.telemetry.prefills += 1
-                self.active[slot] = t
-                self.pos[slot] = req.prefill_pos
+                self.states.activate(t, slot, req.prefill_pos)
             else:
-                self.prefilling[id(t)] = slot
+                self.states.park(t, slot)
                 self.scheduler.resubmit(t, size=self._chunk_next_len(req))
         self.telemetry.prefill_batches += 1
 
@@ -437,18 +459,19 @@ class InferenceEngine:
             return
         toks = np.zeros((self.batch_slots, 1), np.int32)
         # inactive rows (free or mid-chunked-prefill) still ride the
-        # static-shape decode dispatch; park their K/V write at
+        # static-shape decode dispatch: their K/V write parks at
         # max_len-1 — a position no request ever attends (decoding stops
-        # at max_len-1) — so the dummy write can't clobber a chunk
-        # offset an in-progress prefill has already filled
-        pos_vec = np.full(self.batch_slots, self.max_len - 1, np.int32)
+        # at max_len-1) — and the model layer freezes their per-slot
+        # state under the active mask (a dummy step must not advance a
+        # mid-prefill row's ring buffer or recurrent state)
+        pos_vec = self.states.decode_positions(self.max_len - 1)
+        active_mask = self.states.active_mask()
         for s, t in self.active.items():
             toks[s, 0] = t.payload.output[-1]
-            pos_vec[s] = self.pos[s]
         nxt, self.caches = self.executor.dispatch(
             "decode", (), self._build_decode,
             self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(pos_vec))
+            jnp.asarray(pos_vec), jnp.asarray(active_mask))
         nxt = np.asarray(nxt)
         self.telemetry.steps += 1
         for s in list(self.active):
@@ -466,8 +489,7 @@ class InferenceEngine:
                 # enqueue_t after submit stamped the request
                 req.enqueue_t = t.enqueue_t
                 req.finish_t = t.finish_t
-                del self.active[s]
-                self.free.append(s)
+                self.states.release(s)
 
     def run(self, requests: Sequence[Request]) -> List[Request]:
         for r in requests:

@@ -107,14 +107,24 @@ class FleetSim:
 
     def __init__(self, *, replicas: int = 3,
                  service_s: Union[float, Sequence[float]] = 0.01,
-                 slots: int = 1, steal: bool = True, policy: str = "fifo",
-                 dt: float = 0.005, seed: int = 0, **sched_kw):
+                 slots: Union[int, Sequence[int]] = 1, steal: bool = True,
+                 policy: str = "fifo", dt: float = 0.005, seed: int = 0,
+                 route: str = "count", **sched_kw):
         if np.isscalar(service_s):
             service_s = [float(service_s)] * replicas
+        if np.isscalar(slots):
+            slots = [int(slots)] * replicas
         self.replicas = [SimReplica(service_s=float(service_s[i]),
-                                    slots=slots, policy=policy, **sched_kw)
+                                    slots=int(slots[i]), policy=policy,
+                                    **sched_kw)
                          for i in range(replicas)]
-        self.router = ReplicaRouter(self.replicas, steal=steal)
+        self.router = ReplicaRouter(self.replicas, steal=steal, route=route)
+        if route == "feedback":
+            # seed the EWMAs with the replicas' configured service times,
+            # as the live drive loops would measure them — the sim steps
+            # replicas directly, so record_dispatch never fires
+            for i, s in enumerate(service_s):
+                self.router.record_dispatch(i, float(s))
         self.dt = dt
         self.now = 0.0
         self.rng = np.random.default_rng(seed)

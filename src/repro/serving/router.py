@@ -49,8 +49,11 @@ paper's six-cards-one-host shape an idle card wastes the whole fleet's
 headroom. ``maybe_steal`` (called each drive round) lets every idle
 replica (no pending fresh work, free slots) pull pending FRESH tickets
 from the most-backlogged live sibling: steal-half of the victim's
-un-startable backlog, capped by the thief's free slots, chosen as the
-tickets the victim's policy would serve LAST. Re-stamping is the
+un-startable backlog — or, under ``route="feedback"``, a
+time-proportional share sized by the thief/victim EWMA step-time ratio
+(a 3x-faster thief takes ~3x the tickets the victim keeps; PR 5) —
+capped by the thief's free slots, chosen as the tickets the victim's
+policy would serve LAST. Re-stamping is the
 scheduler contract (``Scheduler.steal_pending`` / ``absorb``):
 tid / priority / deadline preserved, enqueue rebased only across
 timelines, so aging credit, EDF rank, and TTFT-from-original-submit all
@@ -194,14 +197,29 @@ class ReplicaRouter:
         return max(self.replicas[i].scheduler.fresh_depth
                    - self.free_slots(i), 0)
 
+    def _steal_share(self, thief: int, victim: int, backlog: int) -> int:
+        """How much of the victim's un-startable backlog the thief takes.
+        Count mode: steal-half. Feedback mode (steal-aware feedback
+        routing, PR 5): the share is time-proportional — with speed
+        ratio r = victim_EWMA / thief_EWMA the thief takes r/(1+r) of
+        the backlog, so a 3x-faster thief takes ~3x the tickets the
+        victim keeps, and r = 1 degrades to exactly steal-half. Either
+        replica unmeasured -> count-half fallback."""
+        if self.route_mode == "feedback" \
+                and self.ewma_s[thief] > 0.0 and self.ewma_s[victim] > 0.0:
+            r = self.ewma_s[victim] / self.ewma_s[thief]
+            return max(int(round(backlog * r / (1.0 + r))), 1)
+        return max(backlog // 2, 1)
+
     def maybe_steal(self, now: Optional[float] = None) -> int:
         """One stealing round (no-op unless ``steal=True``): every idle
         live replica — no pending fresh work, free slots — pulls pending
-        fresh tickets from the most-backlogged live sibling. Steal-half
-        of the victim's un-startable backlog, capped by the thief's free
-        slots; the victim's ``steal_eligible`` hook vetoes mid-prefill
-        work. Deterministic: thieves act in index order, victims break
-        ties by lowest index. Returns the number of tickets moved."""
+        fresh tickets from the most-backlogged live sibling. The stolen
+        share is count-half, or time-proportional under feedback routing
+        (``_steal_share``), capped by the thief's free slots; the
+        victim's ``steal_eligible`` hook vetoes mid-prefill work.
+        Deterministic: thieves act in index order, victims break ties by
+        lowest index. Returns the number of tickets moved."""
         if not self.steal_enabled:
             return 0
         moved = 0
@@ -222,7 +240,7 @@ class ReplicaRouter:
             if best < 0:
                 continue
             victim = self.replicas[best]
-            k = min(cap, max(best_backlog // 2, 1))
+            k = min(cap, self._steal_share(i, best, best_backlog))
             stolen = victim.scheduler.steal_pending(
                 k, now=now, eligible=getattr(victim, "steal_eligible", None))
             if not stolen:

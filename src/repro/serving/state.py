@@ -1,0 +1,254 @@
+"""Per-slot sequence-state management for the LM serving engine — the
+slot contract that makes chunked prefill architecture-agnostic (PR 5).
+
+The engine serves every request out of one statically-shaped full-batch
+cache pytree; a *slot* is one batch row of that pytree. Until PR 5 the
+engine kept the slot bookkeeping inline (``free`` list / ``active`` dict /
+``prefilling`` dict duplicated across admission, decode, steal, and drain
+paths) and hard-gated chunked prefill to all-global-attention stacks,
+because only the positional KV cache had a story for carrying state
+across a chunk boundary. This module factors both out:
+
+**The slot contract** (one lifecycle, whatever the layer kinds):
+
+- ``acquire(ticket)``   — a slot for the ticket's next prefill chunk:
+  mid-prefill tickets keep the slot they already own, fresh tickets pop
+  a free one (allocate),
+- ``park(ticket, slot)``— the ticket re-enters the queue as a chunked
+  continuation but KEEPS its slot: the partially-written sequence state
+  lives in that cache row (write-chunk),
+- ``activate(ticket, slot, pos)`` — prefill finished; the slot joins the
+  decode batch at position ``pos``,
+- ``active_mask()`` / ``decode_positions(park_at)`` — the decode-side
+  read surface: which rows are live and at what positions; inactive rows
+  park at a position no request ever attends, and the model layer
+  additionally freezes their per-row state under the mask
+  (read-for-decode),
+- ``release(slot)``     — the request completed; the slot returns to the
+  free pool,
+- ``evict_all()``       — fault drain: hand back every slot-holding
+  ticket and reset all slot state (the device state died with the card)
+  (evict),
+- ``steal_eligible(t)`` — the steal veto: continuations and mid-prefill
+  tickets own a slot on THIS replica — moving one would strand the
+  partially-written cache row — so only fresh, not-yet-started tickets
+  may leave (steal-veto).
+
+**Invariant**: at every instant the slots partition into exactly
+free | active | prefilling (pairwise disjoint, union = all slots) — the
+property suite in tests/test_scheduler_properties.py drives random
+lifecycle interleavings against this.
+
+**Slot-state kinds** — what one cache row holds, per block kind, and what
+must carry across a chunk boundary for chunked prefill to stay
+token-identical to monolithic prefill (the device-side math lives in the
+model layer: models/attention.py ``chunk`` mode, models/ssm.py
+``ssm_chunk_step``, models/rglru.py ``rglru_chunk_step``):
+
+- ``KVCacheSlots`` (global attention): positional K/V rows — chunk K/V
+  scatters into the row at per-token offsets and queries attend the
+  whole written prefix,
+- ``RingBufferSlots`` (local / sliding-window attention): a
+  ``window``-slot ring — chunk K/V lands at ring offsets (keeping only
+  each ring slot's last write), and chunk queries attend the pre-chunk
+  ring plus the in-chunk keys,
+- ``RecurrentSlots`` (SSM / RG-LRU): the recurrent state plus the
+  causal-conv tail — the chunk recurrence seeds from the entering state
+  (zeros on a request's first chunk) and the exit state + conv tail
+  scatter back for the next chunk or decode.
+
+``require_chunkable(cfg)`` is the precise capability check that replaced
+the all-global constructor gate: it raises only for layer kinds with no
+per-slot chunk contract (cross-attention encoder-decoder stacks), naming
+the offending kind.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, CHUNKABLE_KINDS,
+                                RECURRENT, SSM, ModelConfig)
+
+
+class SlotStateKind:
+    """How one block kind stores per-slot sequence state, and what the
+    chunked-prefill path carries across a chunk boundary."""
+    kinds: Tuple[str, ...] = ()
+    chunk_carry: str = ""
+
+
+class KVCacheSlots(SlotStateKind):
+    kinds = (ATTN_GLOBAL,)
+    chunk_carry = ("positional K/V rows: chunk K/V scatters at per-token "
+                   "offsets, queries attend the written prefix")
+
+
+class RingBufferSlots(SlotStateKind):
+    kinds = (ATTN_LOCAL,)
+    chunk_carry = ("window ring rows: chunk K/V lands at ring offsets "
+                   "(last-write-per-slot), queries attend the pre-chunk "
+                   "ring plus in-chunk keys")
+
+
+class RecurrentSlots(SlotStateKind):
+    kinds = (SSM, RECURRENT)
+    chunk_carry = ("recurrent state + causal-conv tail: the chunk "
+                   "recurrence seeds from the entering state and the exit "
+                   "state scatters back")
+
+
+SLOT_STATE_KINDS: Dict[str, type] = {
+    ATTN_GLOBAL: KVCacheSlots,
+    ATTN_LOCAL: RingBufferSlots,
+    SSM: RecurrentSlots,
+    RECURRENT: RecurrentSlots,
+}
+# one source of truth with the model layer's mode="chunk" gate
+assert set(SLOT_STATE_KINDS) == set(CHUNKABLE_KINDS)
+
+
+def slot_kinds_for(cfg: Optional[ModelConfig]) -> Tuple[SlotStateKind, ...]:
+    """Unique slot-state handlers for a config's layer kinds (unknown
+    kinds are skipped here — ``require_chunkable`` is where they fail)."""
+    if cfg is None:
+        return ()
+    seen: Dict[type, SlotStateKind] = {}
+    for k in cfg.layer_kinds():
+        cls = SLOT_STATE_KINDS.get(k)
+        if cls is not None and cls not in seen:
+            seen[cls] = cls()
+    return tuple(seen.values())
+
+
+def require_chunkable(cfg: ModelConfig) -> None:
+    """Raise unless every layer kind in ``cfg`` has a per-slot chunk
+    contract. Global KV, local ring, and SSM / RG-LRU recurrent state all
+    chunk exactly; what cannot is cross-attention encoder-decoder state
+    (the decoder's cross K/V is keyed to a whole encoder pass, not a
+    per-slot prefix position). The error names the offending kind."""
+    if cfg.encdec is not None:
+        raise ValueError(
+            f"prefill_chunk is unsupported for {cfg.name}: layer kind "
+            f"'decoder' (cross-attention encoder-decoder) has no per-slot "
+            f"chunk contract — cross K/V is per-encoder-pass, not "
+            f"per-prefix-position")
+    bad = sorted(set(cfg.layer_kinds()) - set(SLOT_STATE_KINDS))
+    if bad:
+        raise ValueError(
+            f"prefill_chunk is unsupported for {cfg.name}: layer kind "
+            f"{bad[0]!r} has no per-slot chunk contract (supported kinds: "
+            f"{sorted(SLOT_STATE_KINDS)})")
+
+
+class SequenceStateManager:
+    """The per-slot state manager behind ``InferenceEngine``: owns the
+    free / active / prefilling partitions, per-slot decode positions, and
+    the steal/drain eligibility rules (see the module docstring for the
+    contract). Pure bookkeeping — no jax, so the property suite can drive
+    thousands of lifecycle interleavings against the partition invariant
+    without touching a device."""
+
+    def __init__(self, batch_slots: int, cfg: Optional[ModelConfig] = None):
+        if batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
+        self.batch_slots = batch_slots
+        self.slot_kinds = slot_kinds_for(cfg)
+        self.free: List[int] = list(range(batch_slots))
+        self.active: Dict[int, object] = {}       # slot -> Ticket
+        # mid-prefill slot ownership, keyed by ticket OBJECT identity:
+        # tids are per-scheduler counters, so a stolen ticket's tid can
+        # collide with a local mid-prefill ticket's — keying on id() keeps
+        # slot ownership with the object (which is pinned by this map and
+        # the pending queue, so its id cannot be recycled underneath us)
+        self.prefilling: Dict[int, int] = {}      # id(ticket) -> held slot
+        self.pos = np.zeros(batch_slots, np.int32)
+
+    # ---- allocation ------------------------------------------------------
+    def acquire(self, ticket) -> int:
+        """Slot for this ticket's next prefill chunk: a mid-prefill ticket
+        keeps the slot it already owns; a fresh ticket pops a free one
+        (admission guarantees one exists — ``free_count`` caps the fresh
+        share of every chunk group)."""
+        tkey = id(ticket)
+        if tkey in self.prefilling:
+            return self.prefilling.pop(tkey)
+        return self.free.pop()
+
+    def park(self, ticket, slot: int) -> None:
+        """Keep ``slot`` across a chunked-prefill continuation: the
+        partially-written sequence state lives in that cache row."""
+        self.prefilling[id(ticket)] = slot
+
+    def activate(self, ticket, slot: int, pos: int) -> None:
+        """Prefill done: the slot joins the decode batch at ``pos``."""
+        self.active[slot] = ticket
+        self.pos[slot] = pos
+
+    def release(self, slot: int) -> None:
+        """Request complete: the slot returns to the free pool."""
+        del self.active[slot]
+        self.free.append(slot)
+
+    def evict_all(self) -> List[object]:
+        """Fault drain: hand back every slot-holding ticket (decode batch
+        in slot order — deterministic re-homing) and reset all slot
+        state. The caller resets the tickets/payloads to fresh: the
+        device-side sequence state died with the card."""
+        out = [t for _, t in sorted(self.active.items())]
+        self.active.clear()
+        self.prefilling.clear()
+        self.free = list(range(self.batch_slots))
+        self.pos[:] = 0
+        return out
+
+    # ---- decode-side read surface ---------------------------------------
+    def active_mask(self) -> np.ndarray:
+        """(batch_slots,) bool — which rows are live in the decode batch.
+        The model layer freezes inactive rows' per-row state under this
+        mask (a dummy decode step must not corrupt a mid-prefill row's
+        ring buffer or recurrent state)."""
+        m = np.zeros(self.batch_slots, bool)
+        for s in self.active:
+            m[s] = True
+        return m
+
+    def decode_positions(self, park_at: int) -> np.ndarray:
+        """Per-slot decode positions; inactive rows park at ``park_at`` —
+        a position no request ever attends — so their dummy K/V write
+        cannot clobber a chunk offset an in-progress prefill filled."""
+        pos_vec = np.full(self.batch_slots, park_at, np.int32)
+        for s in self.active:
+            pos_vec[s] = self.pos[s]
+        return pos_vec
+
+    # ---- capacity / router hooks ----------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    @property
+    def inflight(self) -> int:
+        return len(self.active) + len(self.prefilling)
+
+    def steal_eligible(self, ticket) -> bool:
+        """Steal veto: continuations and mid-prefill tickets own a slot
+        on THIS replica — moving one would strand the partially-written
+        cache row. Only fresh, not-yet-started tickets may leave."""
+        return not getattr(ticket, "continuation", False) \
+            and id(ticket) not in self.prefilling
+
+    # ---- invariant surface (tests) ---------------------------------------
+    def check_partition(self) -> None:
+        """Assert the slot-partition invariant: free | active | prefilling
+        are pairwise disjoint and cover exactly the slot range."""
+        free = set(self.free)
+        active = set(self.active)
+        prefilling = set(self.prefilling.values())
+        assert len(free) == len(self.free), "free list duplicated a slot"
+        assert not (free & active), (free, active)
+        assert not (free & prefilling), (free, prefilling)
+        assert not (active & prefilling), (active, prefilling)
+        assert free | active | prefilling == set(range(self.batch_slots)), \
+            (free, active, prefilling)

@@ -495,11 +495,18 @@ def _fake_payload():
                        "dual": fleet, "p99_improved": True,
                        "misses_improved": True},
             "overload": {"service_ms_est": 1.0, "high": cls, "low": cls},
-            "chunked_prefill": {"offered_load_ms": 1.0, "requests": 1,
+            "chunked_prefill": {"arch": "a", "offered_load_ms": 1.0,
+                                "requests": 1,
                                 "long_tokens": 1, "prefill_chunk": 1,
                                 "monolithic": _fake_summary(),
                                 "chunked": _fake_summary(),
-                                "ttft_p99_improved": True},
+                                "ttft_p99_improved": True,
+                                "stateful": {
+                                    "arch": "b", "requests": 1,
+                                    "prefill_chunk": 1,
+                                    "monolithic": _fake_summary(),
+                                    "chunked": _fake_summary(),
+                                    "token_identical": True}},
             "work_stealing": {"requests": 1, "replicas": 2, "skew": 0.5,
                               "steal": _fake_summary(),
                               "no_steal": _fake_summary(),
@@ -521,6 +528,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["router"]["single"]["latency_ms_p99"]
     del p["overload"]["high"]["sla_attainment"]
     del p["chunked_prefill"]["chunked"]["ttft_ms_p99"]
+    del p["chunked_prefill"]["arch"]
+    del p["chunked_prefill"]["stateful"]["token_identical"]
+    del p["chunked_prefill"]["stateful"]["chunked"]["served"]
     del p["work_stealing"]["steal"]["steals"]
     del p["work_stealing"]["spread_improved"]
     with pytest.raises(ValueError) as ei:
@@ -529,6 +539,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "router.single.latency_ms_p99" in msg
     assert "overload.high.sla_attainment" in msg
     assert "chunked_prefill.chunked.ttft_ms_p99" in msg
+    assert "chunked_prefill.arch" in msg
+    assert "chunked_prefill.stateful.token_identical" in msg
+    assert "chunked_prefill.stateful.chunked.served" in msg
     assert "work_stealing.steal.steals" in msg
     assert "work_stealing.spread_improved" in msg
 

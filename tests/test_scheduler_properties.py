@@ -533,6 +533,84 @@ def test_router_always_picks_a_min_load_replica(seed, n_replicas, n):
             f"routed to load {loads[j]}, min was {min(loads)}"
 
 
+# ---- per-slot sequence state (PR 5) ---------------------------------------
+
+from repro.serving.state import (SequenceStateManager,  # noqa: E402
+                                 require_chunkable)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), slots=st.integers(1, 6),
+       n_ops=st.integers(1, 120))
+def test_sequence_state_partition_invariant(seed, slots, n_ops):
+    """Slot conservation through ANY lifecycle interleaving: at every
+    instant the slots partition into exactly free | active | prefilling
+    (pairwise disjoint, union = all slots), a parked ticket gets ITS OWN
+    slot back on re-acquire, and evict_all returns every slot-holding
+    ticket exactly once and resets to all-free."""
+    from repro.serving.scheduler import Ticket
+    rng = np.random.default_rng(seed)
+    mgr = SequenceStateManager(slots)
+    held = {}                      # id(ticket) -> (ticket, slot, state)
+    next_tid = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        if op == 0 and mgr.free_count:              # fresh acquire
+            t = Ticket(next_tid, None)
+            next_tid += 1
+            s = mgr.acquire(t)
+            if rng.random() < 0.5:
+                mgr.activate(t, s, int(rng.integers(1, 64)))
+                held[id(t)] = (t, s, "active")
+            else:
+                mgr.park(t, s)
+                held[id(t)] = (t, s, "prefilling")
+        elif op == 1:                               # continuation chunk
+            parked = [(t, s) for t, s, st_ in held.values()
+                      if st_ == "prefilling"]
+            if parked:
+                t, s = parked[int(rng.integers(len(parked)))]
+                got = mgr.acquire(t)
+                assert got == s, "continuation lost its own slot"
+                mgr.activate(t, got, int(rng.integers(1, 64)))
+                held[id(t)] = (t, got, "active")
+        elif op == 2:                               # completion
+            act = [(t, s) for t, s, st_ in held.values() if st_ == "active"]
+            if act:
+                t, s = act[int(rng.integers(len(act)))]
+                mgr.release(s)
+                del held[id(t)]
+        elif op == 3:                               # steal-veto spot check
+            t = Ticket(next_tid, None)
+            next_tid += 1
+            assert mgr.steal_eligible(t)            # fresh: stealable
+            for ht, hs, st_ in held.values():
+                if st_ == "prefilling":
+                    assert not mgr.steal_eligible(ht)
+        else:                                       # fault drain
+            evicted = mgr.evict_all()
+            active_held = [t for t, _, st_ in held.values()
+                           if st_ == "active"]
+            assert sorted(id(t) for t in evicted) \
+                == sorted(id(t) for t in active_held)
+            assert mgr.free_count == slots and mgr.inflight == 0
+            held.clear()
+        mgr.check_partition()
+        assert mgr.inflight == len(held)
+
+
+def test_require_chunkable_names_offending_kind():
+    """The capability check replacing the all-global gate: every
+    state-carrying kind passes; encoder-decoder raises naming the
+    cross-attention decoder kind."""
+    from repro.configs import get_config, reduce_for_smoke
+    for arch in ("deepseek-7b", "gemma2-27b", "mamba2-130m",
+                 "recurrentgemma-9b"):
+        require_chunkable(reduce_for_smoke(get_config(arch)))  # no raise
+    with pytest.raises(ValueError, match="decoder"):
+        require_chunkable(reduce_for_smoke(get_config("whisper-medium")))
+
+
 # ---- cross-replica work stealing + fault drain (PR 4) ---------------------
 
 from fleet_sim import FleetSim, random_schedule, run_to_completion  # noqa: E402
@@ -643,6 +721,67 @@ def test_drain_rehomes_every_pending_ticket_exactly_once(seed, n_replicas,
     assert sim.fail(fail_idx) == 0              # idempotent
     note(f"moved={moved} after {ticks} ticks")
     run_to_completion(sim)
+    sim.assert_conserved()
+
+
+# ---- steal-aware feedback routing (PR 5) ----------------------------------
+
+def test_feedback_steal_share_is_time_proportional():
+    """ROADMAP open item closed: with route="feedback" + steal=True the
+    stolen share follows the thief/victim EWMA step-time ratio. A
+    3x-faster thief (EWMA 0.01 vs 0.03) takes r/(1+r) = 3/4 of the
+    victim's un-startable backlog — ~3x the tickets the victim keeps —
+    and fleet-wide conservation holds across the move."""
+    sim = FleetSim(replicas=2, service_s=[0.03, 0.01], slots=[1, 16],
+                   steal=True, route="feedback", seed=0)
+    for _ in range(13):
+        sim.submit(pin=0)                   # hot-keyed: all on the slow card
+    backlog = sim.replicas[0].scheduler.fresh_depth - 1   # 1 startable
+    assert backlog == 12
+    moved = sim.router.maybe_steal(now=sim.now)
+    assert moved == 9                       # round(12 * 3/4)
+    kept = sim.replicas[0].scheduler.fresh_depth - 1
+    assert moved == 3 * kept                # ~3x the tickets the victim keeps
+    assert sim.replicas[0].scheduler.depth \
+        + sim.replicas[1].scheduler.depth == 13           # conservation
+    sim.assert_conserved()
+    run_to_completion(sim)
+    sim.assert_conserved()
+    assert len(sim.completed) == 13
+
+
+def test_count_mode_steal_share_stays_half():
+    """Without feedback routing the share stays count-half (the PR 4
+    contract is unchanged)."""
+    sim = FleetSim(replicas=2, service_s=[0.03, 0.01], slots=[1, 16],
+                   steal=True, route="count", seed=0)
+    for _ in range(13):
+        sim.submit(pin=0)
+    assert sim.router.maybe_steal(now=sim.now) == 6       # 12 // 2
+    run_to_completion(sim)
+    sim.assert_conserved()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), backlog=st.integers(2, 60),
+       ratio=st.floats(0.2, 8.0))
+def test_feedback_steal_share_bounds_and_conservation(seed, backlog, ratio):
+    """Property: under feedback routing the stolen count equals
+    min(cap, max(round(backlog * r / (1+r)), 1)) for speed ratio r, never
+    exceeds the thief's free slots, and no ticket is lost or duplicated
+    by the move."""
+    victim_s = 0.01 * ratio
+    sim = FleetSim(replicas=2, service_s=[victim_s, 0.01],
+                   slots=[1, backlog + 4], steal=True, route="feedback",
+                   seed=seed)
+    for _ in range(backlog + 1):            # 1 startable + ``backlog`` stuck
+        sim.submit(pin=0)
+    moved = sim.router.maybe_steal(now=sim.now)
+    want = max(int(round(backlog * ratio / (1.0 + ratio))), 1)
+    note(f"backlog={backlog} ratio={ratio:.2f} moved={moved} want={want}")
+    assert moved == min(backlog + 4, want)
+    assert sim.replicas[0].scheduler.depth \
+        + sim.replicas[1].scheduler.depth == backlog + 1
     sim.assert_conserved()
 
 

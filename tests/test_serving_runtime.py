@@ -239,16 +239,98 @@ def test_chunked_slot_states_partition(lm_setup):
     assert sorted(eng.free) == list(range(eng.batch_slots))
 
 
-def test_chunked_requires_all_global_attention(lm_setup):
+def test_chunked_capability_check_is_precise(lm_setup):
+    """PR 5 lifted the all-global gate: mixed global/local (and SSM /
+    RG-LRU) stacks chunk; only kinds with no per-slot chunk contract
+    (cross-attention encoder-decoder) still raise, naming the kind."""
     cfg, params = lm_setup
     import dataclasses
     from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL
     mixed = dataclasses.replace(cfg, num_layers=2,
                                 block_pattern=(ATTN_GLOBAL, ATTN_LOCAL),
                                 window_size=16)
-    with pytest.raises(ValueError, match="all-global-attention"):
-        InferenceEngine(mixed, params, prefill_chunk=8, batch_slots=2,
-                        max_len=32, prefill_buckets=(8,))
+    eng = InferenceEngine(mixed, params, prefill_chunk=8, batch_slots=2,
+                          max_len=32, prefill_buckets=(8,))
+    assert eng.prefill_chunk == 8
+    encdec = reduce_for_smoke(get_config("whisper-medium"))
+    with pytest.raises(ValueError, match="decoder"):
+        InferenceEngine(encdec, M.init_params(encdec, jax.random.PRNGKey(0)),
+                        prefill_chunk=8, batch_slots=2, max_len=32,
+                        prefill_buckets=(8,))
+
+
+# ---- stateful chunked prefill (PR 5): every block pattern chunks ----------
+
+def _arch_cfg(name):
+    """Smoke configs covering every slot-state kind: pure local ring,
+    pure SSM, pure RG-LRU, and the two hybrid patterns."""
+    import dataclasses
+    from repro.configs.base import ATTN_LOCAL, RECURRENT
+    if name == "local":
+        return dataclasses.replace(reduce_for_smoke(get_config("deepseek-7b")),
+                                   block_pattern=(ATTN_LOCAL,), window_size=8)
+    if name == "ssm":
+        return reduce_for_smoke(get_config("mamba2-130m"))
+    if name == "rglru":
+        return dataclasses.replace(
+            reduce_for_smoke(get_config("recurrentgemma-9b")),
+            block_pattern=(RECURRENT,))
+    if name == "hybrid-local-global":
+        return reduce_for_smoke(get_config("gemma2-27b"))
+    if name == "hybrid-rec-rec-local":
+        return reduce_for_smoke(get_config("recurrentgemma-9b"))
+    raise ValueError(name)
+
+
+STATEFUL_ARCHS = ("local", "ssm", "rglru", "hybrid-local-global",
+                  "hybrid-rec-rec-local")
+
+
+@pytest.mark.parametrize("arch", STATEFUL_ARCHS)
+def test_stateful_chunked_prefill_token_identical(arch):
+    """Acceptance (PR 5): chunked prefill is token-identical to
+    monolithic prefill for every block pattern — local rings write at
+    chunk offsets, SSM / RG-LRU carry the entering state + conv tail
+    across chunk boundaries — across trace seeds and chunk sizes."""
+    cfg = _arch_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    lens = (40, 5, 9, 30, 3, 12)
+    # one engine per (mode, chunk), reused across trace seeds — the
+    # executor cache keeps the compiled stages warm between seeds
+    mono = InferenceEngine(cfg, params, **kw)
+    chunked = {c: InferenceEngine(cfg, params, prefill_chunk=c, **kw)
+               for c in (8, 16)}
+    for seed in (5, 11):
+        ref = _mixed_trace(cfg, seed=seed, lens=lens)
+        mono.run(ref)
+        for chunk, eng in chunked.items():
+            before = eng.telemetry.continuations
+            got = _mixed_trace(cfg, seed=seed, lens=lens)
+            eng.run(got)
+            for a, b in zip(got, ref):
+                np.testing.assert_array_equal(a.tokens, b.tokens)
+                assert a.output == b.output, (arch, seed, chunk, a.rid)
+            assert eng.telemetry.continuations > before   # really chunked
+            assert all(r.done for r in got)
+
+
+def test_chunked_slot_partition_holds_for_stateful_arch():
+    """The SequenceStateManager partition invariant under a live chunked
+    run on a recurrent stack: free | active | prefilling at every tick."""
+    cfg = _arch_cfg("hybrid-rec-rec-local")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, batch_slots=3, max_len=64,
+                          prefill_buckets=(8, 16, 32, 48), prefill_chunk=8)
+    for r in _mixed_trace(cfg):
+        eng.submit(r)
+    saw_prefilling = False
+    while eng.has_work:
+        eng.step_once()
+        eng.states.check_partition()
+        saw_prefilling |= bool(eng.prefilling)
+    assert saw_prefilling
+    assert sorted(eng.free) == list(range(eng.batch_slots))
 
 
 def test_ttft_recorded_for_both_prefill_paths(lm_setup):
