@@ -1,7 +1,8 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test properties smoke smoke-router smoke-chunked smoke-steal bench ci
+.PHONY: test properties smoke smoke-router smoke-chunked smoke-steal \
+	smoke-quant bench ci
 
 test:
 	python -m pytest -x -q
@@ -45,7 +46,21 @@ smoke-steal:
 	    --requests 8 --new-tokens 4 --slots 2 --replicas 2 \
 	    --steal --verify-steal
 
+# quantized-serving smoke (PR 6): single w8a8 engine replays its trace
+# on fp32 and asserts the greedy-token-agreement guardrail; then a mixed
+# fp32+w8a8 fleet (feedback routing + stealing) asserts every class-0
+# request pinned to the fp32 replica with zero lost and zero downgrades
+smoke-quant:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 3 --max-len 64 \
+	    --prefill-chunk 16 --precision w8a8 --verify-quant
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 16 --new-tokens 4 --slots 3 --max-len 64 \
+	    --replicas 2 --replica-precisions fp32,w8a8 --route feedback \
+	    --steal --policy priority --verify-quant
+
 bench:
 	python -m benchmarks.run --only serving
 
-ci: test properties smoke smoke-router smoke-chunked smoke-steal bench
+ci: test properties smoke smoke-router smoke-chunked smoke-steal \
+	smoke-quant bench

@@ -7,10 +7,28 @@ oracle; the paper itself validates numerics on CPU references, §V-C).
   layers against an NE budget, reporting the skip-list it lands on.
 - Backbone: cosine similarity of transformer hidden states under int8
   weight round-trip (paper requirement: >= 98%).
+- w8a8 build (PR 6): the serving-side ``build_quantized_params`` workflow
+  on the LM smoke stack — sites quantized vs fp32 fallbacks, and the
+  calibration top-1 disagreement it lands on under the budget.
+
+Beyond the Row lines, ``run()`` emits ``results/BENCH_quant.json`` — a
+schema-validated payload (``validate_payload``) mirroring the
+BENCH_serving.json contract so CI can diff quantization accuracy run
+over run:
+
+- ``dlrm_embed``: per-bits NE delta vs the 5e-4 paper budget,
+- ``workflow``: the §V-B fallback loop outcome on the DLRM dense stack,
+- ``mixed48``: mixed int4/int8 table assignment + byte savings,
+- ``backbone``: int8 round-trip cosine on the transformer,
+- ``w8a8_build``: the serving build-step outcome (site counts +
+  calibration disagreement vs budget).
 """
 from __future__ import annotations
 
-from typing import List
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +42,67 @@ from repro.core.quantization import (quantization_workflow, quantize_rows,
 from repro.data.synthetic import dlrm_batches, lm_token_batches
 from repro.models import dlrm as D
 from repro.models import model as M
+
+JSON_PATH = os.path.join("results", "BENCH_quant.json")
+
+NE_BUDGET = 5e-4                 # paper §V embedding/dense NE budget
+COSINE_REQUIREMENT = 0.98        # paper backbone round-trip requirement
+W8A8_ARCH = "deepseek-7b"
+W8A8_BUDGET = 0.05               # calib top-1 disagreement budget
+
+
+def validate_payload(payload: Dict) -> None:
+    """Raise ValueError unless ``payload`` matches the documented schema."""
+    missing = []
+    for section in ("dlrm_embed", "workflow", "mixed48", "backbone",
+                    "w8a8_build"):
+        if section not in payload:
+            missing.append(section)
+    de = payload.get("dlrm_embed", {})
+    if "budget" not in de:
+        missing.append("dlrm_embed.budget")
+    for bits in ("int8", "int4"):
+        for k in ("ne_delta", "within_budget"):
+            if k not in de.get(bits, {}):
+                missing.append(f"dlrm_embed.{bits}.{k}")
+    wf = payload.get("workflow", {})
+    for k in ("passed", "ne_delta", "budget", "iterations",
+              "fp16_fallbacks", "fallback_layers"):
+        if k not in wf:
+            missing.append(f"workflow.{k}")
+    mx = payload.get("mixed48", {})
+    for k in ("ne_delta", "within_budget", "budget", "int4_tables",
+              "num_tables", "upgrades", "bytes_vs_int8"):
+        if k not in mx:
+            missing.append(f"mixed48.{k}")
+    bb = payload.get("backbone", {})
+    for k in ("arch", "cosine", "requirement", "within"):
+        if k not in bb:
+            missing.append(f"backbone.{k}")
+    wb = payload.get("w8a8_build", {})
+    for k in ("arch", "budget", "quantized_sites", "fallback_sites",
+              "fallback_names", "calib_disagreement", "within_budget"):
+        if k not in wb:
+            missing.append(f"w8a8_build.{k}")
+    if missing:
+        raise ValueError("BENCH_quant.json schema violation; missing: "
+                         + ", ".join(missing))
+
+
+def emit(payload: Dict, path: str = JSON_PATH) -> None:
+    """Validate + write the JSON; on an unwritable results dir, say so and
+    exit non-zero (run.py's per-bench try/except deliberately does not
+    swallow SystemExit)."""
+    validate_payload(payload)
+    try:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+    except OSError as e:
+        print(f"ERROR: cannot write {path}: {e}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 def _train_briefly(cfg, asn, params, steps: int = 150, lr: float = 1e-2):
@@ -48,7 +127,7 @@ def _train_briefly(cfg, asn, params, steps: int = 150, lr: float = 1e-2):
     return params
 
 
-def _dlrm_ne_rows() -> List[Row]:
+def _dlrm_ne_rows() -> Tuple:
     cfg = dlrm_paper.reduce_for_smoke(dlrm_paper.PAPER_BASE)
     asn = D.make_assignment(cfg, 4)
     params = D.init_dlrm(cfg, asn, jax.random.PRNGKey(7))
@@ -58,6 +137,7 @@ def _dlrm_ne_rows() -> List[Row]:
     ref = D.dlrm_forward(params, cfg, asn, b["dense"], b["indices"],
                          b["lengths"])
     rows = []
+    section: Dict = {"budget": NE_BUDGET}
     for bits in (8, 4):
         q = dict(params)
         q["slab_q"] = quantize_rows(params["slab"], bits)
@@ -65,14 +145,16 @@ def _dlrm_ne_rows() -> List[Row]:
         logits = D.dlrm_forward(q, cfg, asn, b["dense"], b["indices"],
                                 b["lengths"])
         d = ne_delta(logits, ref, b["labels"])
+        section[f"int{bits}"] = {"ne_delta": float(d),
+                                 "within_budget": bool(abs(d) < NE_BUDGET)}
         rows.append(Row(
             f"quant/dlrm-embed-int{bits}", 0.0,
-            f"ne_delta={d:+.2e};paper_budget=5e-4;"
-            f"within={abs(d) < 5e-4};measured=true"))
-    return rows, cfg, asn, params, b, ref
+            f"ne_delta={d:+.2e};paper_budget={NE_BUDGET:.0e};"
+            f"within={abs(d) < NE_BUDGET};measured=true"))
+    return rows, section, cfg, asn, params, b, ref
 
 
-def _workflow_rows(cfg, asn, params, b, ref) -> List[Row]:
+def _workflow_rows(cfg, asn, params, b, ref) -> Tuple[List[Row], Dict]:
     """Paper §V-B loop on the dense layers, NE-delta eval."""
     layers = {}
     for i, l in enumerate(params["bottom"]):
@@ -94,20 +176,24 @@ def _workflow_rows(cfg, asn, params, b, ref) -> List[Row]:
                                 b["lengths"])
         return abs(ne_delta(logits, ref, b["labels"]))
 
-    res = quantization_workflow(layers, eval_metric, budget=5e-4)
+    res = quantization_workflow(layers, eval_metric, budget=NE_BUDGET)
     fp16 = [d.name for d in res.decisions if d.scheme == "fp16"]
-    return [Row(
+    section = {"passed": bool(res.passed),
+               "ne_delta": float(res.metric_delta), "budget": NE_BUDGET,
+               "iterations": int(res.iterations),
+               "fp16_fallbacks": len(fp16), "fallback_layers": fp16}
+    rows = [Row(
         "quant/workflow-dlrm-dense", 0.0,
         f"passed={res.passed};ne_delta={res.metric_delta:.2e};"
         f"iterations={res.iterations};fp16_fallbacks={len(fp16)};"
         f"fallback_layers={'|'.join(fp16) or 'none'};measured=true")]
+    return rows, section
 
 
-def _mixed48_rows(cfg, asn, params, b, ref) -> List[Row]:
+def _mixed48_rows(cfg, asn, params, b, ref) -> Tuple[List[Row], Dict]:
     """Paper [18]: mixed int8/int4 embedding tables — start all-int4 (max
     memory saving) and upgrade the highest-NE-impact tables to int8 until
     the budget is met, at TABLE granularity."""
-    import numpy as np
     from repro.core.quantization import dequantize_rows
 
     slab = params["slab"]
@@ -127,7 +213,7 @@ def _mixed48_rows(cfg, asn, params, b, ref) -> List[Row]:
     bits = [4] * cfg.num_tables
     d = ne_with(bits)
     upgrades = 0
-    while d > 5e-4 and upgrades < cfg.num_tables:
+    while d > NE_BUDGET and upgrades < cfg.num_tables:
         # upgrade the table whose int4 round-trip error is worst
         errs = []
         for t in range(cfg.num_tables):
@@ -144,14 +230,19 @@ def _mixed48_rows(cfg, asn, params, b, ref) -> List[Row]:
     rows_4 = sum(r for t, r in enumerate(cfg.table_rows) if bits[t] == 4)
     frac = rows_4 / sum(cfg.table_rows)
     saving = 1.0 - (1.0 - frac) - frac * 0.5      # int4 = half of int8 bytes
-    return [Row(
+    section = {"ne_delta": float(d), "within_budget": bool(d <= NE_BUDGET),
+               "budget": NE_BUDGET, "int4_tables": n4,
+               "num_tables": int(cfg.num_tables), "upgrades": upgrades,
+               "bytes_vs_int8": float(1 - saving)}
+    rows = [Row(
         "quant/workflow-dlrm-embed-mixed48", 0.0,
-        f"ne_delta={d:.2e};within={d <= 5e-4};int4_tables={n4}/"
+        f"ne_delta={d:.2e};within={d <= NE_BUDGET};int4_tables={n4}/"
         f"{cfg.num_tables};upgrades={upgrades};"
         f"bytes_vs_int8={1 - saving:.2f}x;measured=true")]
+    return rows, section
 
 
-def _backbone_cosine_rows() -> List[Row]:
+def _backbone_cosine_rows() -> Tuple[List[Row], Dict]:
     """int8 round-trip all FC weights of a transformer; cosine >= 98%."""
     cfg = reduce_for_smoke(get_config("gemma-2b"))
     params = M.init_params(cfg, jax.random.PRNGKey(3))
@@ -170,15 +261,49 @@ def _backbone_cosine_rows() -> List[Row]:
     h_ref, _, _ = M.forward(params, cfg, toks, mode="full")
     h_q, _, _ = M.forward(qparams, cfg, toks, mode="full")
     cos = float(cosine_similarity(h_ref[:, -1], h_q[:, -1]))
-    return [Row(
+    section = {"arch": "gemma-2b", "cosine": cos,
+               "requirement": COSINE_REQUIREMENT,
+               "within": bool(cos >= COSINE_REQUIREMENT)}
+    rows = [Row(
         "quant/backbone-cosine-int8", 0.0,
-        f"cosine={cos:.4f};paper_requirement=0.98;within={cos >= 0.98};"
-        f"measured=true")]
+        f"cosine={cos:.4f};paper_requirement={COSINE_REQUIREMENT};"
+        f"within={cos >= COSINE_REQUIREMENT};measured=true")]
+    return rows, section
+
+
+def _w8a8_build_rows() -> Tuple[List[Row], Dict]:
+    """The serving build step (PR 6): calibrate every dense projection of
+    the LM smoke stack through the §V workflow and report the site mix it
+    lands on — this is exactly what ``InferenceEngine(precision='w8a8')``
+    runs at construction."""
+    from repro.models.quantize import build_quantized_params
+    cfg = reduce_for_smoke(get_config(W8A8_ARCH))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qp = build_quantized_params(cfg, params, budget=W8A8_BUDGET)
+    fallbacks = [d.name for d in qp.result.decisions if d.scheme != "int8"]
+    disagreement = float(qp.result.metric_delta)
+    section = {"arch": W8A8_ARCH, "budget": W8A8_BUDGET,
+               "quantized_sites": int(qp.quantized_sites),
+               "fallback_sites": int(qp.fallback_sites),
+               "fallback_names": fallbacks,
+               "calib_disagreement": disagreement,
+               "within_budget": bool(disagreement <= W8A8_BUDGET)}
+    rows = [Row(
+        "quant/w8a8-build-lm", 0.0,
+        f"arch={W8A8_ARCH};sites_int8={qp.quantized_sites};"
+        f"fallbacks={qp.fallback_sites};"
+        f"calib_disagreement={disagreement:.4f};budget={W8A8_BUDGET};"
+        f"within={disagreement <= W8A8_BUDGET};measured=true")]
+    return rows, section
 
 
 def run() -> List[Row]:
-    rows, cfg, asn, params, b, ref = _dlrm_ne_rows()
-    rows += _workflow_rows(cfg, asn, params, b, ref)
-    rows += _mixed48_rows(cfg, asn, params, b, ref)
-    rows += _backbone_cosine_rows()
+    rows, embed, cfg, asn, params, b, ref = _dlrm_ne_rows()
+    wf_rows, workflow = _workflow_rows(cfg, asn, params, b, ref)
+    mx_rows, mixed48 = _mixed48_rows(cfg, asn, params, b, ref)
+    bb_rows, backbone = _backbone_cosine_rows()
+    w8_rows, w8a8_build = _w8a8_build_rows()
+    rows += wf_rows + mx_rows + bb_rows + w8_rows
+    emit({"dlrm_embed": embed, "workflow": workflow, "mixed48": mixed48,
+          "backbone": backbone, "w8a8_build": w8a8_build})
     return rows

@@ -28,6 +28,9 @@ make smoke-chunked
 echo "== work-stealing smoke: hot-spot steal + mid-run kill drain =="
 make smoke-steal
 
+echo "== quantized-serving smoke: w8a8 guardrail + mixed-precision pin =="
+make smoke-quant
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== serving benchmark (results/BENCH_serving.json) =="
     make bench

@@ -93,11 +93,52 @@ def quantize_act_int8(x: jax.Array,
     return q.astype(jnp.int8), scale
 
 
+def quantize_act_int8_rowwise(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Dynamic per-ROW activation quant: one symmetric absmax scale per
+    activation row (last axis = the GEMM reduction dim). Returns
+    (int8 x, f32 scales of shape x.shape[:-1]) — the serving engines'
+    w8a8 path, tighter than the per-tensor scale when rows differ in
+    magnitude (e.g. a prefill batch mixing prompts)."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
 def w8a8_matmul_ref(xq: jax.Array, wq: jax.Array, x_scale, w_scale):
     """int8 x int8 -> int32 accumulate, dequant epilogue (pure-jnp oracle)."""
     acc = jnp.einsum("...i,io->...o", xq.astype(jnp.int32),
                      wq.astype(jnp.int32))
     return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def is_quantized_dense(w) -> bool:
+    """A dense projection leaf replaced by its w8a8 form: {"q8": int8
+    (in, out), "scale": f32 (out,)} (embedding-table row quant also uses
+    "q8" but carries a "bias")."""
+    return isinstance(w, dict) and "q8" in w and "bias" not in w
+
+
+def dense_w8a8(x: jax.Array, qw: Dict[str, jax.Array]) -> jax.Array:
+    """Quantized dense apply: x (..., K) f32 times a quantized weight
+    {"q8": (K, N) int8, "scale": (N,) f32} -> (..., N) f32, with dynamic
+    per-row activation scales. On TPU the GEMM runs through the
+    kernels/w8a8 Pallas kernel (int8 MXU path); elsewhere the bitwise-
+    identical int32 einsum oracle keeps numerics exact without paying the
+    kernel interpreter."""
+    xq, xs = quantize_act_int8_rowwise(x)
+    q8, w_scale = qw["q8"], qw["scale"].astype(jnp.float32)
+    if jax.default_backend() == "tpu" and x.ndim >= 2:
+        from repro.kernels.w8a8.matmul import w8a8_matmul
+        K, N = q8.shape
+        y = w8a8_matmul(xq.reshape(-1, K), q8, xs.reshape(-1), w_scale,
+                        interpret=False)
+        return y.reshape(x.shape[:-1] + (N,)).astype(x.dtype)
+    acc = jnp.einsum("...k,kn->...n", xq.astype(jnp.int32),
+                     q8.astype(jnp.int32))
+    y = acc.astype(jnp.float32) * xs[..., None] * w_scale
+    return y.astype(x.dtype)
 
 
 # --------------------------------------------------------------------------

@@ -1,12 +1,16 @@
 """Pure-jnp oracle for the w8a8 int8 matmul (paper §V: int8 FC with
-per-output-channel weight scales + dynamic per-tensor activation scale)."""
+per-output-channel weight scales + dynamic activation scales)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
 def w8a8_ref(xq, wq, x_scale, w_scale):
-    """xq (M,K) int8, wq (K,N) int8, x_scale () f32, w_scale (N,) f32 ->
-    (M,N) f32: int32 accumulation then dequant epilogue."""
+    """xq (M,K) int8, wq (K,N) int8, x_scale () or (M,)/(M,1) f32 (per-row
+    activation scales), w_scale (N,) f32 -> (M,N) f32: int32 accumulation
+    then dequant epilogue."""
     acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
-    return acc.astype(jnp.float32) * x_scale * w_scale[None, :]
+    xs = jnp.asarray(x_scale, jnp.float32)
+    if xs.ndim:
+        xs = xs.reshape(-1, 1)
+    return acc.astype(jnp.float32) * xs * w_scale[None, :]

@@ -24,7 +24,13 @@ SSM, RG-LRU, hybrids — the SequenceStateManager carries per-slot state
 across chunk boundaries, PR 5); ``--verify-chunked`` replays the same
 trace monolithically and asserts token-identical outputs (the CI smoke
 runs it on deepseek-7b and on the recurrentgemma-9b stateful hybrid).
-Reports include time-to-first-token percentiles alongside latency.
+``--precision w8a8`` (PR 6) runs the calibrated int8 serving path
+(``--verify-quant`` replays the trace on fp32 and asserts the greedy-
+token-agreement guardrail); ``--replica-precisions fp32,w8a8`` deploys a
+heterogeneous fleet where the router pins class-0 traffic to fp32
+replicas (``--verify-quant`` then asserts the pin held with zero lost —
+the CI quant smoke). Reports include time-to-first-token percentiles
+alongside latency.
 
 Real-cluster notes: per-host processes share the production mesh via
 jax.distributed.initialize(); the engine's slot batch maps to the
@@ -43,6 +49,10 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.models import model as model_mod
 from repro.serving.engine import InferenceEngine, Request, make_replicas
 from repro.serving.router import ReplicaRouter
+
+# same greedy-token-agreement guardrail the serving bench asserts
+# (BENCH_serving.json quantized.agreement_threshold)
+QUANT_AGREEMENT_THRESHOLD = 0.90
 
 
 def _lm_requests(args, cfg):
@@ -72,11 +82,16 @@ def serve_lm(args):
         if args.verify_chunked:
             raise SystemExit("--verify-chunked runs single-engine only "
                              "(drop --replicas)")
+        precisions = [p.strip() for p in args.replica_precisions.split(",")] \
+            if args.replica_precisions \
+            else [args.precision] * args.replicas
         router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
-                                             **kw), route=args.route,
-                               steal=args.steal)
+                                             precisions=precisions, **kw),
+                               route=args.route, steal=args.steal)
         if args.verify_steal:
             return _verify_steal(router, reqs, args)
+        if args.verify_quant:
+            return _verify_quant_fleet(router, reqs, args)
         t0 = time.perf_counter()
         for r in reqs:
             router.submit(r)
@@ -90,7 +105,9 @@ def serve_lm(args):
         return tel
     if args.verify_steal:
         raise SystemExit("--verify-steal needs --replicas >= 2 --steal")
-    eng = InferenceEngine(cfg, params, **kw)
+    if args.replica_precisions:
+        raise SystemExit("--replica-precisions needs --replicas >= 2")
+    eng = InferenceEngine(cfg, params, precision=args.precision, **kw)
     t0 = time.perf_counter()
     eng.run(reqs)
     wall = time.perf_counter() - t0
@@ -115,6 +132,67 @@ def serve_lm(args):
                              f"monolithic for requests {bad}")
         print(f"verify-chunked OK: {len(reqs)} requests token-identical "
               f"to monolithic prefill")
+    if args.verify_quant:
+        if args.precision != "w8a8":
+            raise SystemExit("--verify-quant needs --precision w8a8 "
+                             "(or a mixed --replica-precisions fleet)")
+        from repro.core.metrics import token_agreement
+        ref = InferenceEngine(cfg, params, precision="fp32", **kw)
+        ref_reqs = _lm_requests(args, cfg)
+        ref.run(ref_reqs)
+        agreement = token_agreement([(r.output, m.output)
+                                     for r, m in zip(reqs, ref_reqs)])
+        if agreement < QUANT_AGREEMENT_THRESHOLD:
+            raise SystemExit(
+                f"FAIL: w8a8 greedy-token agreement {agreement:.3f} below "
+                f"the {QUANT_AGREEMENT_THRESHOLD} guardrail")
+        q = eng.quant
+        print(f"verify-quant OK: {len(reqs)} requests, token agreement "
+              f"{agreement:.3f} >= {QUANT_AGREEMENT_THRESHOLD} vs fp32 "
+              f"({q.quantized_sites} sites int8, {q.fallback_sites} "
+              f"fp32 fallbacks, calib disagreement "
+              f"{q.result.metric_delta:.4f})")
+    return tel
+
+
+def _verify_quant_fleet(router, reqs, args):
+    """The CI mixed-precision smoke: a 1xfp32 + 1xw8a8 fleet under the
+    priority policy must route every latency/accuracy-critical (class-0)
+    request to the fp32 replica while fp32 capacity exists, lose nothing,
+    and count zero precision downgrades. Exits non-zero on any
+    violation."""
+    if not router.mixed_precision:
+        raise SystemExit("--verify-quant with --replicas needs a mixed "
+                         "--replica-precisions fleet (e.g. fp32,w8a8)")
+    if not any(r.priority == 0 for r in reqs):
+        raise SystemExit("FAIL: trace has no class-0 requests — the pin "
+                         "check would be vacuous (use --policy priority "
+                         "and enough --requests)")
+    misrouted = []
+    for r in reqs:
+        before = list(router.routed)
+        router.submit(r)
+        j = next(i for i in range(len(router.replicas))
+                 if router.routed[i] != before[i])
+        if r.priority == 0 and router.precisions[j] != "fp32":
+            misrouted.append(r.rid)
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    lost = [r.rid for r in reqs if not r.done]
+    if lost:
+        raise SystemExit(f"FAIL: mixed-precision fleet lost requests "
+                         f"{lost}")
+    if misrouted:
+        raise SystemExit(f"FAIL: class-0 requests {misrouted} routed to "
+                         f"an int8 replica while fp32 was live")
+    if tel.precision_rehomed:
+        raise SystemExit(f"FAIL: {tel.precision_rehomed} precision "
+                         f"downgrades counted with fp32 live throughout")
+    high = sum(r.priority == 0 for r in reqs)
+    print(f"verify-quant OK: mixed fleet {router.precisions} served "
+          f"{tel.served} requests (routed {router.routed}), all {high} "
+          f"class-0 on fp32, 0 lost, 0 downgrades")
+    print(router.report())
     return tel
 
 
@@ -238,6 +316,20 @@ def main(argv=None):
     ap.add_argument("--verify-chunked", action="store_true",
                     help="replay the trace monolithically and assert "
                          "chunked outputs are token-identical")
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "w8a8"),
+                    help="engine execution precision: w8a8 runs every "
+                         "calibrated dense projection as per-channel int8 "
+                         "weights x dynamically scaled int8 activations")
+    ap.add_argument("--replica-precisions", default=None,
+                    help="comma list, one per replica (e.g. fp32,w8a8): "
+                         "heterogeneous fleet where the router pins "
+                         "class-0 traffic to fp32 replicas")
+    ap.add_argument("--verify-quant", action="store_true",
+                    help="single engine: replay the trace on fp32 and "
+                         "assert the w8a8 token-agreement guardrail; "
+                         "mixed fleet: assert class-0 routes to fp32 with "
+                         "zero lost (the CI quant smoke)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full-config", dest="smoke", action="store_false")
     args = ap.parse_args(argv)

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.quantization import dense_w8a8, is_quantized_dense
 from repro.models.common import (apply_mrope, apply_rope, mk_param, softcap)
 from repro.core.jax_compat import shard_map
 from repro.sharding.rules import (current_ctx, logical_to_spec, Logical,
@@ -104,11 +105,21 @@ def _ring_newest_positions(last, win: int):
 # projections
 # --------------------------------------------------------------------------
 
+def _head_proj(x, w, cfg: ModelConfig):
+    """x (B,S,d) @ w (d,H,hd) -> (B,S,H,hd); the quantized form stores the
+    head axes flattened ((d, H*hd) int8) and restores them from
+    ``cfg.head_dim``."""
+    if is_quantized_dense(w):
+        y = dense_w8a8(x, w)
+        return y.reshape(y.shape[:2] + (-1, cfg.head_dim))
+    return jnp.einsum("bsd,dhk->bshk", x, w)
+
+
 def _project_qkv(p, x, cfg: ModelConfig, positions, kv_x=None, rope: bool = True):
     kv_x = x if kv_x is None else kv_x
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
-    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"])
-    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"])
+    q = _head_proj(x, p["wq"], cfg)
+    k = _head_proj(kv_x, p["wk"], cfg)
+    v = _head_proj(kv_x, p["wv"], cfg)
     if "bq" in p:
         q = q + p["bq"]
         k = k + p["bk"]
@@ -127,7 +138,11 @@ def _project_qkv(p, x, cfg: ModelConfig, positions, kv_x=None, rope: bool = True
 
 
 def _out_proj(p, o):
-    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if is_quantized_dense(p["wo"]):
+        B, S = o.shape[:2]
+        y = dense_w8a8(o.reshape(B, S, -1), p["wo"])
+    else:
+        y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
     if "bo" in p:
         y = y + p["bo"]
     return shard(y, "batch", "seq", None)

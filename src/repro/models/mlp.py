@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.quantization import dense_w8a8, is_quantized_dense
 from repro.models.common import activation_fn, mk_param
 from repro.sharding.rules import shard
 
@@ -26,18 +27,26 @@ def init_mlp(cfg: ModelConfig, key, d_ff: int = None):
     return p
 
 
+def _dense(x, w, eq: str):
+    """One MLP projection: fp32 einsum, or the w8a8 path when the build
+    step swapped the weight for a quantized {"q8", "scale"} leaf."""
+    if is_quantized_dense(w):
+        return dense_w8a8(x, w)
+    return jnp.einsum(eq, x, w)
+
+
 def apply_mlp(p, x, cfg: ModelConfig):
     act = activation_fn(cfg.activation)
-    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    up = _dense(x, p["w_up"], "bsd,df->bsf")
     if "b_up" in p:
         up = up + p["b_up"]
     if cfg.glu:
-        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        gate = _dense(x, p["w_gate"], "bsd,df->bsf")
         h = act(gate) * up
     else:
         h = act(up)
     h = shard(h, "batch", "seq", "mlp")
-    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    y = _dense(h, p["w_down"], "bsf,fd->bsd")
     if "b_down" in p:
         y = y + p["b_down"]
     return shard(y, "batch", "seq", None)

@@ -99,9 +99,29 @@ class InferenceEngine:
                  max_queue: Optional[int] = None,
                  service_ms_est: Optional[float | str] = None,
                  service_ms_fallback: Optional[float] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 precision: str = "fp32",
+                 quantized_params=None,
+                 quant_budget: float = 0.05):
+        if precision not in ("fp32", "w8a8"):
+            raise ValueError(f"precision must be 'fp32' or 'w8a8', "
+                             f"got {precision!r}")
         self.cfg = cfg
-        self.params = params
+        self.params = params               # fp32 reference weights
+        self.precision = precision
+        self.quant = None                  # QuantizedParams build record
+        if precision == "w8a8":
+            # §V build step: every dense projection goes per-channel int8
+            # (over-budget sites stay fp32 via the workflow's skip-list);
+            # make_replicas builds ONCE and shares across replicas
+            if quantized_params is None:
+                from repro.models.quantize import build_quantized_params
+                quantized_params = build_quantized_params(
+                    cfg, params, budget=quant_budget)
+            self.quant = quantized_params
+            self.run_params = quantized_params.params
+        else:
+            self.run_params = params
         self.max_len = max_len
         self.batch_slots = batch_slots
         self.buckets = tuple(b for b in prefill_buckets if b <= max_len)
@@ -361,8 +381,9 @@ class InferenceEngine:
             toks[j, :L] = t.payload.tokens[:L]
             lens[j] = L
         nxt, caches = self.executor.dispatch(
-            "prefill", (bucket, P), lambda: self._build_prefill(bucket),
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
+            "prefill", (bucket, P, self.precision),
+            lambda: self._build_prefill(bucket),
+            self.run_params, jnp.asarray(toks), jnp.asarray(lens))
         slots = [self.states.acquire(t) for t in group]
         self.caches = self.executor.dispatch(
             "slot_write", g, self._build_slot_write,
@@ -435,8 +456,9 @@ class InferenceEngine:
             last[j] = clen - 1
         slots_padded = np.asarray(slots + [slots[0]] * (P - g), np.int32)
         nxt, self.caches = self.executor.dispatch(
-            "chunk_prefill", (bucket, P), lambda: self._build_chunk(bucket),
-            self.params, self.caches, jnp.asarray(slots_padded),
+            "chunk_prefill", (bucket, P, self.precision),
+            lambda: self._build_chunk(bucket),
+            self.run_params, self.caches, jnp.asarray(slots_padded),
             jnp.asarray(toks), jnp.asarray(start), jnp.asarray(wpos),
             jnp.asarray(lens), jnp.asarray(last))
         nxt = np.asarray(nxt)
@@ -469,8 +491,8 @@ class InferenceEngine:
         for s, t in self.active.items():
             toks[s, 0] = t.payload.output[-1]
         nxt, self.caches = self.executor.dispatch(
-            "decode", (), self._build_decode,
-            self.params, self.caches, jnp.asarray(toks),
+            "decode", (self.precision,), self._build_decode,
+            self.run_params, self.caches, jnp.asarray(toks),
             jnp.asarray(pos_vec), jnp.asarray(active_mask))
         nxt = np.asarray(nxt)
         self.telemetry.steps += 1
@@ -502,8 +524,28 @@ class InferenceEngine:
 
 
 def make_replicas(cfg: ModelConfig, params, n: int,
+                  precisions: Optional[Sequence[str]] = None,
+                  quant_budget: float = 0.05,
                   **engine_kw) -> List[InferenceEngine]:
     """N LM engine replicas sharing one set of weights (the paper's
     data-parallel deployment: same model on each card, distinct KV caches
-    and runtime queues). Front with ``ReplicaRouter``."""
-    return [InferenceEngine(cfg, params, **engine_kw) for _ in range(n)]
+    and runtime queues). Front with ``ReplicaRouter``.
+
+    ``precisions`` gives each replica its own execution precision
+    (``"fp32"`` / ``"w8a8"``) — the heterogeneous-fleet deployment where
+    bulk traffic flows to int8 cards while accuracy-sensitive traffic
+    pins to fp32 (the router's mixed-precision policy). The quantized
+    weights are built ONCE and shared by every w8a8 replica."""
+    if precisions is None:
+        precisions = ["fp32"] * n
+    if len(precisions) != n:
+        raise ValueError(f"precisions has {len(precisions)} entries for "
+                         f"{n} replicas")
+    qp = None
+    if any(p == "w8a8" for p in precisions):
+        from repro.models.quantize import build_quantized_params
+        qp = build_quantized_params(cfg, params, budget=quant_budget)
+    return [InferenceEngine(cfg, params, precision=p,
+                            quantized_params=qp if p == "w8a8" else None,
+                            **engine_kw)
+            for p in precisions]

@@ -38,11 +38,12 @@ class SimReplica:
     the due time, not the tick that observed it)."""
 
     def __init__(self, service_s: float = 0.01, slots: int = 1,
-                 policy: str = "fifo", **sched_kw):
+                 policy: str = "fifo", precision: str = "fp32", **sched_kw):
         self.scheduler = Scheduler(policy, **sched_kw)
         self.telemetry = self.scheduler.telemetry
         self.service_s = service_s
         self.slots = slots
+        self.precision = precision       # router mixed-precision policy
         self.active: List[Tuple[Ticket, float]] = []   # (ticket, due time)
 
     # ---- replica protocol ------------------------------------------------
@@ -109,13 +110,17 @@ class FleetSim:
                  service_s: Union[float, Sequence[float]] = 0.01,
                  slots: Union[int, Sequence[int]] = 1, steal: bool = True,
                  policy: str = "fifo", dt: float = 0.005, seed: int = 0,
-                 route: str = "count", **sched_kw):
+                 route: str = "count",
+                 precisions: Optional[Sequence[str]] = None, **sched_kw):
         if np.isscalar(service_s):
             service_s = [float(service_s)] * replicas
         if np.isscalar(slots):
             slots = [int(slots)] * replicas
+        if precisions is None:
+            precisions = ["fp32"] * replicas
         self.replicas = [SimReplica(service_s=float(service_s[i]),
                                     slots=int(slots[i]), policy=policy,
+                                    precision=precisions[i],
                                     **sched_kw)
                          for i in range(replicas)]
         self.router = ReplicaRouter(self.replicas, steal=steal, route=route)

@@ -95,6 +95,13 @@ class ReplicaRouter:
         self.route_mode = route
         self.ewma_alpha = ewma_alpha
         self.steal_enabled = steal
+        # mixed-precision fleet policy: replicas advertise their execution
+        # precision (engines: ``precision``; anything without the attr is
+        # fp32). When the fleet mixes precisions, priority-0 (accuracy-
+        # sensitive) traffic pins to the fp32 replicas while fp32 capacity
+        # exists; a homogeneous fleet routes exactly as before.
+        self.precisions = [getattr(r, "precision", "fp32")
+                           for r in self.replicas]
         self.ewma_s = [0.0] * len(self.replicas)  # 0 = not yet measured
         self.routed = [0] * len(self.replicas)   # submits per replica
         self.shed = 0                            # fleet admission rejections
@@ -141,6 +148,17 @@ class ReplicaRouter:
         """Indices of replicas that have not been fault-drained."""
         return [i for i in range(len(self.replicas)) if not self.dead[i]]
 
+    @property
+    def mixed_precision(self) -> bool:
+        """True when the fleet serves at more than one precision (the
+        precision pin only engages then — a homogeneous fleet has nothing
+        to pin to)."""
+        return len(set(self.precisions)) > 1
+
+    @property
+    def fp32_alive(self) -> List[int]:
+        return [i for i in self.alive if self.precisions[i] == "fp32"]
+
     def free_slots(self, i: int) -> int:
         """Free serving capacity of replica i (steal admission cap). The
         engines expose ``free_slots`` (LM: free KV slots; DLRM: the step
@@ -151,13 +169,28 @@ class ReplicaRouter:
             return int(fs)
         return 1 if self.replicas[i].inflight == 0 else 0
 
-    def route(self, *, has_deadline: bool = False) -> int:
+    def route(self, *, has_deadline: bool = False, priority: int = 0) -> int:
         """Pick the replica index for the next ticket (see module doc).
-        Fault-drained replicas take no traffic."""
+        Fault-drained replicas take no traffic. In a mixed-precision
+        fleet, priority-0 (accuracy-sensitive) tickets only consider the
+        live fp32 replicas; when the last fp32 replica is gone the pin
+        degrades gracefully — the ticket lands on an int8 replica and the
+        downgrade is counted (``telemetry.precision_rehomed``)."""
         alive = self.alive
         if not alive:
             raise RuntimeError("every replica is fault-drained; nothing "
                                "can take traffic")
+        if self.mixed_precision and priority == 0:
+            pinned = self.fp32_alive
+            if pinned:
+                alive = pinned
+            else:
+                pick = self._route_among(alive, has_deadline)
+                self.replicas[pick].telemetry.record_precision_rehome()
+                return pick
+        return self._route_among(alive, has_deadline)
+
+    def _route_among(self, alive: List[int], has_deadline: bool) -> int:
         loads = {i: self._cost(i) for i in alive}
         m = min(loads.values())
         cand = [i for i in alive if loads[i] == m]
@@ -180,7 +213,9 @@ class ReplicaRouter:
                         or getattr(item, "slo_ms", None) is not None
                         or any(r.scheduler.default_slo_ms is not None
                                for r in self.replicas))
-        i = self.route(has_deadline=has_deadline)
+        eff_priority = priority if priority is not None \
+            else (getattr(item, "priority", 0) or 0)
+        i = self.route(has_deadline=has_deadline, priority=eff_priority)
         t = self.replicas[i].submit(item, slo_ms=slo_ms,
                                     priority=priority, **kw)
         if t.shed:
@@ -241,8 +276,16 @@ class ReplicaRouter:
                 continue
             victim = self.replicas[best]
             k = min(cap, self._steal_share(i, best, best_backlog))
+            eligible = getattr(victim, "steal_eligible", None)
+            if self.mixed_precision and self.precisions[i] != "fp32" \
+                    and self.fp32_alive:
+                # an int8 thief must not pull accuracy-pinned (priority-0)
+                # work while any fp32 replica is live — stealing respects
+                # the precision pin
+                eligible = (lambda t, base=eligible:
+                            (base is None or base(t)) and t.priority > 0)
             stolen = victim.scheduler.steal_pending(
-                k, now=now, eligible=getattr(victim, "steal_eligible", None))
+                k, now=now, eligible=eligible)
             if not stolen:
                 continue
             thief.scheduler.absorb(stolen, now=now)
@@ -279,8 +322,21 @@ class ReplicaRouter:
                                f"tickets but no live replica remains to "
                                f"re-home them")
         for t in tickets:
-            j = min(live, key=lambda i: (self.load(i), i))
+            cand = live
+            downgrade = False
+            if self.mixed_precision and t.priority == 0:
+                # accuracy-pinned work prefers a surviving fp32 replica;
+                # when the drained card was the LAST fp32, degrade
+                # gracefully — re-home to int8 and count the downgrade
+                fp32 = [i for i in live if self.precisions[i] == "fp32"]
+                if fp32:
+                    cand = fp32
+                else:
+                    downgrade = True
+            j = min(cand, key=lambda i: (self.load(i), i))
             self.replicas[j].scheduler.absorb([t], now=now, record=False)
+            if downgrade:
+                self.replicas[j].telemetry.record_precision_rehome()
             self.rehomed[j] += 1
         return len(tickets)
 
@@ -355,6 +411,7 @@ class ReplicaRouter:
         out["replicas"] = len(self.replicas)
         out["routed_per_replica"] = list(self.routed)
         out["route"] = self.route_mode
+        out["precisions"] = list(self.precisions)
         out["steals_per_replica"] = list(self.steals_per_replica)
         out["dead_replicas"] = [i for i, d in enumerate(self.dead) if d]
         return out

@@ -55,6 +55,9 @@ class Telemetry:
     steals: int = 0                # tickets this replica pulled from siblings
     drained: int = 0               # tickets re-homed OFF this replica by a
                                    # fault drain (the card died)
+    precision_rehomed: int = 0     # high-class tickets this replica accepted
+                                   # onto a LOWER precision than the pin asked
+                                   # for (no fp32 replica was live)
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -103,6 +106,14 @@ class Telemetry:
         drain (the card died mid-run). Counted on the VICTIM: the fleet
         total says how much accepted work survived card failures."""
         self.drained += n
+
+    def record_precision_rehome(self, n: int = 1):
+        """``n`` accuracy-pinned (priority-0) tickets landed on this
+        replica at LOWER precision than the mixed-precision routing
+        policy asked for, because no fp32 replica was live — the
+        graceful-degradation path of the precision pin (work is served
+        int8 rather than dropped, and the downgrade is counted)."""
+        self.precision_rehomed += n
 
     def record_ttft(self, ttft_ms: float):
         """Time-to-first-token for one request: enqueue -> first generated
@@ -253,6 +264,7 @@ class Telemetry:
                "continuations": self.continuations,
                "steals": self.steals,
                "drained": self.drained,
+               "precision_rehomed": self.precision_rehomed,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
@@ -283,6 +295,9 @@ class Telemetry:
                          f"siblings")
         if self.drained:
             lines.append(f"{self.drained} tickets re-homed by fault drain")
+        if self.precision_rehomed:
+            lines.append(f"{self.precision_rehomed} high-class tickets "
+                         f"served below their precision pin (no fp32 live)")
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")

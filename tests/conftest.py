@@ -138,10 +138,11 @@ class StubReplica:
     a bare FIFO scheduler whose step admits and instantly completes one
     ticket."""
 
-    def __init__(self, **sched_kw):
+    def __init__(self, precision="fp32", **sched_kw):
         from repro.serving.scheduler import Scheduler
         self.scheduler = Scheduler("fifo", **sched_kw)
         self.telemetry = self.scheduler.telemetry
+        self.precision = precision
 
     @property
     def inflight(self):

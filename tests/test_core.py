@@ -172,6 +172,24 @@ def test_cosine_similarity_self_is_one(key):
     assert float(MET.cosine_similarity(a, a)) == pytest.approx(1.0, abs=1e-5)
 
 
+def test_token_agreement_counts_only_attributable_tokens():
+    """Per pair, tokens count up to and including the FIRST mismatch:
+    post-divergence tokens condition on different prefixes (greedy
+    cascade) and must not dilute or inflate the metric."""
+    assert MET.token_agreement([([1, 2, 3], [1, 2, 3])]) == 1.0
+    # mismatch at position 1: counts 1 match + 1 miss, ignores the rest
+    # (the trailing 9==9 "agreement" is a post-divergence coincidence)
+    assert MET.token_agreement([([1, 5, 9], [1, 2, 9])]) \
+        == pytest.approx(1 / 2)
+    # first token wrong: one counted decision, zero matched
+    assert MET.token_agreement([([7, 1, 1], [2, 1, 1])]) == 0.0
+    # pools counted decisions across pairs: (3 + 1) matched / (3 + 2)
+    assert MET.token_agreement([([1, 2, 3], [1, 2, 3]),
+                                ([4, 0, 0], [4, 5, 0])]) \
+        == pytest.approx(4 / 5)
+    assert MET.token_agreement([]) == 1.0
+
+
 # ---- numerics golden sets --------------------------------------------------
 
 def test_golden_set_detects_regression(key):

@@ -104,3 +104,143 @@ def test_workflow_gives_up_gracefully(key):
                                 max_iters=3)
     assert not res.passed
     assert res.iterations <= 3
+
+
+# ---- QuantizedParams build step (PR 6, serving w8a8) -----------------------
+
+@pytest.fixture(scope="module")
+def lm_smoke():
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import model as M
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_build_quantized_params_site_and_leaf_contract(lm_smoke):
+    """Every dense projection becomes a site; int8-decided sites carry
+    exactly the {q8 int8 (reduction, out), scale f32 (out,)} leaf the
+    w8a8 kernels consume (arrays only — the leaves must slice through
+    jax.lax.scan like the fp32 originals)."""
+    from repro.models.quantize import (QUANT_SITES, _collect_sites,
+                                       build_quantized_params)
+    cfg, params = lm_smoke
+    sites = _collect_sites(params)
+    per_block = sum(len(v) for v in QUANT_SITES.values())
+    assert len(sites) == per_block * (len(params.get("scan", ()))
+                                      + len(params.get("tail", ())))
+    qp = build_quantized_params(cfg, params, budget=0.05)
+    assert qp.quantized_sites + qp.fallback_sites == len(sites)
+    assert qp.quantized_sites > 0
+    assert float(qp.result.metric_delta) <= 0.05
+    for name, scheme in qp.schemes.items():
+        group, gi, mod, wname = \
+            _collect_sites(params)[name]
+        leaf = qp.params[group][int(gi)][mod][wname]
+        if scheme == "int8":
+            assert set(leaf) == {"q8", "scale"}
+            assert leaf["q8"].dtype == jnp.int8
+            assert leaf["scale"].dtype == jnp.float32
+            # scan sites keep the stacked repeats dim in front
+            extra = 1 if group == "scan" else 0
+            assert leaf["q8"].ndim == 2 + extra
+            assert leaf["scale"].ndim == 1 + extra
+            assert leaf["q8"].shape[-1] == leaf["scale"].shape[-1]
+        else:
+            assert not isinstance(leaf, dict)      # fp32 original kept
+
+
+def test_build_skip_list_substring_filters(lm_smoke):
+    """skip=('wo',) force-keeps every output projection fp32 — substring
+    match, exactly the core workflow's skip-list semantics."""
+    from repro.models.quantize import build_quantized_params
+    cfg, params = lm_smoke
+    qp = build_quantized_params(cfg, params, skip=("wo",))
+    assert qp.schemes
+    assert not any(".wo" in name for name in qp.schemes)
+
+
+def test_build_falls_back_under_impossible_budget(lm_smoke):
+    """A budget no mix can meet drives the loop to fall sites back (paper
+    §V: raise precision for high-error operators) and report not-passed
+    instead of looping forever."""
+    from repro.models.quantize import build_quantized_params
+    cfg, params = lm_smoke
+    qp = build_quantized_params(cfg, params, budget=-1.0, max_iters=2)
+    assert not qp.result.passed
+    assert qp.fallback_sites > 0
+    assert qp.result.iterations <= 2
+
+
+def test_build_on_siteless_arch_is_empty_not_an_error():
+    """SSM mixers touch their weights directly, so a pure-Mamba stack has
+    zero dense-projection sites — the build degrades to a no-op (all-fp32
+    run params), it does not crash."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import model as M
+    from repro.models.quantize import build_quantized_params
+    cfg = reduce_for_smoke(get_config("mamba2-130m"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qp = build_quantized_params(cfg, params)
+    assert qp.quantized_sites == 0 and qp.fallback_sites == 0
+    assert not qp.schemes
+
+
+# ---- BENCH_quant.json schema ----------------------------------------------
+
+def _fake_quant_payload():
+    return {
+        "dlrm_embed": {
+            "budget": 5e-4,
+            "int8": {"ne_delta": 1e-5, "within_budget": True},
+            "int4": {"ne_delta": 2e-4, "within_budget": True},
+        },
+        "workflow": {"passed": True, "ne_delta": 1e-5, "budget": 5e-4,
+                     "iterations": 1, "fp16_fallbacks": 0,
+                     "fallback_layers": []},
+        "mixed48": {"ne_delta": 1e-4, "within_budget": True, "budget": 5e-4,
+                    "int4_tables": 3, "num_tables": 4, "upgrades": 1,
+                    "bytes_vs_int8": 0.6},
+        "backbone": {"arch": "gemma-2b", "cosine": 0.999,
+                     "requirement": 0.98, "within": True},
+        "w8a8_build": {"arch": "deepseek-7b", "budget": 0.05,
+                       "quantized_sites": 7, "fallback_sites": 0,
+                       "fallback_names": [], "calib_disagreement": 0.0,
+                       "within_budget": True},
+    }
+
+
+def test_bench_quant_schema_accepts_complete_payload():
+    from benchmarks.bench_quant import validate_payload
+    validate_payload(_fake_quant_payload())
+
+
+def test_bench_quant_schema_rejects_missing_keys():
+    from benchmarks.bench_quant import validate_payload
+    p = _fake_quant_payload()
+    del p["w8a8_build"]["calib_disagreement"]
+    del p["dlrm_embed"]["int8"]["ne_delta"]
+    del p["backbone"]
+    with pytest.raises(ValueError) as ei:
+        validate_payload(p)
+    msg = str(ei.value)
+    assert "w8a8_build.calib_disagreement" in msg
+    assert "dlrm_embed.int8.ne_delta" in msg
+    assert "backbone" in msg
+
+
+def test_bench_quant_emit_round_trips(tmp_path):
+    import json
+    from benchmarks.bench_quant import emit
+    path = tmp_path / "BENCH_quant.json"
+    emit(_fake_quant_payload(), path=str(path))
+    assert json.loads(path.read_text()) == _fake_quant_payload()
+
+
+def test_bench_quant_emit_unwritable_exits_nonzero(tmp_path, capsys):
+    from benchmarks.bench_quant import emit
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("file, not a directory")
+    with pytest.raises(SystemExit) as ei:
+        emit(_fake_quant_payload(), path=str(blocker / "BENCH_quant.json"))
+    assert ei.value.code == 1
+    assert "cannot write" in capsys.readouterr().err

@@ -284,6 +284,49 @@ def test_steal_with_chunked_prefill_tid_collision_is_safe(lm_setup):
     assert collider_req.output == ref_short.output
 
 
+# ---- mixed-precision routing (quantized fleet) ----------------------------
+
+def test_mixed_precision_pins_class0_to_fp32():
+    """In a mixed fp32/int8 fleet, accuracy-sensitive (priority-0) traffic
+    pins to the fp32 replica even when it is the MORE loaded one; bulk
+    traffic keeps the plain min-load rule."""
+    router = ReplicaRouter([_Stub(precision="fp32"),
+                            _Stub(precision="w8a8")])
+    assert router.mixed_precision
+    assert router.summary()["precisions"] == ["fp32", "w8a8"]
+    for i in range(3):                      # skew load onto the fp32 card
+        router.replicas[0].submit(i)
+    router.submit("high", priority=0)
+    assert router.replicas[0].scheduler.depth == 4   # pinned despite load
+    router.submit("bulk", priority=1)
+    assert router.replicas[1].scheduler.depth == 1   # min-load for bulk
+    assert router.fleet_telemetry().precision_rehomed == 0
+
+
+def test_homogeneous_fleet_has_no_precision_pin():
+    router = ReplicaRouter([_Stub(), _Stub()])
+    assert not router.mixed_precision
+    router.replicas[0].submit("x")
+    router.submit("high", priority=0)
+    assert router.replicas[1].scheduler.depth == 1   # plain min-load rule
+
+
+def test_pin_degrades_when_last_fp32_dies_and_counts_rehome():
+    """Graceful degradation: with the last fp32 replica fault-drained,
+    class-0 work lands on int8 (served, not refused) and the downgrade is
+    counted on the receiving replica's telemetry."""
+    router = ReplicaRouter([_Stub(precision="fp32"),
+                            _Stub(precision="w8a8")])
+    router.drain_replica(0)
+    t = router.submit("high", priority=0)
+    assert not t.shed
+    assert router.replicas[1].scheduler.depth == 1
+    assert router.replicas[1].telemetry.precision_rehomed == 1
+    assert router.fleet_telemetry().precision_rehomed == 1
+    assert "precision_rehomed" in router.summary()
+    assert "below their precision pin" in router.replicas[1].telemetry.report()
+
+
 # ---- fleet telemetry aggregation (satellite: pooled percentiles) ----------
 
 def test_fleet_percentiles_match_pooled_raw_samples():
@@ -514,7 +557,28 @@ def _fake_payload():
                               "served_per_replica_no_steal": [1, 0],
                               "spread_steal": 0, "spread_no_steal": 1,
                               "p99_improved": True,
-                              "spread_improved": True}}
+                              "spread_improved": True},
+            "quantized": {"arch": "a", "budget": 0.05,
+                          "calib_disagreement": 0.0,
+                          "quantized_sites": 7, "fallback_sites": 0,
+                          "token_agreement": 1.0,
+                          "agreement_threshold": 0.9,
+                          "agreement_ok": True, "logit_rel_err": 0.01,
+                          "fp32": _fake_summary(),
+                          "w8a8": _fake_summary(),
+                          "fleet": {"replicas": 2,
+                                    "precisions": ["fp32", "w8a8"],
+                                    "routed_per_replica": [1, 1],
+                                    "high_on_fp32": True,
+                                    "zero_lost": True,
+                                    "precision_rehomed": 0},
+                          "speed_ratio_model": 0.5,
+                          "decode_throughput_fp32": 1.0,
+                          "decode_throughput_w8a8": 2.0,
+                          "decode_throughput_improved": True,
+                          "ttft_ms_p99_fp32": 1.0,
+                          "ttft_ms_p99_w8a8": 0.5,
+                          "ttft_p99_no_worse": True}}
 
 
 def test_bench_payload_schema_validates():
@@ -533,6 +597,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["chunked_prefill"]["stateful"]["chunked"]["served"]
     del p["work_stealing"]["steal"]["steals"]
     del p["work_stealing"]["spread_improved"]
+    del p["quantized"]["token_agreement"]
+    del p["quantized"]["w8a8"]["precision_rehomed"]
+    del p["quantized"]["fleet"]["high_on_fp32"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
@@ -544,6 +611,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "chunked_prefill.stateful.chunked.served" in msg
     assert "work_stealing.steal.steals" in msg
     assert "work_stealing.spread_improved" in msg
+    assert "quantized.token_agreement" in msg
+    assert "quantized.w8a8.precision_rehomed" in msg
+    assert "quantized.fleet.high_on_fp32" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -785,6 +785,90 @@ def test_feedback_steal_share_bounds_and_conservation(seed, backlog, ratio):
     sim.assert_conserved()
 
 
+# ---- mixed-precision fleet (quantized serving) ----------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 50),
+       n_fp32=st.integers(1, 2), n_int8=st.integers(1, 2))
+def test_class0_never_lands_on_int8_while_fp32_lives(seed, n, n_fp32,
+                                                     n_int8):
+    """The precision-pin invariant: in a mixed fleet with live fp32
+    replicas, EVERY priority-0 submit lands on an fp32 replica no matter
+    how load skews (draining interleaved); bulk traffic flows freely and
+    no downgrade is ever counted while fp32 capacity exists."""
+    precisions = ["fp32"] * n_fp32 + ["w8a8"] * n_int8
+    router = ReplicaRouter([_StubReplica(precision=p) for p in precisions])
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        prio = int(rng.integers(0, 2))
+        before = list(router.routed)
+        router.submit(i, priority=prio)
+        j = next(k for k in range(len(precisions))
+                 if router.routed[k] != before[k])
+        if prio == 0:
+            assert precisions[j] == "fp32", \
+                f"class-0 ticket routed to {precisions[j]} replica {j}"
+        if rng.random() < 0.3:              # drain someone: loads vary
+            r = router.replicas[int(rng.integers(len(precisions)))]
+            if r.has_work:
+                r.step_once()
+    assert router.fleet_telemetry().precision_rehomed == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), backlog=st.integers(2, 30))
+def test_int8_thief_never_steals_class0_while_fp32_lives(seed, backlog):
+    """Stealing respects the precision pin: an int8 thief pulling from a
+    backlogged fp32 sibling (fp32 still live) only takes priority>0
+    tickets — accuracy-pinned work stays on the fp32 card — and
+    conservation holds through the move and the drain."""
+    sim = FleetSim(replicas=2, service_s=[0.03, 0.01],
+                   slots=[1, backlog + 2], steal=True,
+                   precisions=["fp32", "w8a8"], seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(backlog + 1):            # 1 startable + backlog stuck
+        sim.submit(priority=int(rng.integers(0, 3)), pin=0)
+    moved = sim.router.maybe_steal(now=sim.now)
+    stolen = [t for t in sim.replicas[1].scheduler._pending if t.stolen]
+    assert len(stolen) == moved
+    assert all(t.priority > 0 for t in stolen), \
+        "int8 thief stole accuracy-pinned class-0 work"
+    sim.assert_conserved()
+    run_to_completion(sim)
+    sim.assert_conserved()
+    assert len(sim.completed) == backlog + 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 30),
+       ticks=st.integers(0, 4))
+def test_drain_of_last_fp32_rehomes_class0_to_int8_and_counts(seed, n,
+                                                              ticks):
+    """Graceful degradation of the pin: killing the LAST fp32 replica
+    re-homes its whole outstanding load to the int8 survivor — class-0
+    included, each downgrade counted in the receiver's
+    precision_rehomed — and every accepted ticket still completes."""
+    sim = FleetSim(replicas=2, precisions=["fp32", "w8a8"], steal=False,
+                   seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        sim.submit(priority=int(rng.integers(0, 2)), pin=0)
+    for _ in range(ticks):
+        sim.tick()
+    victim = sim.replicas[0]
+    outstanding = victim.scheduler.depth + victim.inflight
+    high_outstanding = \
+        sum(t.priority == 0 for t in victim.scheduler._pending) \
+        + sum(t.priority == 0 for t, _ in victim.active)
+    moved = sim.fail(0)
+    assert moved == outstanding
+    assert sim.replicas[1].telemetry.precision_rehomed == high_outstanding
+    sim.assert_conserved()
+    run_to_completion(sim)
+    sim.assert_conserved()
+    assert len(sim.completed) == n          # nothing lost to the degrade
+
+
 @settings(max_examples=25, deadline=None)
 @given(seed=st.integers(0, 10_000), n=st.integers(1, 40))
 def test_router_shed_counted_separately(seed, n):

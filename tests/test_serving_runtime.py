@@ -365,6 +365,113 @@ def test_chunked_run_deterministic(lm_setup):
     assert [r.output for r in ra] == [r.output for r in rb]
 
 
+# ---- quantized serving (PR 6): int8 KV under chunking + w8a8 accuracy -----
+
+# Chunked prefill under an int8 KV cache attends the DEQUANTIZED cached
+# prefix for every chunk after the first, while monolithic prefill attends
+# the exact in-pass K/V — so token identity is not guaranteed by
+# construction and the contract is an explicit agreement bound instead
+# (core.metrics.token_agreement: attributable — per request, tokens count
+# only until the first mismatch). Measured 1.00 on the smoke stack across
+# archs/seeds/chunks; the bound leaves headroom for numerics drift
+# without masking a real regression.
+INT8_KV_CHUNK_AGREE = 0.95
+# w8a8 projections vs fp32: same greedy-token-agreement contract as the
+# bench guardrail (BENCH_serving.json quantized.agreement_threshold).
+W8A8_AGREE = 0.90
+
+
+def _token_agreement(got, ref):
+    from repro.core.metrics import token_agreement
+    return token_agreement([(a.output, b.output)
+                            for a, b in zip(got, ref)])
+
+
+def _int8_kv_cfg(arch):
+    """Attention-bearing smoke configs (SSM/RG-LRU have no KV cache) with
+    the paper-T3 int8 KV cache switched on — covers the k_scale branches
+    of mono prefill, chunked global scatter, and the local ring."""
+    import dataclasses
+    if arch == "global":
+        cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    else:
+        cfg = _arch_cfg(arch)
+    return dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, kv_cache_dtype="int8"))
+
+
+@pytest.mark.parametrize("arch", ("global", "local", "hybrid-local-global"))
+def test_int8_kv_chunked_prefill_agreement_bound(arch):
+    """Acceptance (PR 6): chunked prefill over an int8 KV cache stays
+    within the greedy-token agreement bound of monolithic int8-KV prefill
+    on every attention-bearing block pattern, with continuations really
+    flowing (the dequantized-prefix chunk branches execute)."""
+    cfg = _int8_kv_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    mono = InferenceEngine(cfg, params, **kw)
+    for seed in (5, 11):
+        ref = _mixed_trace(cfg, seed=seed)
+        mono.run(ref)
+        for chunk in (8, 16):
+            eng = InferenceEngine(cfg, params, prefill_chunk=chunk, **kw)
+            got = _mixed_trace(cfg, seed=seed)
+            eng.run(got)
+            assert eng.telemetry.continuations > 0
+            agreement = _token_agreement(got, ref)
+            assert agreement >= INT8_KV_CHUNK_AGREE, \
+                (arch, seed, chunk, agreement)
+
+
+def test_int8_kv_chunked_survives_work_stealing():
+    """int8 KV + chunked prefill + cross-replica stealing compose: a
+    fully-skewed trace on a 2-replica fleet really steals (fresh tickets
+    move, continuations are pinned), nothing is lost, and fleet outputs
+    stay within the agreement bound of a single mono int8-KV engine."""
+    from repro.serving.router import ReplicaRouter
+    cfg = _int8_kv_cfg("global")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    mono = InferenceEngine(cfg, params, **kw)
+    ref = _mixed_trace(cfg)
+    mono.run(ref)
+    reps = [InferenceEngine(cfg, params, prefill_chunk=8, **kw)
+            for _ in range(2)]
+    router = ReplicaRouter(reps, steal=True)
+    got = _mixed_trace(cfg)
+    for r in got:
+        reps[0].submit(r)                 # hot-keyed skew: all on one card
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    assert tel.served == len(got)
+    assert tel.steals > 0                 # the sibling really pulled work
+    assert tel.continuations > 0
+    assert all(r.done for r in got)
+    assert _token_agreement(got, ref) >= INT8_KV_CHUNK_AGREE
+
+
+def test_w8a8_engine_agreement_bound(lm_setup):
+    """Acceptance (PR 6): the w8a8 engine (per-channel int8 weights,
+    dynamic per-row activation scales) matches fp32 greedy decoding
+    within the bench guardrail threshold, monolithic and chunked alike,
+    and its executables are cached under the precision-qualified key."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    ref = _mixed_trace(cfg)
+    InferenceEngine(cfg, params, **kw).run(ref)
+    for chunk in (None, 8):
+        eng = InferenceEngine(cfg, params, precision="w8a8",
+                              prefill_chunk=chunk, **kw)
+        got = _mixed_trace(cfg)
+        eng.run(got)
+        assert all(r.done for r in got)
+        agreement = _token_agreement(got, ref)
+        assert agreement >= W8A8_AGREE, (chunk, agreement)
+        stage = "chunk_prefill" if chunk else "prefill"
+        assert all(k[1][-1] == "w8a8"
+                   for k in eng.executor.cached_keys(stage))
+
+
 # ---- N-stage pipeline -----------------------------------------------------
 
 def test_nstage_pipeline_matches_sequential():
