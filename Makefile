@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant bench ci
+	smoke-quant smoke-elastic perf-gate bench ci
 
 test:
 	python -m pytest -x -q
@@ -59,8 +59,20 @@ smoke-quant:
 	    --replicas 2 --replica-precisions fp32,w8a8 --route feedback \
 	    --steal --policy priority --verify-quant
 
+# elastic-fleet smoke (PR 7): flash crowd + mid-crowd card freeze on the
+# deterministic fleet sim — asserts scale-up, trough scale-down, exactly
+# one missed-heartbeat fault drain, zero lost, and both wins vs a fixed
+# fleet (less peak shedding, fewer replica-seconds)
+smoke-elastic:
+	python -m repro.launch.serve --elastic-smoke
+
+# perf-regression gate: named deterministic scenarios vs the bounds in
+# results/PERF_REFERENCES.json — exits 1 loudly on any violation
+perf-gate:
+	python benchmarks/perf_gate.py
+
 bench:
 	python -m benchmarks.run --only serving
 
 ci: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant bench
+	smoke-quant smoke-elastic perf-gate bench

@@ -47,6 +47,17 @@ both call it):
   ``spread_steal``/``spread_no_steal`` (max-min completed work per
   replica), ``p99_improved`` and ``spread_improved`` (the stealing
   fleet must cut tail latency AND balance completed work).
+- ``elastic``: autoscaled vs fixed fleet on the SAME seeded flash-crowd
+  trace (``repro.serving.fleet_sim`` virtual clock, so both runs are
+  bit-deterministic): the fixed fleet keeps ``fixed_replicas`` cards all
+  run long; the elastic one starts at ``initial_replicas`` with a
+  ``FleetController`` scaling between ``min``/``max`` through the drain
+  path. ``fixed``/``elastic`` (fleet summary dicts), ``controller``
+  (controller summary), ``shed_fixed``/``shed_elastic``/
+  ``shed_improved`` (the elastic fleet must shed LESS at the peak),
+  ``replica_seconds_fixed``/``replica_seconds_elastic``/
+  ``capacity_improved`` (and burn FEWER replica-seconds across the
+  diurnal trough), ``trough_live_mean``, ``zero_lost``.
 - ``quantized``: the w8a8 serving path (paper §V). Accuracy is MEASURED
   on real engines: a w8a8 engine (per-channel int8 weights from the
   ``build_quantized_params`` calibration workflow, dynamic per-row
@@ -98,7 +109,7 @@ SUMMARY_KEYS = frozenset({
     "served", "qps", "steps", "prefills", "prefill_batches",
     "total_tokens", "compile_count", "sla_miss_frac", "shed",
     "continuations", "steals", "drained", "precision_rehomed",
-    "mean_queue_depth",
+    "scaled_in", "mean_queue_depth",
     "latency_ms_p50", "latency_ms_p95", "latency_ms_p99",
     "latency_ms_max", "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
 })
@@ -108,7 +119,7 @@ def validate_payload(payload: Dict) -> None:
     """Raise ValueError unless ``payload`` matches the documented schema."""
     missing = []
     for section in ("lm", "dlrm", "router", "overload", "chunked_prefill",
-                    "work_stealing", "quantized"):
+                    "work_stealing", "elastic", "quantized"):
         if section not in payload:
             missing.append(section)
     for section in ("lm", "dlrm"):
@@ -158,6 +169,20 @@ def validate_payload(payload: Dict) -> None:
     for mode in ("steal", "no_steal"):
         for k in sorted(SUMMARY_KEYS - set(ws.get(mode, {}))):
             missing.append(f"work_stealing.{mode}.{k}")
+    el = payload.get("elastic", {})
+    for k in ("requests", "fixed_replicas", "initial_replicas",
+              "max_replicas", "fixed", "elastic", "controller",
+              "shed_fixed", "shed_elastic", "shed_improved",
+              "replica_seconds_fixed", "replica_seconds_elastic",
+              "capacity_improved", "trough_live_mean", "zero_lost"):
+        if k not in el:
+            missing.append(f"elastic.{k}")
+    for mode in ("fixed", "elastic"):
+        for k in sorted(SUMMARY_KEYS - set(el.get(mode, {}))):
+            missing.append(f"elastic.{mode}.{k}")
+    for k in ("scale_ups", "scale_downs", "faults_drained"):
+        if k not in el.get("controller", {}):
+            missing.append(f"elastic.controller.{k}")
     q = payload.get("quantized", {})
     for k in ("arch", "budget", "calib_disagreement", "quantized_sites",
               "fallback_sites", "token_agreement", "agreement_threshold",
@@ -581,6 +606,33 @@ def _work_stealing_summary():
             "spread_improved": spread_s < spread_ns}
 
 
+# ---- elastic fleet: autoscaled vs fixed on the same flash crowd -----------
+
+def _elastic_summary():
+    """Autoscaled vs fixed fleet on the SAME seeded flash-crowd trace
+    (``repro.serving.fleet_sim.elastic_vs_fixed`` — virtual clock, so
+    the comparison is bit-deterministic). The elastic fleet must shed
+    less at the peak AND burn fewer replica-seconds across the run —
+    the paper's provisioning argument (a fixed fleet must be sized for
+    the peak, then burns the trough) made numeric."""
+    from repro.serving.fleet_sim import elastic_vs_fixed
+    r = elastic_vs_fixed()
+    return {"requests": len(r["arrivals"]),
+            "fixed_replicas": r["fixed"]["peak_live"],
+            "initial_replicas": 2, "max_replicas": 8,
+            "fixed": r["fixed"]["fleet"],
+            "elastic": r["elastic"]["fleet"],
+            "controller": r["controller"].summary(),
+            "shed_fixed": r["fixed"]["shed"],
+            "shed_elastic": r["elastic"]["shed"],
+            "shed_improved": r["shed_improved"],
+            "replica_seconds_fixed": r["replica_seconds_fixed"],
+            "replica_seconds_elastic": r["replica_seconds_elastic"],
+            "capacity_improved": r["capacity_improved"],
+            "trough_live_mean": r["trough_live_mean"],
+            "zero_lost": r["zero_lost"]}
+
+
 # ---- quantized serving: w8a8 accuracy bound + modeled throughput ----------
 
 _QUANT_ARCH = "deepseek-7b"
@@ -744,10 +796,11 @@ def run() -> List[Row]:
     overload = _overload_summary()
     chunked = _chunked_summary()
     stealing = _work_stealing_summary()
+    elastic = _elastic_summary()
     quantized = _quantized_summary()
     emit({"lm": lm, "dlrm": dlrm, "router": router, "overload": overload,
           "chunked_prefill": chunked, "work_stealing": stealing,
-          "quantized": quantized})
+          "elastic": elastic, "quantized": quantized})
     rows = []
     for name, s in (("lm", lm), ("dlrm", dlrm),
                     ("router_single", router["single"]),
@@ -794,6 +847,17 @@ def run() -> List[Row]:
         f"spread_improved={stealing['spread_improved']};"
         f"steals={stealing['steal']['steals']};skew={stealing['skew']};"
         f"measured=true"))
+    ec = elastic["controller"]
+    rows.append(Row(
+        "serving/elastic",
+        elastic["elastic"]["latency_ms_p99"] * 1e3,
+        f"shed={elastic['shed_elastic']}v{elastic['shed_fixed']};"
+        f"shed_improved={elastic['shed_improved']};"
+        f"replica_s={elastic['replica_seconds_elastic']:.1f}v"
+        f"{elastic['replica_seconds_fixed']:.1f};"
+        f"capacity_improved={elastic['capacity_improved']};"
+        f"ups={ec['scale_ups']};downs={ec['scale_downs']};"
+        f"zero_lost={elastic['zero_lost']};measured=true"))
     qf = quantized["fleet"]
     rows.append(Row(
         "serving/quantized",

@@ -31,6 +31,12 @@ make smoke-steal
 echo "== quantized-serving smoke: w8a8 guardrail + mixed-precision pin =="
 make smoke-quant
 
+echo "== elastic-fleet smoke: flash crowd scale-up/down + fault drain =="
+make smoke-elastic
+
+echo "== perf-regression gate (results/PERF_REFERENCES.json) =="
+make perf-gate
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== serving benchmark (results/BENCH_serving.json) =="
     make bench

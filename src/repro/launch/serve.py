@@ -228,6 +228,44 @@ def _verify_steal(router, reqs, args):
     return tel
 
 
+def elastic_smoke():
+    """The CI elastic smoke (PR 7): the flash-crowd scenario on the
+    deterministic fleet sim with a FleetController in the loop and a
+    card frozen mid-crowd. Asserts the full control surface — scale-up
+    under the crowd, scale-down through the trough, exactly one
+    missed-heartbeat fault drain, zero lost tickets, and both headline
+    wins vs the fixed fleet (less shedding at the peak, fewer
+    replica-seconds burned). Exits non-zero on any violation. Runs on
+    the virtual clock: no model, no compiles, bit-deterministic."""
+    from repro.serving.fleet_sim import elastic_vs_fixed
+    r = elastic_vs_fixed(kill_at_frac=0.33)
+    ctl, el = r["controller"], r["elastic"]
+    checks = [
+        (ctl.scale_ups >= 1, "no scale-up under the flash crowd"),
+        (ctl.scale_downs >= 1, "no scale-down through the trough"),
+        (ctl.faults_drained == 1,
+         f"expected exactly 1 fault drain, got {ctl.faults_drained}"),
+        (r["zero_lost"], f"lost tickets: elastic {el['lost']}, "
+                         f"fixed {r['fixed']['lost']}"),
+        (r["shed_improved"], f"elastic shed {el['shed']} not below "
+                             f"fixed {r['fixed']['shed']}"),
+        (r["capacity_improved"],
+         f"elastic burned {r['replica_seconds_elastic']:.1f} replica-s "
+         f"vs fixed {r['replica_seconds_fixed']:.1f}"),
+    ]
+    bad = [msg for ok, msg in checks if not ok]
+    if bad:
+        raise SystemExit("FAIL: elastic smoke: " + "; ".join(bad))
+    print(f"elastic-smoke OK: {el['completed']} served, shed "
+          f"{el['shed']} (fixed {r['fixed']['shed']}), "
+          f"{r['replica_seconds_elastic']:.1f} replica-s "
+          f"(fixed {r['replica_seconds_fixed']:.1f}), +{ctl.scale_ups} "
+          f"up / -{ctl.scale_downs} down / {ctl.faults_drained} fault "
+          f"drain, 0 lost")
+    print(ctl.report())
+    return ctl
+
+
 def serve_dlrm(args):
     from repro.configs import dlrm_paper
     from repro.data.synthetic import dlrm_batches
@@ -330,9 +368,17 @@ def main(argv=None):
                          "assert the w8a8 token-agreement guardrail; "
                          "mixed fleet: assert class-0 routes to fp32 with "
                          "zero lost (the CI quant smoke)")
+    ap.add_argument("--elastic-smoke", action="store_true",
+                    help="run the elastic fleet-controller scenario on "
+                         "the deterministic fleet sim (flash crowd + "
+                         "mid-crowd card freeze) and assert scale-up/"
+                         "scale-down/fault-drain with zero lost — the "
+                         "CI elastic smoke; ignores the engine flags")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full-config", dest="smoke", action="store_false")
     args = ap.parse_args(argv)
+    if args.elastic_smoke:
+        return elastic_smoke()
     if args.arch == "dlrm":
         return serve_dlrm(args)
     return serve_lm(args)

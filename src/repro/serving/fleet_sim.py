@@ -18,11 +18,23 @@ step via ``step(now)`` / has_work / inflight / free_slots /
 steal_eligible / drain_tickets), so the router under test is the REAL
 router — only the engines are stubs.
 
-Used by ``tests/fleet_sim.py`` (the property-suite harness) and
-``benchmarks/bench_serving.py`` (the ``work_stealing`` section).
+Elastic-fleet support (ISSUE 7): ``FleetSim.replica_factory`` hands the
+``FleetController`` a factory whose replicas join BOTH the router and
+the sim's conservation tracking; ``halt``/``halted`` model a frozen card
+(stops serving and heartbeating, queue accumulates until the failure
+detector declares it and the controller drains); the production-shaped
+trace generators (``diurnal_trace`` / ``flash_crowd_trace`` /
+``hot_burst_trace`` / ``multi_tenant_trace``) and the ``run_elastic``
+driver push 10^5+ seeded arrivals through the closed control loop.
+
+Used by ``tests/fleet_sim.py`` (the property-suite harness),
+``benchmarks/bench_serving.py`` (``work_stealing`` + ``elastic``
+sections), and ``benchmarks/perf_gate.py`` (the CI perf-regression
+gate's scenarios).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -118,12 +130,16 @@ class FleetSim:
             slots = [int(slots)] * replicas
         if precisions is None:
             precisions = ["fp32"] * replicas
+        self._policy = policy
+        self._sched_kw = dict(sched_kw)
         self.replicas = [SimReplica(service_s=float(service_s[i]),
                                     slots=int(slots[i]), policy=policy,
                                     precision=precisions[i],
                                     **sched_kw)
                          for i in range(replicas)]
         self.router = ReplicaRouter(self.replicas, steal=steal, route=route)
+        self.halted: set = set()     # frozen cards: stop serving, queue
+        #                              accumulates until the detector fires
         if route == "feedback":
             # seed the EWMAs with the replicas' configured service times,
             # as the live drive loops would measure them — the sim steps
@@ -159,13 +175,13 @@ class FleetSim:
         return t
 
     def tick(self) -> List[Ticket]:
-        """Advance the virtual clock one dt: every live replica completes
-        due work and admits, then one stealing round. Returns tickets
-        completed this tick."""
+        """Advance the virtual clock one dt: every live, un-halted
+        replica completes due work and admits, then one stealing round.
+        Returns tickets completed this tick."""
         self.now += self.dt
         done: List[Ticket] = []
         for i, r in enumerate(self.replicas):
-            if not self.router.dead[i]:
+            if not self.router.dead[i] and i not in self.halted:
                 done.extend(r.step(self.now))
         self.router.maybe_steal(now=self.now)
         self.completed.extend(done)
@@ -175,6 +191,31 @@ class FleetSim:
         """Kill replica ``idx`` at virtual ``now``: fault drain through
         the real router path. Returns tickets re-homed."""
         return self.router.drain_replica(idx, now=self.now)
+
+    def halt(self, idx: int):
+        """Freeze replica ``idx`` WITHOUT draining it — the real card-
+        death shape: the card stops serving (and, under the elastic
+        harness, stops heartbeating) but its queue and in-flight slots
+        keep their tickets until the failure detector declares it dead
+        and the controller runs the drain. ``fail`` is the
+        drain-immediately path; ``halt`` is drain-after-detection."""
+        self.halted.add(idx)
+
+    def replica_factory(self, *, service_s: float = 0.01, slots: int = 1,
+                        precision: str = "fp32"):
+        """Factory for the FleetController's scale-up path: each call
+        builds a fresh SimReplica with these knobs and appends it to the
+        sim's conservation tracking (the caller — ``add_replica`` —
+        registers it with the router, so sim and router indices stay
+        aligned: the factory must only be called as the add_replica
+        argument)."""
+        def make() -> SimReplica:
+            r = SimReplica(service_s=service_s, slots=slots,
+                           policy=self._policy, precision=precision,
+                           **self._sched_kw)
+            self.replicas.append(r)
+            return r
+        return make
 
     def drain(self, max_ticks: int = 100_000):
         """Tick until the fleet is empty (bounded — a conservation bug
@@ -224,3 +265,255 @@ class FleetSim:
 
     def served_per_replica(self) -> List[int]:
         return [r.telemetry.served for r in self.replicas]
+
+
+# --------------------------------------------------------------------------
+# Production-shaped traces (ISSUE 7): seeded arrival processes with the
+# load shapes the paper's deployment faces — diurnal curves, flash
+# crowds, hot-keyed bursts, multi-tenant priority mixes. All virtual-time
+# and bit-deterministic under a fixed seed.
+# --------------------------------------------------------------------------
+
+@dataclass
+class Arrival:
+    """One trace event: submit at virtual time ``t``."""
+    t: float
+    size: int = 1
+    priority: int = 0
+    pin: Optional[int] = None        # session-affinity / hot-key target
+    slo_ms: Optional[float] = None
+
+
+def _poisson_times(rng, n: int, mean_gap_s) -> np.ndarray:
+    """Cumulative arrival times of a Poisson process whose mean gap may
+    vary per arrival (``mean_gap_s`` scalar or length-n array)."""
+    return np.cumsum(rng.exponential(1.0, n) * mean_gap_s)
+
+
+def diurnal_trace(n: int, *, base_gap_s: float = 0.01, amp: float = 0.75,
+                  periods: float = 2.0, seed: int = 0,
+                  slo_ms: Optional[float] = None) -> List[Arrival]:
+    """Diurnal load curve: arrival rate swings sinusoidally by ±``amp``
+    around the base rate over ``periods`` full day-cycles — the paper's
+    production reality that a fixed fleet must be provisioned for the
+    peak and then burns idle replicas all trough long."""
+    rng = np.random.default_rng(seed)
+    phase = 2.0 * np.pi * periods * np.arange(n) / n
+    mean = base_gap_s / (1.0 + amp * np.sin(phase))
+    times = _poisson_times(rng, n, mean)
+    sizes = rng.integers(1, 4, n)
+    return [Arrival(float(t), size=int(s), slo_ms=slo_ms)
+            for t, s in zip(times, sizes)]
+
+
+def flash_crowd_trace(n: int, *, base_gap_s: float = 0.01,
+                      crowd_x: float = 8.0, start: float = 0.4,
+                      end: float = 0.6, seed: int = 0,
+                      slo_ms: Optional[float] = None) -> List[Arrival]:
+    """Flash crowd: steady base load, then the arrival rate jumps by
+    ``crowd_x`` for the middle [start, end) fraction of the trace — the
+    scale-up trigger scenario (a fixed fleet sheds; an elastic one adds
+    replicas and sheds less at the same offered load)."""
+    rng = np.random.default_rng(seed)
+    mean = np.full(n, base_gap_s)
+    mean[int(start * n):int(end * n)] /= crowd_x
+    times = _poisson_times(rng, n, mean)
+    sizes = rng.integers(1, 4, n)
+    return [Arrival(float(t), size=int(s), slo_ms=slo_ms)
+            for t, s in zip(times, sizes)]
+
+
+def hot_burst_trace(n: int, *, base_gap_s: float = 0.01, hot: int = 0,
+                    skew: float = 0.8, start: float = 0.3,
+                    end: float = 0.5, crowd_x: float = 3.0, seed: int = 0,
+                    slo_ms: Optional[float] = None) -> List[Arrival]:
+    """Hot-keyed burst: during the burst window the rate rises by
+    ``crowd_x`` AND ``skew`` of arrivals pin to one replica (session
+    affinity the router cannot rebalance at submit time) — stealing and
+    scale-up must both engage."""
+    rng = np.random.default_rng(seed)
+    mean = np.full(n, base_gap_s)
+    lo, hi = int(start * n), int(end * n)
+    mean[lo:hi] /= crowd_x
+    times = _poisson_times(rng, n, mean)
+    pins = [hot if lo <= i < hi and rng.random() < skew else None
+            for i in range(n)]
+    return [Arrival(float(t), size=1, pin=p, slo_ms=slo_ms)
+            for t, p in zip(times, pins)]
+
+
+def multi_tenant_trace(n: int, *, base_gap_s: float = 0.01,
+                       mix: Sequence[float] = (0.25, 0.5, 0.25),
+                       slos_ms: Sequence[Optional[float]] = (200.0, 1000.0,
+                                                            None),
+                       seed: int = 0) -> List[Arrival]:
+    """Multi-tenant priority mix: classes 0..k-1 drawn per ``mix``, each
+    with its own SLO (None = best-effort batch) — the paper's mixed
+    latency-critical + batch production traffic."""
+    rng = np.random.default_rng(seed)
+    times = _poisson_times(rng, n, base_gap_s)
+    classes = rng.choice(len(mix), n, p=np.asarray(mix) / sum(mix))
+    sizes = rng.integers(1, 4, n)
+    return [Arrival(float(t), size=int(s), priority=int(c),
+                    slo_ms=slos_ms[int(c)])
+            for t, s, c in zip(times, sizes, classes)]
+
+
+# --------------------------------------------------------------------------
+# Elastic scenario driver: FleetSim + FleetController, closed loop.
+# --------------------------------------------------------------------------
+
+def run_elastic(sim: FleetSim, controller, arrivals: Sequence[Arrival], *,
+                kills: Sequence[Tuple[float, int]] = (),
+                control_every: int = 1,
+                max_ticks: int = 2_000_000) -> dict:
+    """Drive ``sim`` through ``arrivals`` with ``controller`` in the
+    loop: each tick every live, un-halted replica heartbeats, then
+    (every ``control_every`` ticks) the controller steps — draining
+    newly-declared failures and scaling through the one drain path.
+    ``kills`` freezes replicas at (virtual time, index): a frozen card
+    stops serving AND heartbeating, so only the failure detector can
+    notice it. Ticks until the trace is fully offered and the fleet is
+    drained; asserts fleet-wide conservation; returns the scenario
+    metrics (per-tick live-replica counts included, so callers can
+    price capacity burn per load window)."""
+    mon = controller.monitor
+    pending_kills = sorted(kills)
+    live_per_tick: List[int] = []
+    i = ticks = 0
+    while i < len(arrivals) or sim.router.has_work:
+        if ticks >= max_ticks:
+            raise RuntimeError(
+                f"elastic run not drained after {max_ticks} ticks "
+                f"(pending {[r.scheduler.depth for r in sim.replicas]})")
+        while i < len(arrivals) and arrivals[i].t <= sim.now:
+            a = arrivals[i]
+            pin = a.pin
+            if pin is not None and (pin >= len(sim.router.dead)
+                                    or sim.router.dead[pin]
+                                    or pin in sim.halted):
+                pin = None           # the hot session re-connects elsewhere
+            sim.submit(size=a.size, priority=a.priority,
+                       slo_ms=a.slo_ms, pin=pin)
+            i += 1
+        sim.tick()
+        while pending_kills and pending_kills[0][0] <= sim.now:
+            sim.halt(pending_kills.pop(0)[1])
+        for j in sim.router.alive:
+            if j in sim.halted or j not in mon.hosts:
+                continue
+            if mon.hosts[j].alive:
+                mon.beat(j)
+        ticks += 1
+        if ticks % control_every == 0:
+            controller.step(sim.now)
+        live_per_tick.append(
+            len([j for j in sim.router.alive if j not in sim.halted]))
+    sim.assert_conserved()
+    accepted = sum(1 for t in sim.submitted if not t.shed)
+    return {"submitted": len(sim.submitted),
+            "fleet": sim.fleet_summary(),
+            "accepted": accepted,
+            "completed": len(sim.completed),
+            "shed": len(sim.shed),
+            "lost": accepted - len(sim.completed),
+            "ticks": ticks,
+            "scale_ups": controller.scale_ups,
+            "scale_downs": controller.scale_downs,
+            "faults_drained": controller.faults_drained,
+            "live_per_tick": live_per_tick,
+            "replica_ticks": int(sum(live_per_tick)),
+            "peak_live": max(live_per_tick) if live_per_tick else 0,
+            "min_live": min(live_per_tick) if live_per_tick else 0}
+
+
+def run_fixed(sim: FleetSim, arrivals: Sequence[Arrival], *,
+              max_ticks: int = 2_000_000) -> dict:
+    """The fixed-fleet control arm: the same arrival loop as
+    ``run_elastic`` with no controller — whatever the sim starts with
+    serves the whole trace. Comparable metrics dict (live count is
+    constant by construction)."""
+    i = ticks = 0
+    while i < len(arrivals) or sim.router.has_work:
+        if ticks >= max_ticks:
+            raise RuntimeError(f"fixed run not drained in {max_ticks} ticks")
+        while i < len(arrivals) and arrivals[i].t <= sim.now:
+            a = arrivals[i]
+            sim.submit(size=a.size, priority=a.priority,
+                       slo_ms=a.slo_ms, pin=a.pin)
+            i += 1
+        sim.tick()
+        ticks += 1
+    sim.assert_conserved()
+    accepted = sum(1 for t in sim.submitted if not t.shed)
+    n = len(sim.replicas)
+    return {"submitted": len(sim.submitted),
+            "fleet": sim.fleet_summary(),
+            "accepted": accepted,
+            "completed": len(sim.completed),
+            "shed": len(sim.shed),
+            "lost": accepted - len(sim.completed),
+            "ticks": ticks,
+            "replica_ticks": n * ticks,
+            "peak_live": n, "min_live": n}
+
+
+def elastic_vs_fixed(n: int = 4_000, *, base_gap_s: float = 0.006,
+                     crowd_x: float = 6.0, crowd_start: float = 0.25,
+                     crowd_end: float = 0.40, service_s: float = 0.01,
+                     fixed_replicas: int = 4, initial_replicas: int = 2,
+                     min_replicas: int = 2, max_replicas: int = 8,
+                     max_queue: int = 32, dt: float = 0.005,
+                     seed: int = 0, slo_ms: float = 500.0,
+                     heartbeat_timeout_s: float = 0.05,
+                     cooldown_s: float = 0.2, down_hold_s: float = 0.5,
+                     kills: Sequence[Tuple[float, int]] = (),
+                     kill_at_frac: Optional[float] = None,
+                     kill_idx: int = 0) -> dict:
+    """The elastic-fleet headline scenario (bench ``elastic`` section +
+    perf-gate ``elastic`` scenario): the SAME seeded flash-crowd trace
+    through (a) a fixed mid-sized fleet and (b) an autoscaled fleet
+    under a FleetController. The elastic fleet must shed less at the
+    peak (it can grow past the fixed size) AND burn fewer
+    replica-seconds over the run (it shrinks through the trough) —
+    both bit-deterministic, so the perf gate can hold tight thresholds.
+    """
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+    from repro.serving.controller import ControllerConfig, FleetController
+
+    arrivals = flash_crowd_trace(n, base_gap_s=base_gap_s,
+                                 crowd_x=crowd_x, start=crowd_start,
+                                 end=crowd_end, seed=seed, slo_ms=slo_ms)
+    if kill_at_frac is not None:
+        # freeze a card at this fraction of the trace (elastic arm only —
+        # the fixed arm has no detector, so a frozen card would wedge it)
+        kills = list(kills) + [(arrivals[int(kill_at_frac * n)].t,
+                                kill_idx)]
+    fixed_sim = FleetSim(replicas=fixed_replicas, service_s=service_s,
+                         slots=1, dt=dt, seed=seed, max_queue=max_queue)
+    fixed = run_fixed(fixed_sim, arrivals)
+
+    sim = FleetSim(replicas=initial_replicas, service_s=service_s,
+                   slots=1, dt=dt, seed=seed, max_queue=max_queue)
+    monitor = HeartbeatMonitor(num_hosts=initial_replicas,
+                               timeout_s=heartbeat_timeout_s,
+                               clock=lambda: sim.now)
+    controller = FleetController(
+        sim.router, sim.replica_factory(service_s=service_s), monitor,
+        ControllerConfig(min_replicas=min_replicas,
+                         max_replicas=max_replicas, slo_ms=slo_ms,
+                         cooldown_s=cooldown_s, down_hold_s=down_hold_s))
+    elastic = run_elastic(sim, controller, arrivals, kills=kills)
+
+    trough = elastic["live_per_tick"][int(0.9 * len(
+        elastic["live_per_tick"])):]
+    return {"arrivals": arrivals, "fixed": fixed, "elastic": elastic,
+            "controller": controller,
+            "shed_improved": elastic["shed"] < fixed["shed"],
+            "capacity_improved": (elastic["replica_ticks"] * dt
+                                  < fixed["replica_ticks"] * dt),
+            "replica_seconds_fixed": fixed["replica_ticks"] * dt,
+            "replica_seconds_elastic": elastic["replica_ticks"] * dt,
+            "trough_live_mean": (sum(trough) / len(trough))
+            if trough else 0.0,
+            "zero_lost": fixed["lost"] == 0 and elastic["lost"] == 0}

@@ -108,8 +108,50 @@ class ReplicaRouter:
         self.dead = [False] * len(self.replicas)  # drained fault replicas
         self.steals_per_replica = [0] * len(self.replicas)  # by the THIEF
         self.rehomed = [0] * len(self.replicas)  # drain re-homes received
+        # per-replica clock offset vs the fleet clock (local_now = fleet_now
+        # + offset). 0 for replicas sharing the fleet clock; a late-joining
+        # replica on its own timeline declares its offset at add_replica
+        # time so tickets re-homed onto it are rebased (age and deadline
+        # slack preserved on the destination clock — Scheduler.absorb's
+        # from_now contract)
+        self.clock_offset = [0.0] * len(self.replicas)
         self._rr = 0                             # round-robin tie cursor
         self._serving_s = 0.0
+
+    def add_replica(self, replica: Any, *, clock_offset: float = 0.0,
+                    now: Optional[float] = None) -> int:
+        """Elastic scale-up: register a fresh replica (engine-factory
+        output) as a live routing target and return its index. The new
+        replica starts with an empty queue, an unmeasured EWMA (it
+        inherits the fleet mean until its first measurement), and takes
+        traffic immediately; cross-replica stealing rebalances existing
+        backlog onto it on the next steal round — scale-up needs no
+        dedicated work-movement path. ``clock_offset`` is the replica's
+        local-clock offset vs the fleet clock for late joiners running
+        their own timeline (0 = shared clock); its telemetry records one
+        ``scaled_in`` so the fleet surface counts joins."""
+        self.replicas.append(replica)
+        self.precisions.append(getattr(replica, "precision", "fp32"))
+        self.ewma_s.append(0.0)
+        self.routed.append(0)
+        self.dead.append(False)
+        self.steals_per_replica.append(0)
+        self.rehomed.append(0)
+        self.clock_offset.append(clock_offset)
+        replica.telemetry.record_scaled_in()
+        return len(self.replicas) - 1
+
+    def _absorb_kw(self, j: int, now: Optional[float]) -> dict:
+        """Keyword args for ``Scheduler.absorb`` when re-homing tickets
+        carried on the fleet clock onto replica ``j``: a same-clock
+        replica takes the stamps verbatim; a late joiner with a nonzero
+        ``clock_offset`` gets the from_now rebase so ticket age and
+        deadline slack survive the timeline change."""
+        off = self.clock_offset[j]
+        if not off:
+            return {"now": now}
+        fleet_now = time.perf_counter() if now is None else now
+        return {"now": fleet_now + off, "from_now": fleet_now}
 
     # ---- routing ---------------------------------------------------------
     def load(self, i: int) -> int:
@@ -288,7 +330,7 @@ class ReplicaRouter:
                 k, now=now, eligible=eligible)
             if not stolen:
                 continue
-            thief.scheduler.absorb(stolen, now=now)
+            thief.scheduler.absorb(stolen, **self._absorb_kw(i, now))
             self.steals_per_replica[i] += len(stolen)
             moved += len(stolen)
         return moved
@@ -334,7 +376,8 @@ class ReplicaRouter:
                 else:
                     downgrade = True
             j = min(cand, key=lambda i: (self.load(i), i))
-            self.replicas[j].scheduler.absorb([t], now=now, record=False)
+            self.replicas[j].scheduler.absorb(
+                [t], record=False, **self._absorb_kw(j, now))
             if downgrade:
                 self.replicas[j].telemetry.record_precision_rehome()
             self.rehomed[j] += 1

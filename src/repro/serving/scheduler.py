@@ -501,6 +501,12 @@ class Scheduler:
                 t.enqueue_t += dt
                 if t.deadline_t is not None:
                     t.deadline_t += dt
+                if t.admit_t is not None:
+                    # a rebased ticket that somehow carries an admission
+                    # stamp (custom eligible hooks can hand one over)
+                    # must shift it too, or the destination's service-
+                    # time observation spans two clocks
+                    t.admit_t += dt
             if record:
                 t.stolen = True
             self._pending.append(t)

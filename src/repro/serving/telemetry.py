@@ -58,6 +58,8 @@ class Telemetry:
     precision_rehomed: int = 0     # high-class tickets this replica accepted
                                    # onto a LOWER precision than the pin asked
                                    # for (no fp32 replica was live)
+    scaled_in: int = 0             # 1 if this replica joined the fleet via
+                                   # elastic scale-up (fleet merge = joins)
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -114,6 +116,12 @@ class Telemetry:
         graceful-degradation path of the precision pin (work is served
         int8 rather than dropped, and the downgrade is counted)."""
         self.precision_rehomed += n
+
+    def record_scaled_in(self, n: int = 1):
+        """This replica joined a running fleet via elastic scale-up
+        (``ReplicaRouter.add_replica``). Counted on the JOINER, so the
+        fleet merge totals how many replicas autoscaling added."""
+        self.scaled_in += n
 
     def record_ttft(self, ttft_ms: float):
         """Time-to-first-token for one request: enqueue -> first generated
@@ -265,6 +273,7 @@ class Telemetry:
                "steals": self.steals,
                "drained": self.drained,
                "precision_rehomed": self.precision_rehomed,
+               "scaled_in": self.scaled_in,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
@@ -298,6 +307,9 @@ class Telemetry:
         if self.precision_rehomed:
             lines.append(f"{self.precision_rehomed} high-class tickets "
                          f"served below their precision pin (no fp32 live)")
+        if self.scaled_in:
+            lines.append(f"{self.scaled_in} replicas joined via elastic "
+                         f"scale-up")
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")

@@ -48,3 +48,21 @@ def run_to_completion(sim: FleetSim) -> list:
     (the determinism fingerprint, together with steal attribution)."""
     sim.drain()
     return [t.payload for t in sim.completed]
+
+
+def make_controller(sim: FleetSim, *, min_replicas: int = 1,
+                    max_replicas: int = 8, cooldown_s: float = 0.2,
+                    down_hold_s: float = 0.5, timeout_s: float = 0.05,
+                    service_s: float = 0.01, **cfg_kw):
+    """Wire a FleetController to ``sim`` (PR 7 elastic tests): heartbeat
+    monitor on the sim's virtual clock, scale-up factory building
+    replicas that join the sim's conservation tracking."""
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+    from repro.serving.controller import ControllerConfig, FleetController
+    mon = HeartbeatMonitor(num_hosts=len(sim.replicas),
+                           timeout_s=timeout_s, clock=lambda: sim.now)
+    return FleetController(
+        sim.router, sim.replica_factory(service_s=service_s), mon,
+        ControllerConfig(min_replicas=min_replicas,
+                         max_replicas=max_replicas, cooldown_s=cooldown_s,
+                         down_hold_s=down_hold_s, **cfg_kw))

@@ -8,9 +8,10 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpoint import CheckpointManager
-from repro.runtime.fault_tolerance import (HeartbeatMonitor, HedgePolicy,
-                                           HostFailure, StepDeadline,
-                                           TrainSupervisor, plan_elastic_mesh,
+from repro.runtime.fault_tolerance import (DeadHostBeat, HeartbeatMonitor,
+                                           HedgePolicy, HostFailure,
+                                           StepDeadline, TrainSupervisor,
+                                           plan_elastic_mesh,
                                            simulate_hedged_latency)
 
 
@@ -60,6 +61,116 @@ def test_heartbeat_detector():
     assert mon.healthy_count() == 3
 
 
+def _mon(n=3, timeout=10.0):
+    clock = [0.0]
+    mon = HeartbeatMonitor(n, timeout_s=timeout, clock=lambda: clock[0])
+    return mon, clock
+
+
+def test_newly_failed_is_edge_triggered():
+    """Each death is reported exactly ONCE — the regression the elastic
+    controller depends on. The old ``failed_hosts()`` re-reported every
+    dead host on every poll, so a drain path wired to it would re-drain
+    the same replica forever (this assertion fails under those
+    semantics)."""
+    mon, clock = _mon()
+    clock[0] = 5.0
+    mon.beat(0)
+    mon.beat(1)
+    clock[0] = 14.0                      # host 2 never beat: 14 > 10
+    assert mon.newly_failed() == [2]
+    assert mon.newly_failed() == []      # edge: reported once, not forever
+    clock[0] = 30.0                      # now 0 and 1 are past timeout too
+    assert mon.newly_failed() == [0, 1]
+    assert mon.newly_failed() == []
+
+
+def test_unhealthy_is_pure_level_signal():
+    """``unhealthy()`` reports without declaring: polling it repeatedly
+    neither consumes the edge signal nor flips health state."""
+    mon, clock = _mon()
+    clock[0] = 12.0
+    assert mon.unhealthy() == [0, 1, 2]
+    assert mon.unhealthy() == [0, 1, 2]          # pure: no decay
+    assert all(st.alive for st in mon.hosts.values())
+    assert mon.newly_failed() == [0, 1, 2]       # edge still intact
+    assert mon.unhealthy() == [0, 1, 2]          # level keeps reporting
+    # deprecated alias is the level view
+    assert mon.failed_hosts() == mon.unhealthy()
+
+
+def test_beat_on_dead_host_raises_until_rejoin():
+    """A late beat from a declared-dead host must not silently resurrect
+    it (the controller already drained its replica); ``rejoin()`` is the
+    explicit re-admission path and stamps a fresh heartbeat."""
+    mon, clock = _mon(n=2)
+    clock[0] = 11.0
+    assert mon.newly_failed() == [0, 1]
+    with pytest.raises(DeadHostBeat):
+        mon.beat(0)
+    assert mon.unhealthy() == [0, 1]             # still dead
+    mon.rejoin(0)
+    mon.beat(0)                                  # legal again
+    assert mon.unhealthy() == [1]
+    assert mon.healthy_count() == 1
+    clock[0] = 22.0                              # times out again -> new edge
+    assert mon.newly_failed() == [0]
+
+
+def test_heartbeat_timeout_boundary():
+    """Inclusive-alive boundary: exactly timeout_s since the last beat is
+    still healthy; one tick past is dead."""
+    mon, clock = _mon(n=1)
+    clock[0] = 10.0                              # now - last == timeout_s
+    assert mon.unhealthy() == []
+    assert mon.healthy_count() == 1
+    assert mon.newly_failed() == []
+    clock[0] = 10.0 + 1e-9                       # one tick past
+    assert mon.unhealthy() == [0]
+    assert mon.newly_failed() == [0]
+
+
+def test_heartbeat_membership_add_remove():
+    mon, clock = _mon(n=1)
+    mon.add_host(7)                              # elastic scale-up
+    with pytest.raises(ValueError):
+        mon.add_host(7)                          # ids are never reused
+    clock[0] = 5.0
+    mon.beat(7)
+    mon.remove_host(0)                           # deliberate scale-down
+    clock[0] = 16.0                              # 0 would have timed out...
+    assert mon.unhealthy() == [7]                # ...but it LEFT, not died
+    assert mon.newly_failed() == [7]             # 7 (beat at 5) did die
+
+
+def test_hedge_policy_window_is_bounded_deque():
+    """``observe`` is on the per-request hot path: the window must be a
+    maxlen deque (O(1) eviction), never growing past ``window``, and the
+    hedge deadline must track the RECENT distribution."""
+    from collections import deque
+    pol = HedgePolicy(window=16)
+    assert isinstance(pol.history, deque)
+    for _ in range(100):
+        pol.observe(1.0)
+    assert len(pol.history) == 16
+    for _ in range(16):
+        pol.observe(5.0)                 # slow regime fully evicts the old
+    assert len(pol.history) == 16
+    assert pol.hedge_deadline() == 5.0
+    assert pol.should_hedge(5.1) and not pol.should_hedge(4.9)
+
+
+def test_step_deadline_uses_interpolated_median():
+    """Even-window median is interpolated (statistics.median), pinned by
+    a borderline straggler: with history [1, 1, 1, 1.4, 1.4] and k=1.5 a
+    2.0s step must flag (median 1.2 -> threshold 1.8). Taking the upper
+    of the two middle elements — the old behavior — gives median 1.4,
+    threshold 2.1, and lets it slip through."""
+    wd = StepDeadline(k=1.5)
+    flags = [wd.observe(t) for t in (1.0, 1.0, 1.0, 1.4, 1.4, 2.0)]
+    assert flags == [False, False, False, False, False, True]
+
+
 def test_elastic_plan_shrinks_to_power_of_two():
     p = plan_elastic_mesh(data=16, model=16, hosts_per_group=2,
                           failed=[5, 11, 12])
@@ -68,6 +179,34 @@ def test_elastic_plan_shrinks_to_power_of_two():
     assert p.changed
     p2 = plan_elastic_mesh(16, 16, 2, failed=[])
     assert not p2.changed
+
+
+def test_elastic_plan_whole_group_fails_once():
+    """All hosts of ONE TP group failing kills one slice, not one slice
+    per dead host — the group set is deduplicated."""
+    p = plan_elastic_mesh(data=4, model=2, hosts_per_group=2,
+                          failed=[0, 1])           # both hosts of group 0
+    assert p.new_data == 2                         # 3 surviving -> 2
+    assert p.new_model == 2
+    assert p.changed
+
+
+def test_elastic_plan_ignores_out_of_range_failures():
+    """A failed id beyond data*hosts_per_group (e.g. a spare or a
+    mis-reported host) maps to no slice and must not shrink the mesh."""
+    p = plan_elastic_mesh(data=4, model=2, hosts_per_group=2,
+                          failed=[100])
+    assert p.new_data == 4
+    assert not p.changed
+
+
+def test_elastic_plan_total_loss_clamps_to_one():
+    """Zero surviving slices still yields a valid (degenerate) mesh:
+    new_data clamps to 1 rather than 0."""
+    p = plan_elastic_mesh(data=2, model=1, hosts_per_group=1,
+                          failed=[0, 1])
+    assert p.new_data == 1
+    assert p.changed
 
 
 def test_supervisor_restarts_from_checkpoint(tmp_path, key):

@@ -24,6 +24,7 @@ def _run(script, *args, timeout=420):
     ("examples/quantization_workflow.py", ()),
     ("examples/serve_recsys.py", ("--batches", "4")),
     ("examples/serve_router.py", ()),
+    ("examples/serve_elastic.py", ()),
 ])
 def test_example_runs(script, args):
     r = _run(script, *args)

@@ -186,6 +186,49 @@ def test_drain_replica_rehomes_pending_and_marks_dead():
         router.drain_replica(1)         # nowhere left to re-home 7 tickets
 
 
+def test_add_replica_joins_live_routing_and_counts_scaled_in():
+    """Elastic scale-up (PR 7): add_replica appends every per-replica
+    array in lockstep, the join shows up in telemetry as one scaled_in,
+    and the fresh replica takes traffic immediately — no dedicated
+    warm-up or migration path."""
+    router = ReplicaRouter([_Stub(), _Stub()])
+    fresh = _Stub(precision="w8a8")
+    idx = router.add_replica(fresh)
+    assert idx == 2 and idx in router.alive and not router.dead[idx]
+    assert (len(router.ewma_s) == len(router.routed) == len(router.dead)
+            == len(router.steals_per_replica) == len(router.rehomed)
+            == len(router.clock_offset) == len(router.precisions) == 3)
+    assert router.precisions[idx] == "w8a8"
+    assert fresh.telemetry.scaled_in == 1
+    assert router.fleet_telemetry().scaled_in == 1
+    for _ in range(3):
+        router.submit("p", priority=1)  # class 1: no fp32 precision pin
+    assert router.routed == [1, 1, 1]   # least-loaded: joiner pulls weight
+
+
+def test_add_replica_late_joiner_rebases_rehomed_ticket_stamps():
+    """A late joiner on its own timeline declares clock_offset; tickets
+    re-homed onto it shift enqueue/deadline stamps by exactly that
+    offset (Scheduler.absorb from_now contract), so age and deadline
+    slack survive the timeline change. A shared-clock joiner's stamps
+    move untouched."""
+    router = ReplicaRouter([_Stub()])
+    t = router.submit("x", slo_ms=1000.0)
+    j = router.add_replica(_Stub(), clock_offset=50.0)
+    enq, dl = t.enqueue_t, t.deadline_t
+    assert router.drain_replica(0) == 1
+    assert router.rehomed[j] == 1
+    assert t.enqueue_t == pytest.approx(enq + 50.0)
+    assert t.deadline_t == pytest.approx(dl + 50.0)
+
+    same = ReplicaRouter([_Stub()])
+    t2 = same.submit("y", slo_ms=1000.0)
+    same.add_replica(_Stub())           # clock_offset defaults to 0
+    enq2, dl2 = t2.enqueue_t, t2.deadline_t
+    assert same.drain_replica(0) == 1
+    assert t2.enqueue_t == enq2 and t2.deadline_t == dl2
+
+
 def test_lm_fleet_steals_under_hot_spot_and_survives_mid_run_kill(lm_setup):
     """End-to-end through real LM engines: a hot-spot stream on replica 0
     gets stolen by idle replica 1; killing replica 0 mid-run re-homes
@@ -558,6 +601,18 @@ def _fake_payload():
                               "spread_steal": 0, "spread_no_steal": 1,
                               "p99_improved": True,
                               "spread_improved": True},
+            "elastic": {"requests": 1, "fixed_replicas": 4,
+                        "initial_replicas": 2, "max_replicas": 8,
+                        "fixed": _fake_summary(),
+                        "elastic": _fake_summary(),
+                        "controller": {"scale_ups": 1, "scale_downs": 1,
+                                       "faults_drained": 0},
+                        "shed_fixed": 2, "shed_elastic": 1,
+                        "shed_improved": True,
+                        "replica_seconds_fixed": 2.0,
+                        "replica_seconds_elastic": 1.0,
+                        "capacity_improved": True,
+                        "trough_live_mean": 2.0, "zero_lost": True},
             "quantized": {"arch": "a", "budget": 0.05,
                           "calib_disagreement": 0.0,
                           "quantized_sites": 7, "fallback_sites": 0,
@@ -600,6 +655,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["quantized"]["token_agreement"]
     del p["quantized"]["w8a8"]["precision_rehomed"]
     del p["quantized"]["fleet"]["high_on_fp32"]
+    del p["elastic"]["shed_improved"]
+    del p["elastic"]["elastic"]["scaled_in"]
+    del p["elastic"]["controller"]["faults_drained"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
@@ -614,6 +672,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "quantized.token_agreement" in msg
     assert "quantized.w8a8.precision_rehomed" in msg
     assert "quantized.fleet.high_on_fp32" in msg
+    assert "elastic.shed_improved" in msg
+    assert "elastic.elastic.scaled_in" in msg
+    assert "elastic.controller.faults_drained" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -887,3 +887,116 @@ def test_router_shed_counted_separately(seed, n):
     assert router.shed == shed
     assert router.fleet_telemetry().shed == shed
     assert sum(router.routed) == n - shed
+
+
+# ---------------------------------------------------------------------------
+# Elastic fleet controller (PR 7): scale events ride the SAME drain/absorb
+# machinery, so the fleet-wide invariants must survive the controller
+# interleaving scale-up / scale-down / fault-drain with serving.
+# ---------------------------------------------------------------------------
+
+from fleet_sim import make_controller  # noqa: E402
+from repro.serving.fleet_sim import (flash_crowd_trace,  # noqa: E402
+                                     multi_tenant_trace, run_elastic)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(20, 250),
+       crowd_x=st.floats(1.0, 8.0), kill=st.booleans())
+def test_fleet_conservation_across_scale_events(seed, n, crowd_x, kill):
+    """Ticket conservation holds across ANY interleaving of submit /
+    steal / scale-up / scale-down / missed-heartbeat drain: accepted =
+    completed exactly, nothing duplicated (run_elastic asserts the
+    multiset identity fleet-wide on exit)."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, dt=0.005,
+                   seed=seed, max_queue=16)
+    ctl = make_controller(sim, min_replicas=1, max_replicas=5)
+    arr = flash_crowd_trace(n, base_gap_s=0.006, crowd_x=crowd_x,
+                            seed=seed, slo_ms=500.0)
+    kills = [(arr[n // 2].t, 0)] if kill else []
+    m = run_elastic(sim, ctl, arr, kills=kills)
+    assert m["lost"] == 0
+    assert m["accepted"] == m["completed"]
+    assert m["submitted"] == m["completed"] + m["shed"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(20, 150))
+def test_controller_never_drains_last_live_replica(seed, n):
+    """However the load and faults land, the router keeps >= 1 live
+    replica: deliberate scale-down is refused at min_replicas, and a
+    fault on the last live replica goes replace-then-drain."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, dt=0.005,
+                   seed=seed, max_queue=16)
+    ctl = make_controller(sim, min_replicas=1, max_replicas=4)
+    arr = flash_crowd_trace(n, base_gap_s=0.01, crowd_x=2.0, seed=seed)
+    # both initial replicas die, well apart (detection is ~timeout_s)
+    m = run_elastic(sim, ctl, arr, kills=[(arr[n // 3].t, 0),
+                                          (arr[(2 * n) // 3].t, 1)])
+    assert len(sim.router.alive) >= 1
+    for d in ctl.decisions:
+        if d.action == "down":
+            assert d.live >= 1
+    assert m["lost"] == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scale_down_never_burns_last_fp32(seed):
+    """While mixed-precision class-0 pinning is active, deliberate
+    scale-down never chooses the last live fp32 replica, no matter how
+    deep the trough — the accuracy pin survives autoscaling."""
+    sim = FleetSim(replicas=3, precisions=["fp32", "w8a8", "w8a8"],
+                   service_s=0.01, slots=1, dt=0.005, seed=seed,
+                   max_queue=16)
+    ctl = make_controller(sim, min_replicas=1, max_replicas=3)
+    arr = multi_tenant_trace(120, base_gap_s=0.05, seed=seed)  # light
+    m = run_elastic(sim, ctl, arr)
+    assert ctl.scale_downs >= 1         # the trough did shrink the fleet
+    assert len(sim.router.fp32_alive) >= 1
+    # replica 0 is the ONLY fp32 here (no scale-ups under this load), so
+    # no deliberate down may ever have chosen it
+    assert all(d.replica != 0 for d in ctl.decisions
+               if d.action == "down")
+    assert m["lost"] == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_controller_decision_log_deterministic(seed):
+    """Fixed seed -> bit-identical decision log and fleet outcome: the
+    controller is a pure function of (router state, telemetry, clock)."""
+    def one():
+        sim = FleetSim(replicas=2, service_s=0.01, slots=1, dt=0.005,
+                       seed=seed, max_queue=16)
+        ctl = make_controller(sim, min_replicas=1, max_replicas=5)
+        arr = flash_crowd_trace(150, base_gap_s=0.006, crowd_x=5.0,
+                                seed=seed, slo_ms=500.0)
+        m = run_elastic(sim, ctl, arr, kills=[(arr[75].t, 0)])
+        return ([(d.now, d.action, d.replica, d.live, d.reason)
+                 for d in ctl.decisions],
+                m["completed"], m["shed"], m["replica_ticks"])
+    assert one() == one()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), crowd_x=st.floats(1.0, 10.0))
+def test_scale_decisions_respect_cooldown(seed, crowd_x):
+    """Hysteresis no-flap: any two scale decisions (and any scale
+    decision after a fault drain) are >= cooldown_s apart — the fleet
+    can never thrash faster than the cooldown window."""
+    cool = 0.3
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, dt=0.005,
+                   seed=seed, max_queue=16)
+    ctl = make_controller(sim, min_replicas=1, max_replicas=6,
+                          cooldown_s=cool)
+    arr = flash_crowd_trace(200, base_gap_s=0.006, crowd_x=crowd_x,
+                            seed=seed)
+    run_elastic(sim, ctl, arr, kills=[(arr[100].t, 0)])
+    events = [d for d in ctl.decisions
+              if d.action in ("up", "down", "replace", "drain_failed")]
+    for prev, cur in zip(events, events[1:]):
+        if cur.action in ("up", "down"):
+            assert cur.now - prev.now >= cool - 1e-9, (
+                f"{cur.action} at {cur.now} only "
+                f"{cur.now - prev.now:.3f}s after {prev.action}")
