@@ -2,7 +2,7 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic perf-gate bench ci
+	smoke-quant smoke-elastic smoke-prefix perf-gate bench ci
 
 test:
 	python -m pytest -x -q
@@ -66,6 +66,15 @@ smoke-quant:
 smoke-elastic:
 	python -m repro.launch.serve --elastic-smoke
 
+# prefix-cache smoke (PR 8): populate the content-hash prefix cache
+# with a hot-system-prompt trace, replay it through the warm cache, and
+# assert nonzero hits with every output token-identical to a cold
+# engine serving the same trace
+smoke-prefix:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --prefill-chunk 16 \
+	    --prefix-cache 16 --verify-prefix
+
 # perf-regression gate: named deterministic scenarios vs the bounds in
 # results/PERF_REFERENCES.json — exits 1 loudly on any violation
 perf-gate:
@@ -75,4 +84,4 @@ bench:
 	python -m benchmarks.run --only serving
 
 ci: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic perf-gate bench
+	smoke-quant smoke-elastic smoke-prefix perf-gate bench

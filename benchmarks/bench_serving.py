@@ -83,6 +83,23 @@ both call it):
   mixed-precision router pin must put every class-0 request on the
   fp32 replica (``high_on_fp32``) with ``zero_lost`` and no
   ``precision_rehomed`` degradations while fp32 capacity exists.
+- ``prefix_cache``: the PR 8 TTFT cliff. A timed hot-system-prompt
+  stream (every prompt shares one ``prefix_tokens``-token prefix) runs
+  cold (cache empty) and warm (every admission hits the cached prefix
+  and restores prefill from its snapshot) at the SAME offered load on
+  the same warmed engine: ``cold``/``hit`` (summary dicts, median-of-3
+  by TTFT p99), ``ttft_hit_ratio`` (hit p99 / cold p99 — must be < 1),
+  ``ttft_hit_improved``, ``token_identical`` (hit outputs must match a
+  cold engine token for token — the final chunk always recomputes, so
+  this is exact, not a bound), ``prefix_hits``.
+- ``paging``: host-RAM paging lifts the slot bound on concurrency. A
+  2-slot engine with ``page_host=True`` serves ``sessions`` (> slots)
+  concurrent sessions: ``paged``/``reference`` (summary dicts; the
+  reference engine has ``reference_slots`` = sessions slots),
+  ``token_identical`` (outputs must match the big-slot engine exactly),
+  ``zero_lost``, ``paged_out``/``paged_in`` (real page traffic, equal —
+  every parked session faulted back), ``partition_ok`` (the
+  free|active|prefilling partition held at every tick).
 """
 from __future__ import annotations
 
@@ -109,7 +126,8 @@ SUMMARY_KEYS = frozenset({
     "served", "qps", "steps", "prefills", "prefill_batches",
     "total_tokens", "compile_count", "sla_miss_frac", "shed",
     "continuations", "steals", "drained", "precision_rehomed",
-    "scaled_in", "mean_queue_depth",
+    "scaled_in", "mean_queue_depth", "prefix_hits", "paged_out",
+    "paged_in", "migrated",
     "latency_ms_p50", "latency_ms_p95", "latency_ms_p99",
     "latency_ms_max", "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
 })
@@ -119,7 +137,8 @@ def validate_payload(payload: Dict) -> None:
     """Raise ValueError unless ``payload`` matches the documented schema."""
     missing = []
     for section in ("lm", "dlrm", "router", "overload", "chunked_prefill",
-                    "work_stealing", "elastic", "quantized"):
+                    "work_stealing", "elastic", "quantized",
+                    "prefix_cache", "paging"):
         if section not in payload:
             missing.append(section)
     for section in ("lm", "dlrm"):
@@ -200,6 +219,24 @@ def validate_payload(payload: Dict) -> None:
               "high_on_fp32", "zero_lost", "precision_rehomed"):
         if k not in qf:
             missing.append(f"quantized.fleet.{k}")
+    pc = payload.get("prefix_cache", {})
+    for k in ("arch", "requests", "prefix_tokens", "prefill_chunk",
+              "offered_load_ms", "cold", "hit", "ttft_hit_ratio",
+              "ttft_hit_improved", "token_identical", "prefix_hits"):
+        if k not in pc:
+            missing.append(f"prefix_cache.{k}")
+    for mode in ("cold", "hit"):
+        for k in sorted(SUMMARY_KEYS - set(pc.get(mode, {}))):
+            missing.append(f"prefix_cache.{mode}.{k}")
+    pg = payload.get("paging", {})
+    for k in ("arch", "sessions", "slots", "reference_slots", "paged",
+              "reference", "token_identical", "zero_lost", "paged_out",
+              "paged_in", "partition_ok"):
+        if k not in pg:
+            missing.append(f"paging.{k}")
+    for mode in ("paged", "reference"):
+        for k in sorted(SUMMARY_KEYS - set(pg.get(mode, {}))):
+            missing.append(f"paging.{mode}.{k}")
     if missing:
         raise ValueError("BENCH_serving.json schema violation; missing: "
                          + ", ".join(missing))
@@ -789,6 +826,131 @@ def _quantized_summary():
             "ttft_p99_no_worse": ttft["w8a8"] <= ttft["fp32"]}
 
 
+# ---- prefix cache: the TTFT cliff on hot system prompts (PR 8) ------------
+
+_PC_PREFIX_TOKENS = 256    # the shared system prompt (4 cached chunks)
+_PC_LOAD = 40              # requests per timed pass
+_PC_CHUNK = 64
+_PC_KW = dict(batch_slots=4, max_len=512, prefill_buckets=(16, 64, 320),
+              prefill_chunk=_PC_CHUNK)
+
+
+def _pc_trace(cfg):
+    """Hot-system-prompt stream: every request is the SAME 256-token
+    shared prefix plus a short unique suffix — the production shape the
+    prefix cache exists for (one system prompt, many user turns). The
+    suffix keeps the final chunk unique, so a hit restores the 4 cached
+    prefix chunks and recomputes only the tail chunk."""
+    rng = np.random.default_rng(31)
+    shared = rng.integers(0, cfg.vocab_size, _PC_PREFIX_TOKENS)
+    return [Request(i, np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(8, 16)))])
+                .astype(np.int32), max_new_tokens=3)
+            for i in range(_PC_LOAD)]
+
+
+def _pc_median(eng, cfg, gap_ms, trials=3):
+    outs = [_timed_pass(eng, _pc_trace(cfg), gap_ms) for _ in range(trials)]
+    outs.sort(key=lambda s: s["ttft_ms_p99"])
+    return outs[len(outs) // 2]
+
+
+def _prefix_cache_summary():
+    """Cold vs hit prefill on the hot-system-prompt stream at the SAME
+    offered load (median-of-3 timed passes each). The cold engine runs
+    every request's full 5-chunk prefill; the warm engine's cache holds
+    the shared prefix after a populate pass, so every admission restores
+    4 chunks from snapshot and computes one. The TTFT-p99 cliff is the
+    claim; the guardrail is exactness — hit outputs must be
+    token-identical to the cold engine's (the final chunk always
+    recomputes, so the first emitted token goes through identical
+    math)."""
+    cfg = _chunk_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cold_eng = InferenceEngine(cfg, params, **_PC_KW)
+    warm_eng = InferenceEngine(cfg, params, prefix_cache=32, **_PC_KW)
+    cold_ref = _pc_trace(cfg)
+    cold_eng.run(cold_ref)              # warm compiles AND the reference
+    warm_eng.run(_pc_trace(cfg))        # compiles + populates the cache
+
+    cal = _timed_pass(cold_eng, _pc_trace(cfg), 0.0)
+    mean_ms = 1e3 / max(cal["qps"], 1e-6)
+    gap_ms = 2.2 * mean_ms
+
+    cold = _pc_median(cold_eng, cfg, gap_ms)
+    hit = _pc_median(warm_eng, cfg, gap_ms)
+
+    got = _pc_trace(cfg)
+    warm_eng.telemetry.reset_serving_stats()
+    warm_eng.run(got)
+    identical = all(a.output == b.output for a, b in zip(got, cold_ref))
+    assert identical, "prefix-cache hit outputs diverged from cold prefill"
+    assert hit["prefix_hits"] >= _PC_LOAD, \
+        "warm pass must hit the cache on every admission"
+    return {"arch": "deepseek-7b", "requests": _PC_LOAD,
+            "prefix_tokens": _PC_PREFIX_TOKENS, "prefill_chunk": _PC_CHUNK,
+            "offered_load_ms": gap_ms, "cold": cold, "hit": hit,
+            "ttft_hit_ratio": hit["ttft_ms_p99"]
+                / max(cold["ttft_ms_p99"], 1e-9),
+            "ttft_hit_improved": hit["ttft_ms_p99"] < cold["ttft_ms_p99"],
+            "token_identical": identical,
+            "prefix_hits": hit["prefix_hits"]}
+
+
+# ---- host-RAM paging: slot count stops bounding concurrency (PR 8) --------
+
+_PG_SESSIONS = 6
+_PG_SLOTS = 2
+
+
+def _paging_summary():
+    """A 2-slot engine with host paging serves 6 concurrent sessions —
+    long-idle active slots park to host RAM through the staged snapshot
+    path and fault back on their next token — with ZERO loss and outputs
+    token-identical to a 6-slot engine on the same trace. Correctness,
+    not latency, is the claim (each page round-trip is a real
+    host<->device copy)."""
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    kw = dict(prefill_chunk=8, max_len=64, prefill_buckets=(8, 16, 32, 48))
+    lens = (40, 5, 9, 30, 3, 12)
+
+    def trace():
+        rng = np.random.default_rng(9)
+        return [Request(i, rng.integers(0, cfg.vocab_size, l)
+                        .astype(np.int32), max_new_tokens=4)
+                for i, l in enumerate(lens)]
+
+    big = InferenceEngine(cfg, params, batch_slots=_PG_SESSIONS, **kw)
+    ref = trace()
+    big.run(ref)
+    eng = InferenceEngine(cfg, params, batch_slots=_PG_SLOTS,
+                          page_host=True, **kw)
+    got = trace()
+    for r in got:
+        eng.submit(r)
+    partition_ok = True
+    while eng.has_work:
+        eng.step_once()
+        try:
+            eng.states.check_partition()
+        except AssertionError:
+            partition_ok = False
+    s = eng.telemetry.summary()
+    identical = all(a.output == b.output for a, b in zip(got, ref))
+    assert identical, "paged outputs diverged from the big-slot engine"
+    assert s["paged_out"] > 0, "no page traffic: the bench measured nothing"
+    return {"arch": "deepseek-7b", "sessions": _PG_SESSIONS,
+            "slots": _PG_SLOTS, "reference_slots": _PG_SESSIONS,
+            "paged": s, "reference": big.telemetry.summary(),
+            "token_identical": identical,
+            "zero_lost": all(r.done for r in got)
+                and s["served"] == _PG_SESSIONS,
+            "paged_out": s["paged_out"], "paged_in": s["paged_in"],
+            "partition_ok": partition_ok}
+
+
 def run() -> List[Row]:
     lm = _lm_summary()
     dlrm = _dlrm_summary()
@@ -798,9 +960,12 @@ def run() -> List[Row]:
     stealing = _work_stealing_summary()
     elastic = _elastic_summary()
     quantized = _quantized_summary()
+    prefix = _prefix_cache_summary()
+    paging = _paging_summary()
     emit({"lm": lm, "dlrm": dlrm, "router": router, "overload": overload,
           "chunked_prefill": chunked, "work_stealing": stealing,
-          "elastic": elastic, "quantized": quantized})
+          "elastic": elastic, "quantized": quantized,
+          "prefix_cache": prefix, "paging": paging})
     rows = []
     for name, s in (("lm", lm), ("dlrm", dlrm),
                     ("router_single", router["single"]),
@@ -858,6 +1023,24 @@ def run() -> List[Row]:
         f"capacity_improved={elastic['capacity_improved']};"
         f"ups={ec['scale_ups']};downs={ec['scale_downs']};"
         f"zero_lost={elastic['zero_lost']};measured=true"))
+    rows.append(Row(
+        "serving/prefix_cache",
+        prefix["hit"]["ttft_ms_p99"] * 1e3,
+        f"cold_ttft_p99_ms={prefix['cold']['ttft_ms_p99']:.1f};"
+        f"hit_ttft_p99_ms={prefix['hit']['ttft_ms_p99']:.1f};"
+        f"hit_ratio={prefix['ttft_hit_ratio']:.3f};"
+        f"improved={prefix['ttft_hit_improved']};"
+        f"token_identical={prefix['token_identical']};"
+        f"hits={prefix['prefix_hits']};"
+        f"prefix_tokens={prefix['prefix_tokens']};measured=true"))
+    rows.append(Row(
+        "serving/paging",
+        paging["paged"]["latency_ms_p50"] * 1e3,
+        f"sessions={paging['sessions']};slots={paging['slots']};"
+        f"paged_out={paging['paged_out']};paged_in={paging['paged_in']};"
+        f"token_identical={paging['token_identical']};"
+        f"zero_lost={paging['zero_lost']};"
+        f"partition_ok={paging['partition_ok']};measured=true"))
     qf = quantized["fleet"]
     rows.append(Row(
         "serving/quantized",

@@ -11,10 +11,10 @@ Scenario design: everything that CAN run on the deterministic
 virtual-clock fleet sim does (``router`` / ``steal`` / ``elastic``),
 because bit-determinism is what lets the reference hold TIGHT bounds —
 a sim metric that moves moved because the code changed, not because the
-CI box was noisy. The ``chunked`` scenario is wall-clock (real engines)
-by nature, so its bounds come from the checked-in
-``results/BENCH_serving.json`` numbers instead and only the boolean
-improvement claims are enforced here.
+CI box was noisy. The ``chunked`` and ``prefix`` scenarios are
+wall-clock (real engines) by nature, so their bounds come from the
+checked-in ``results/BENCH_serving.json`` numbers instead and only the
+boolean claims plus the recorded tails/ratios are enforced here.
 
 Reference format (``results/PERF_REFERENCES.json``)::
 
@@ -128,7 +128,8 @@ def scenario_elastic() -> Dict[str, float]:
     nothing across every scale/drain event."""
     from repro.serving.fleet_sim import elastic_vs_fixed
     r = elastic_vs_fixed()
-    return {"shed_elastic": r["elastic"]["shed"],
+    return {"p99_ms": r["elastic"]["fleet"]["latency_ms_p99"],
+            "shed_elastic": r["elastic"]["shed"],
             "shed_ratio": r["elastic"]["shed"]
             / max(r["fixed"]["shed"], 1),
             "replica_seconds": r["replica_seconds_elastic"],
@@ -154,11 +155,27 @@ def scenario_chunked() -> Dict[str, float]:
                 chunk["stateful"]["token_identical"]}
 
 
+def scenario_prefix() -> Dict[str, float]:
+    """Prefix-cache claims from the checked-in bench JSON (wall-clock on
+    real engines, like ``chunked``): the hit-vs-cold TTFT ratio must
+    stay under its bound — a regression here means restored prefixes
+    stopped skipping prefill work — and hits must stay token-identical
+    (the correctness half of the TTFT cliff)."""
+    with open(BENCH_PATH) as f:
+        payload = json.load(f)
+    pc = payload["prefix_cache"]
+    return {"ttft_hit_ratio": pc["ttft_hit_ratio"],
+            "hit_ttft_p99_ms": pc["hit"]["ttft_ms_p99"],
+            "ttft_hit_improved": pc["ttft_hit_improved"],
+            "token_identical": pc["token_identical"]}
+
+
 SCENARIOS: Dict[str, Callable[[], Dict[str, float]]] = {
     "steal": scenario_steal,
     "router": scenario_router,
     "elastic": scenario_elastic,
     "chunked": scenario_chunked,
+    "prefix": scenario_prefix,
 }
 
 

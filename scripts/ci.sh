@@ -34,6 +34,9 @@ make smoke-quant
 echo "== elastic-fleet smoke: flash crowd scale-up/down + fault drain =="
 make smoke-elastic
 
+echo "== prefix-cache smoke: warm-cache replay, token-identical hits =="
+make smoke-prefix
+
 echo "== perf-regression gate (results/PERF_REFERENCES.json) =="
 make perf-gate
 

@@ -97,6 +97,44 @@ def command_batched_transfer(batch: SparseBatch,
     return out, lens_dev
 
 
+def snapshot_device_get(tree, stats: Optional[TransferStats] = None,
+                        full_bytes: Optional[int] = None):
+    """Device->host leg of the sequence-snapshot path (PR 8): ship an
+    arbitrary pytree of device rows to host numpy in ONE batched
+    ``device_get`` (command batching — one sync for all leaves, not one
+    per cache leaf). ``full_bytes`` is what naive whole-row extraction
+    would have shipped; the difference is the partial-transfer saving
+    from slicing positional leaves to the written prefix. Returns the
+    host tree; stats accounting mirrors ``command_batched_transfer``."""
+    host = jax.device_get(tree)
+    if stats is not None:
+        leaves = jax.tree.leaves(host)
+        partial = sum(np.asarray(x).nbytes for x in leaves)
+        stats.bytes_partial += partial
+        stats.bytes_full += full_bytes if full_bytes is not None else partial
+        stats.num_transfers_naive += len(leaves)
+        stats.num_transfers_batched += 1
+    return host
+
+
+def snapshot_device_put(tree, stats: Optional[TransferStats] = None,
+                        device=None):
+    """Host->device leg of snapshot restore: one batched ``device_put``
+    of the zero-padded row tree (the device-side slot scatter is the
+    engine's existing donated slot-write executable). The restore ships
+    full rows — the padding is the price of the static slot layout — so
+    partial == full here; the saving was taken on the snapshot leg."""
+    dev = jax.device_put(tree, device)
+    if stats is not None:
+        leaves = jax.tree.leaves(tree)
+        nbytes = sum(np.asarray(x).nbytes for x in leaves)
+        stats.bytes_partial += nbytes
+        stats.bytes_full += nbytes
+        stats.num_transfers_naive += len(leaves)
+        stats.num_transfers_batched += 1
+    return dev
+
+
 def naive_transfer(batch: SparseBatch,
                    stats: Optional[TransferStats] = None,
                    device=None) -> Tuple[jax.Array, jax.Array]:

@@ -24,6 +24,12 @@ SSM, RG-LRU, hybrids — the SequenceStateManager carries per-slot state
 across chunk boundaries, PR 5); ``--verify-chunked`` replays the same
 trace monolithically and asserts token-identical outputs (the CI smoke
 runs it on deepseek-7b and on the recurrentgemma-9b stateful hybrid).
+``--prefix-cache N`` (PR 8) turns on the content-hash prefix cache over
+the same chunk machinery: prompt prefixes are snapshotted at chunk
+granularity and a later request sharing the prefix is admitted with its
+prefill already restored (``--verify-prefix`` is the CI smoke: replay a
+hot-system-prompt trace through the warm cache and assert nonzero hits
+with outputs token-identical to a cold engine).
 ``--precision w8a8`` (PR 6) runs the calibrated int8 serving path
 (``--verify-quant`` replays the trace on fp32 and asserts the greedy-
 token-agreement guardrail); ``--replica-precisions fp32,w8a8`` deploys a
@@ -76,7 +82,13 @@ def serve_lm(args):
               prefill_buckets=(16, 32, 64, 128), policy=args.policy,
               slo_ms=args.slo_ms, max_queue=args.max_queue,
               service_ms_est=args.service_ms_est,
-              prefill_chunk=args.prefill_chunk)
+              prefill_chunk=args.prefill_chunk,
+              prefix_cache=args.prefix_cache)
+    if args.verify_prefix:
+        if args.replicas > 1:
+            raise SystemExit("--verify-prefix runs single-engine only "
+                             "(drop --replicas)")
+        return _verify_prefix(args, cfg, params, kw)
     reqs = _lm_requests(args, cfg)
     if args.replicas > 1:
         if args.verify_chunked:
@@ -152,6 +164,56 @@ def serve_lm(args):
               f"({q.quantized_sites} sites int8, {q.fallback_sites} "
               f"fp32 fallbacks, calib disagreement "
               f"{q.result.metric_delta:.4f})")
+    return tel
+
+
+def _prefix_requests(args, cfg):
+    """Hot-system-prompt trace: every request opens with the same
+    3-chunk system prefix and ends with a short per-request suffix —
+    the workload the prefix cache exists for."""
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size,
+                          3 * args.prefill_chunk).astype(np.int32)
+    reqs = []
+    for i in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, 12))).astype(np.int32)
+        reqs.append(Request(i, np.concatenate([prefix, tail]),
+                            max_new_tokens=args.new_tokens))
+    return reqs
+
+
+def _verify_prefix(args, cfg, params, kw):
+    """The CI prefix-cache smoke: run a hot-system-prompt trace once to
+    populate the cache, replay it through the warm cache, and assert
+    nonzero prefix hits with every replayed output token-identical to a
+    cold engine (no cache) serving the same trace. Exits non-zero on
+    any violation."""
+    if not args.prefix_cache:
+        raise SystemExit("--verify-prefix needs --prefix-cache")
+    if not args.prefill_chunk:
+        raise SystemExit("--prefix-cache needs --prefill-chunk")
+    warm = InferenceEngine(cfg, params, precision=args.precision, **kw)
+    warm.run(_prefix_requests(args, cfg))       # populate pass
+    warm.telemetry.reset_serving_stats()
+    hot = _prefix_requests(args, cfg)
+    warm.run(hot)                               # replay: every prefix hits
+    tel = warm.telemetry
+    cold = InferenceEngine(cfg, params, precision=args.precision,
+                           **dict(kw, prefix_cache=None))
+    ref = _prefix_requests(args, cfg)
+    cold.run(ref)
+    bad = [r.rid for r, m in zip(hot, ref) if r.output != m.output]
+    if bad:
+        raise SystemExit(f"FAIL: cache-hit outputs diverge from cold "
+                         f"prefill for requests {bad}")
+    if tel.prefix_hits == 0:
+        raise SystemExit("FAIL: no prefix hits on a replayed "
+                         "hot-system-prompt trace")
+    print(f"verify-prefix OK: {len(hot)} requests replayed, "
+          f"{tel.prefix_hits} prefix-cache hits, outputs token-identical "
+          f"to cold prefill")
+    print(tel.report())
     return tel
 
 
@@ -354,6 +416,17 @@ def main(argv=None):
     ap.add_argument("--verify-chunked", action="store_true",
                     help="replay the trace monolithically and assert "
                          "chunked outputs are token-identical")
+    ap.add_argument("--prefix-cache", type=int, default=None,
+                    help="content-hash prefix cache capacity (entries): "
+                         "snapshot prompt prefixes at chunk granularity "
+                         "and admit later shared-prefix requests with "
+                         "prefill already restored (needs "
+                         "--prefill-chunk)")
+    ap.add_argument("--verify-prefix", action="store_true",
+                    help="replay a hot-system-prompt trace through the "
+                         "warm prefix cache and assert nonzero hits with "
+                         "outputs token-identical to a cold engine (the "
+                         "CI prefix smoke)")
     ap.add_argument("--precision", default="fp32",
                     choices=("fp32", "w8a8"),
                     help="engine execution precision: w8a8 runs every "

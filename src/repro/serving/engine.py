@@ -36,9 +36,11 @@ The DLRM pipelined engine (T2) lives in dlrm_engine.py on the same stack.
 """
 from __future__ import annotations
 
+import hashlib
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +48,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.bucketing import pick_bucket
+from repro.core.transfer import (TransferStats, snapshot_device_get,
+                                 snapshot_device_put)
 from repro.models import model as model_mod
 from repro.serving.executor import StageExecutor
 from repro.serving.scheduler import Scheduler, SizeTimePolicy, Ticket
-from repro.serving.state import SequenceStateManager, require_chunkable
+from repro.serving.state import (SequenceSnapshot, SequenceStateManager,
+                                 require_chunkable)
 from repro.serving.telemetry import Telemetry
 
 
@@ -87,6 +92,30 @@ def _cache_batch_axes(cfg: ModelConfig, max_len: int):
     return jax.tree.map(axis, s2, s3)
 
 
+def _cache_seq_axes(cfg: ModelConfig, batch_slots: int, max_len: int):
+    """Per-leaf sequence-axis index of the KV-cache pytree, found like
+    ``_cache_batch_axes`` by abstract evaluation at two ``max_len``
+    values. ``-1`` marks a leaf whose extents don't scale with the
+    sequence length — ring buffers (fixed window), recurrent state, conv
+    tails — which the snapshot contract moves whole: their state is not
+    addressable by prefix position. Leaves WITH a sequence axis (global
+    K/V rows and their int8 scales) snapshot only the written prefix
+    ``[0, length)`` — the partial-transfer saving. A window that is
+    clamped to ``max_len`` shows up as a sequence axis, which is still
+    exact: a full-length ring is positionally degenerate (ring offset ==
+    position for every written token)."""
+    sA = jax.eval_shape(
+        lambda: model_mod.init_caches(cfg, batch_slots, max_len))
+    sB = jax.eval_shape(
+        lambda: model_mod.init_caches(cfg, batch_slots, max_len + 8))
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        return diff[0] if diff else -1
+
+    return jax.tree.map(axis, sA, sB)
+
+
 class InferenceEngine:
     """Greedy-decoding LM server: bucketed batched prefill + continuous
     slot-batched decode (per-slot positions) on the shared runtime."""
@@ -102,7 +131,10 @@ class InferenceEngine:
                  prefill_chunk: Optional[int] = None,
                  precision: str = "fp32",
                  quantized_params=None,
-                 quant_budget: float = 0.05):
+                 quant_budget: float = 0.05,
+                 prefix_cache: Optional[int] = None,
+                 page_host: bool = False,
+                 migrate_min_tokens: Optional[int] = None):
         if precision not in ("fp32", "w8a8"):
             raise ValueError(f"precision must be 'fp32' or 'w8a8', "
                              f"got {precision!r}")
@@ -163,10 +195,36 @@ class InferenceEngine:
 
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)
+        self._seq_axes = _cache_seq_axes(cfg, batch_slots, max_len)
         # per-slot sequence state: the free/active/prefilling partition,
         # per-slot decode positions, and the steal/drain slot rules all
         # live in the manager (serving/state.py)
         self.states = SequenceStateManager(batch_slots, cfg)
+
+        # movable sequence state (PR 8) — one snapshot contract, three
+        # consumers: prefix cache, host-RAM paging, mid-prefill migration
+        self.transfer_stats = TransferStats()    # staged snapshot traffic
+        if prefix_cache is not None and prefill_chunk is None:
+            raise ValueError("prefix_cache requires prefill_chunk: cache "
+                             "keys are prompt prefixes at chunk granularity")
+        self.prefix_cache = prefix_cache         # max cached prefixes (LRU)
+        self._prefix_cache: "OrderedDict[Tuple[int, str], SequenceSnapshot]" \
+            = OrderedDict()
+        # submit-time hits waiting for their first chunk admission:
+        # id(ticket) -> snapshot to restore into the acquired slot
+        self._pending_restore: Dict[int, SequenceSnapshot] = {}
+        self.page_host = page_host
+        # paged-out sessions in fault-back (FIFO) order:
+        # id(ticket) -> (ticket, snapshot)
+        self._paged: "OrderedDict[int, Tuple[Ticket, SequenceSnapshot]]" \
+            = OrderedDict()
+        # migration cost floor: ship a mid-prefill snapshot only once at
+        # least this many tokens of chunk work would otherwise be redone
+        # (default: one full chunk — below that a restart costs no more
+        # than the snapshot round-trip)
+        self.migrate_min_tokens = (migrate_min_tokens
+                                   if migrate_min_tokens is not None
+                                   else (prefill_chunk or 0))
 
     # slot-state views (the manager owns them; tests and the router's
     # engine hooks read these)
@@ -265,6 +323,166 @@ class InferenceEngine:
         # donate the destination tree: scatter in place, no full copy
         return jax.jit(write, donate_argnums=(0,))
 
+    # ---- movable sequence state: serialize / restore (PR 8) --------------
+    def snapshot_slot(self, slot: int, length: int, *,
+                      pos: int = 0) -> SequenceSnapshot:
+        """Serialize one slot's sequence state to a host-side
+        ``SequenceSnapshot``: per cache leaf, the slot's batch row with
+        sequence axes sliced to the written prefix ``[0, length)`` and
+        non-positional state (rings, recurrent state, conv tails) copied
+        whole. One batched device->host transfer ships all leaves (the
+        command-batching trick from ``core/transfer.py``, with the
+        partial-vs-full byte accounting in ``transfer_stats``)."""
+        bax, sax = self._batch_axes, self._seq_axes
+
+        def take(leaf, b, s):
+            if b < 0:                  # whole-leaf state: moves verbatim
+                return leaf
+            row = jnp.take(leaf, slot, axis=b)
+            if s >= 0:
+                ax = s - (b < s)       # seq axis after the batch axis drops
+                row = jax.lax.slice_in_dim(
+                    row, 0, min(length, row.shape[ax]), axis=ax)
+            return row
+
+        rows = jax.tree.map(take, self.caches, bax, sax)
+        full = sum(
+            leaf.nbytes // (leaf.shape[b] if b >= 0 else 1)
+            for leaf, b in zip(jax.tree.leaves(self.caches),
+                               jax.tree.leaves(bax)))
+        host = snapshot_device_get(rows, self.transfer_stats,
+                                   full_bytes=full)
+        partial = sum(np.asarray(x).nbytes for x in jax.tree.leaves(host))
+        return SequenceSnapshot(length=length, pos=pos, leaves=host,
+                                bytes_partial=partial, bytes_full=full)
+
+    def restore_slot(self, snap: SequenceSnapshot, slot: int) -> None:
+        """Restore a snapshot into ANY free slot: sliced sequence axes
+        zero-pad back to full rows (positions >= ``snap.length`` are
+        never attended before decode or a chunk rewrites them, so the
+        padding is unobservable), one batched host->device put stages
+        the row tree, and the engine's donated slot-write executable
+        scatters it into the target row — the same scatter contract the
+        bucketed prefill write uses."""
+        bax, sax = self._batch_axes, self._seq_axes
+
+        def expand(row, leaf, b, s):
+            if b < 0:                  # whole-leaf state: restore verbatim
+                return row
+            row = np.asarray(row)
+            if s >= 0:
+                ax = s - (b < s)
+                want = leaf.shape[s]
+                if row.shape[ax] < want:
+                    pad = [(0, 0)] * row.ndim
+                    pad[ax] = (0, want - row.shape[ax])
+                    row = np.pad(row, pad)
+            return np.expand_dims(row, b)
+
+        src = jax.tree.map(expand, snap.leaves, self.caches, bax, sax)
+        dev = snapshot_device_put(src, self.transfer_stats)
+        self.caches = self.executor.dispatch(
+            "slot_write", 1, self._build_slot_write,
+            self.caches, dev, jnp.asarray([slot], jnp.int32))
+
+    # ---- prefix cache (consumer 1) ---------------------------------------
+    def _prefix_key(self, tokens: np.ndarray, length: int):
+        """Cache key for a prompt prefix: (length, sha1 of the token ids).
+        Content-hashed at chunk granularity — two requests sharing a
+        system prompt share every chunk-multiple prefix key, whatever
+        their suffixes. The cache is per-engine, so config/precision are
+        implicit in the key space."""
+        raw = np.ascontiguousarray(tokens[:length], np.int32).tobytes()
+        return (length, hashlib.sha1(raw).hexdigest())
+
+    def _prefix_lookup(self, req: Request) -> Optional[SequenceSnapshot]:
+        """Longest cached prefix STRICTLY below the request's prefill
+        length, at chunk granularity — the final chunk always recomputes,
+        so the hit path emits its first token through the same math as a
+        cold prefill (token-identical by construction)."""
+        total = self._prefill_len(req)
+        L = ((total - 1) // self.prefill_chunk) * self.prefill_chunk
+        while L >= self.prefill_chunk:
+            key = self._prefix_key(req.tokens, L)
+            snap = self._prefix_cache.get(key)
+            if snap is not None:
+                self._prefix_cache.move_to_end(key)      # LRU touch
+                return snap
+            L -= self.prefill_chunk
+        return None
+
+    def _prefix_insert(self, req: Request, slot: int) -> None:
+        """Admit the slot's written prefix into the cache at a chunk
+        boundary (dedup by content key, LRU-bounded)."""
+        key = self._prefix_key(req.tokens, req.prefill_pos)
+        if key in self._prefix_cache:
+            self._prefix_cache.move_to_end(key)
+            return
+        self._prefix_cache[key] = self.snapshot_slot(slot, req.prefill_pos)
+        while len(self._prefix_cache) > self.prefix_cache:
+            self._prefix_cache.popitem(last=False)
+
+    # ---- host-RAM paging (consumer 2) ------------------------------------
+    def _page_out_one(self) -> bool:
+        """Park one active slot to host RAM so a fresh arrival can have
+        its row — the engine's stand-in for the fleet's long-idle
+        sessions: the victim is the active session with the MOST tokens
+        still to generate (it would hold its slot idle-longest), ties to
+        the highest slot for determinism."""
+        if not self.states.active:
+            return False
+
+        def remaining(t: Ticket) -> int:
+            req: Request = t.payload
+            return req.max_new_tokens - len(req.output)
+
+        slot = max(self.states.active,
+                   key=lambda s: (remaining(self.states.active[s]), s))
+        p = int(self.states.pos[slot])
+        snap = self.snapshot_slot(slot, p, pos=p)
+        t = self.states.page_out(slot)
+        self._paged[id(t)] = (t, snap)
+        self.telemetry.record_paged_out()
+        return True
+
+    def _page_in(self) -> None:
+        """Fault paged sessions back into whatever slots admission left
+        free, oldest first; they rejoin the decode batch exactly where
+        they left off (the restored row is the row that was parked)."""
+        while self._paged and self.states.free_count > 0:
+            _, (t, snap) = self._paged.popitem(last=False)
+            slot = self.states.acquire(t)
+            self.restore_slot(snap, slot)
+            self.states.activate(t, slot, snap.pos)
+            self.telemetry.record_paged_in()
+
+    # ---- mid-prefill migration (consumer 3; ReplicaRouter hooks) ---------
+    def migration_eligible(self, t: Ticket) -> bool:
+        """The PR 4/5 steal-veto turned cost decision: a mid-prefill
+        continuation MAY leave — with its snapshot — once it has at
+        least ``migrate_min_tokens`` of completed chunk work to ship
+        (below that, restarting costs no more than the round-trip)."""
+        return (t.continuation and id(t) in self.states.prefilling
+                and t.payload.prefill_pos >= max(self.migrate_min_tokens, 1))
+
+    def export_prefill(self, t: Ticket) -> SequenceSnapshot:
+        """Victim side of a migration: serialize the ticket's completed
+        chunk prefix and free its slot (the state now travels with the
+        ticket, so nothing is stranded)."""
+        slot = self.states.prefilling[id(t)]
+        snap = self.snapshot_slot(slot, t.payload.prefill_pos)
+        self.states.release_prefilling(t)
+        return snap
+
+    def adopt_prefill(self, t: Ticket, snap: SequenceSnapshot) -> None:
+        """Thief side: restore the snapshot into a free slot and park it —
+        the continuation then chunks on from ``prefill_pos`` exactly as
+        if it had always lived here (no restart-from-zero)."""
+        slot = self.states.acquire(t)
+        self.restore_slot(snap, slot)
+        self.states.park(t, slot)
+        self.telemetry.record_migrated()
+
     # ---- main loop ---------------------------------------------------------
     def _eff_len(self, req: Request) -> int:
         """Effective prefill length: what both admission sizing and bucket
@@ -277,36 +495,61 @@ class InferenceEngine:
         """Enqueue a request; keyword overrides beat the request's own
         slo/priority fields (router path). Returns the scheduler ticket —
         ``shed=True`` means admission control rejected it (the request is
-        marked ``shed`` and will never be served)."""
+        marked ``shed`` and will never be served).
+
+        Prefix-cache hit admission: when the prompt's longest cached
+        chunk-multiple prefix is found, the ticket enters the queue
+        already sized to the REMAINING prefill (so feasibility shedding
+        and the service estimator price the hit, not the full prompt)
+        and carries a pending restore — the first chunk admission
+        restores the snapshot into the acquired slot and prefill resumes
+        at the prefix boundary."""
+        hit = None
+        if self.prefix_cache and not req.prefill_pos:
+            hit = self._prefix_lookup(req)
+        size = self._eff_len(req) - (hit.length if hit is not None else 0)
         t = self.scheduler.submit(
-            req, size=self._eff_len(req),
+            req, size=max(size, 1),
             slo_ms=slo_ms if slo_ms is not None else req.slo_ms,
             priority=priority if priority is not None else req.priority)
         req.enqueue_t = t.enqueue_t
         req.shed = t.shed
+        if hit is not None and not t.shed:
+            req.prefill_pos = hit.length
+            self._pending_restore[id(t)] = hit
+            self.telemetry.record_prefix_hit()
         return t
 
     # ---- replica protocol (ReplicaRouter) --------------------------------
     @property
     def inflight(self) -> int:
-        return self.states.inflight
+        # paged sessions are admitted-but-unfinished work: they count
+        # toward load even while their state sits in host RAM
+        return self.states.inflight + len(self._paged)
 
     @property
     def free_slots(self) -> int:
         """Free slots — how many stolen tickets this replica could
-        start right now (the router's steal admission cap)."""
-        return self.states.free_count
+        start right now (the router's steal admission cap). Paged
+        sessions reserve their fault-back capacity: advertising their
+        slots to thieves would let steals crowd out the page-in path."""
+        return max(self.states.free_count - len(self._paged), 0)
 
     @property
     def has_work(self) -> bool:
-        return bool(self.scheduler.depth or self.states.inflight)
+        return bool(self.scheduler.depth or self.states.inflight
+                    or self._paged)
 
     def steal_eligible(self, t: Ticket) -> bool:
         """Steal veto (router hook, delegated to the SequenceStateManager):
         continuations and mid-prefill tickets own a slot on THIS replica —
         moving one would strand the partially-written cache rows. Only
-        fresh, not-yet-started tickets may leave."""
-        return self.states.steal_eligible(t)
+        fresh, not-yet-started tickets may leave. A prefix-cache hit
+        with a pending restore is vetoed too — its snapshot lives in
+        THIS engine's cache (a plain steal would strand the restored
+        offset; migration is the path that ships state)."""
+        return self.states.steal_eligible(t) \
+            and id(t) not in self._pending_restore
 
     def drain_tickets(self) -> List[Ticket]:
         """Fault-drain hook (``ReplicaRouter.drain_replica``): hand back
@@ -326,6 +569,11 @@ class InferenceEngine:
         fault."""
         out = self.scheduler.steal_pending(None, include_continuations=True)
         out.extend(self.states.evict_all())
+        # paged sessions and pending prefix restores die with the card
+        # too: their snapshots are host-side state of THIS replica
+        out.extend(t for t, _ in self._paged.values())
+        self._paged.clear()
+        self._pending_restore.clear()
         for t in out:
             req: Request = t.payload
             req.output = []
@@ -345,11 +593,21 @@ class InferenceEngine:
             self._admit_chunk()
         else:
             self._admit()
+        if self.page_host:
+            # fault paged sessions back into whatever admission left free
+            # (admission first: fresh arrivals take precedence for slots,
+            # or page-in/page-out would thrash against each other)
+            self._page_in()
         self._step()
 
     def _admit(self):
         """Refill freed slots: admit up to len(free) tickets, group them by
         prefill bucket, and prefill each group in ONE bucketed call."""
+        if self.page_host and not self.free and self.scheduler.fresh_depth:
+            # slot-starved with fresh arrivals waiting: park one long-
+            # idle active session to host RAM (one per tick — bounded
+            # churn) so the arrival can prefill
+            self._page_out_one()
         while self.free and self.scheduler.depth:
             tickets = self.scheduler.admit(
                 min(len(self.free), self.max_prefill_batch))
@@ -421,6 +679,9 @@ class InferenceEngine:
         token and move to the decode batch."""
         if not self.scheduler.depth:
             return
+        if self.page_host and not self.free and not self.prefilling \
+                and self.scheduler.fresh_depth:
+            self._page_out_one()        # same page-out rule as _admit
         if not self.free and not self.prefilling:
             return                      # every slot is decoding
         group = self.scheduler.admit_coherent(
@@ -449,6 +710,13 @@ class InferenceEngine:
             off = req.prefill_pos
             clen = min(self._chunk_next_len(req), bucket)
             slots.append(self.states.acquire(t))
+            snap = self._pending_restore.pop(id(t), None)
+            if snap is not None:
+                # prefix-cache hit: the cached prefix lands in the slot
+                # BEFORE this group's chunk dispatch reads the cache, so
+                # the chunk at offset ``off == snap.length`` attends a
+                # prefix identical to one it would have computed itself
+                self.restore_slot(snap, slots[-1])
             toks[j, :clen] = req.tokens[off:off + clen]
             start[j] = off
             wpos[j] = off
@@ -466,6 +734,12 @@ class InferenceEngine:
         for j, (t, slot) in enumerate(zip(group, slots)):
             req = t.payload
             req.prefill_pos += int(last[j]) + 1
+            if self.prefix_cache \
+                    and req.prefill_pos % self.prefill_chunk == 0:
+                # completed chunk boundary: admit the written prefix to
+                # the cache (content-keyed, so every request sharing a
+                # system prompt dedups onto one entry)
+                self._prefix_insert(req, slot)
             if req.prefill_pos >= self._prefill_len(req):
                 req.output.append(int(nxt[j]))
                 self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)

@@ -57,11 +57,17 @@ class SimReplica:
         self.slots = slots
         self.precision = precision       # router mixed-precision policy
         self.active: List[Tuple[Ticket, float]] = []   # (ticket, due time)
+        # host-RAM paging (PR 8): parked sessions as (ticket, remaining
+        # service) — the sim-level SequenceSnapshot is the frozen
+        # remaining service time; a page-in resumes it, never restarts
+        self.paged: List[Tuple[Ticket, float]] = []
 
     # ---- replica protocol ------------------------------------------------
     @property
     def inflight(self) -> int:
-        return len(self.active)
+        # paged sessions are admitted-but-unfinished: they count toward
+        # load even while parked in host RAM
+        return len(self.active) + len(self.paged)
 
     @property
     def free_slots(self) -> int:
@@ -69,7 +75,7 @@ class SimReplica:
 
     @property
     def has_work(self) -> bool:
-        return bool(self.scheduler.depth or self.active)
+        return bool(self.scheduler.depth or self.active or self.paged)
 
     def submit(self, item, *, slo_ms=None, priority=None, size: int = 0,
                now: Optional[float] = None, **kw) -> Ticket:
@@ -86,20 +92,52 @@ class SimReplica:
         out = self.scheduler.steal_pending(None, now=now,
                                            include_continuations=True)
         out.extend(t for t, _ in self.active)
+        out.extend(t for t, _ in self.paged)
         self.active = []
+        self.paged = []
         for t in out:
             t.reset_fresh()
         return out
 
+    # ---- movable sequence state (PR 8, sim level) ------------------------
+    def page_out(self, now: float) -> Optional[Ticket]:
+        """Park the in-flight ticket with the LONGEST remaining service
+        to host RAM (deterministic: latest due, ties by tid), freeing
+        its slot. Remaining service is frozen exactly — the sim-level
+        snapshot round-trip loses no progress."""
+        if not self.active:
+            return None
+        k = max(range(len(self.active)),
+                key=lambda i: (self.active[i][1], self.active[i][0].tid))
+        t, due = self.active.pop(k)
+        self.paged.append((t, max(due - now, 0.0)))
+        self.telemetry.record_paged_out()
+        return t
+
+    def page_in(self, now: float) -> Optional[Ticket]:
+        """Fault the oldest paged session back into a free slot; its
+        frozen remaining service resumes from ``now``."""
+        if not self.paged or self.free_slots <= 0:
+            return None
+        t, remaining = self.paged.pop(0)
+        self.active.append((t, now + remaining))
+        self.telemetry.record_paged_in()
+        return t
+
     def step(self, now: float) -> List[Ticket]:
-        """One virtual tick: complete due work at its exact due time, then
-        admit into the freed slots. Returns the completed tickets."""
+        """One virtual tick: complete due work at its exact due time,
+        admit into the freed slots, then fault paged sessions back into
+        whatever slots admission left free (fresh arrivals take
+        precedence for slots, matching the engine's page-in order).
+        Returns the completed tickets."""
         done = [(t, due) for t, due in self.active if due <= now]
         self.active = [(t, due) for t, due in self.active if due > now]
         for t, due in done:
             self.scheduler.complete(t, now=due)
         for t in self.scheduler.admit(self.free_slots, now=now):
             self.active.append((t, now + self.service_s))
+        while self.paged and self.free_slots > 0:
+            self.page_in(now)
         return [t for t, _ in done]
 
     # step_once exists for protocol completeness (wall-clock callers);
@@ -192,6 +230,41 @@ class FleetSim:
         the real router path. Returns tickets re-homed."""
         return self.router.drain_replica(idx, now=self.now)
 
+    def page_out(self, idx: int) -> Optional[Ticket]:
+        """Park replica ``idx``'s longest-remaining in-flight session to
+        host RAM (no-op on a dead/empty replica)."""
+        if self.router.dead[idx]:
+            return None
+        return self.replicas[idx].page_out(self.now)
+
+    def page_in(self, idx: int) -> Optional[Ticket]:
+        """Fault replica ``idx``'s oldest paged session back in (no-op
+        without a free slot or paged work)."""
+        if self.router.dead[idx]:
+            return None
+        return self.replicas[idx].page_in(self.now)
+
+    def migrate(self, src: int, dst: int) -> int:
+        """Mid-service migration: move the longest-remaining in-flight
+        ticket from ``src`` to a free slot on ``dst`` WITH its frozen
+        remaining service (the sim-level snapshot ships — no
+        restart-from-zero). tid / priority / deadline move untouched
+        (shared virtual clock, so no restamp is needed — the engine path
+        goes through ``Scheduler.absorb`` for cross-timeline moves).
+        Returns tickets moved (0 or 1)."""
+        if src == dst or self.router.dead[src] or self.router.dead[dst] \
+                or dst in self.halted:
+            return 0
+        s, d = self.replicas[src], self.replicas[dst]
+        if not s.active or d.free_slots <= 0:
+            return 0
+        k = max(range(len(s.active)),
+                key=lambda i: (s.active[i][1], s.active[i][0].tid))
+        t, due = s.active.pop(k)
+        d.active.append((t, self.now + max(due - self.now, 0.0)))
+        d.telemetry.record_migrated()
+        return 1
+
     def halt(self, idx: int):
         """Freeze replica ``idx`` WITHOUT draining it — the real card-
         death shape: the card stops serving (and, under the elastic
@@ -231,12 +304,13 @@ class FleetSim:
     # ---- invariant surface -----------------------------------------------
     def pending_payloads(self) -> List[int]:
         """Every accepted-but-unfinished payload across the fleet: pending
-        queues plus in-flight slots, dead replicas included (a correct
-        drain leaves them empty)."""
+        queues plus in-flight slots plus host-RAM-paged sessions, dead
+        replicas included (a correct drain leaves them empty)."""
         out = []
         for r in self.replicas:
             out.extend(t.payload for t in r.scheduler._pending)
             out.extend(t.payload for t, _ in r.active)
+            out.extend(t.payload for t, _ in r.paged)
         return out
 
     def assert_conserved(self):

@@ -61,6 +61,15 @@ survive the move. Continuations and mid-prefill tickets are never
 stolen — they own a KV slot on their home replica (engines veto them via
 ``steal_eligible``).
 
+Mid-prefill migration (``migrate=True``, PR 8): the steal-veto on
+mid-prefill work becomes a cost decision. When an idle thief faces a
+victim loaded past the point where restarting locally would be cheaper,
+the victim's mid-prefill continuations move WITH their serialized slot
+state (``SequenceSnapshot`` — the engines' ``export_prefill`` /
+``adopt_prefill`` hooks) and resume from the last completed chunk on
+the thief; completed chunk work is never thrown away. Counted in the
+thief's ``migrated`` telemetry, separate from ``steals``.
+
 Replica fault drain (``drain_replica(idx)``): a card that degrades or
 dies is marked dead and its ENTIRE accepted-but-unfinished load — the
 pending queue plus whatever the engine can evict from its slots
@@ -83,7 +92,8 @@ class ReplicaRouter:
     """Least-loaded, deadline-slack-aware balancer over engine replicas."""
 
     def __init__(self, replicas: Sequence[Any], *, route: str = "count",
-                 ewma_alpha: float = 0.25, steal: bool = False):
+                 ewma_alpha: float = 0.25, steal: bool = False,
+                 migrate: bool = False):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         if route not in ("count", "feedback"):
@@ -95,6 +105,7 @@ class ReplicaRouter:
         self.route_mode = route
         self.ewma_alpha = ewma_alpha
         self.steal_enabled = steal
+        self.migrate_enabled = migrate
         # mixed-precision fleet policy: replicas advertise their execution
         # precision (engines: ``precision``; anything without the attr is
         # fp32). When the fleet mixes precisions, priority-0 (accuracy-
@@ -296,9 +307,20 @@ class ReplicaRouter:
         (``_steal_share``), capped by the thief's free slots; the
         victim's ``steal_eligible`` hook vetoes mid-prefill work.
         Deterministic: thieves act in index order, victims break ties by
-        lowest index. Returns the number of tickets moved."""
-        if not self.steal_enabled:
-            return 0
+        lowest index. Returns the number of tickets moved.
+
+        With ``migrate=True`` a migration round follows the fresh-steal
+        round: idle thieves may additionally pull MID-PREFILL
+        continuations — shipped with their snapshot, resuming from the
+        last completed chunk (``_maybe_migrate``)."""
+        moved = 0
+        if self.steal_enabled:
+            moved += self._steal_round(now)
+        if self.migrate_enabled:
+            moved += self._maybe_migrate(now)
+        return moved
+
+    def _steal_round(self, now: Optional[float] = None) -> int:
         moved = 0
         for i in self.alive:
             thief = self.replicas[i]
@@ -332,6 +354,59 @@ class ReplicaRouter:
                 continue
             thief.scheduler.absorb(stolen, **self._absorb_kw(i, now))
             self.steals_per_replica[i] += len(stolen)
+            moved += len(stolen)
+        return moved
+
+    def _maybe_migrate(self, now: Optional[float] = None) -> int:
+        """Mid-prefill migration round (PR 8): the PR 4/5 steal-veto as a
+        cost decision. An idle thief with free slots pulls mid-prefill
+        continuations from the most-loaded sibling that is strictly MORE
+        loaded than the thief-plus-one (an unloaded victim finishes its
+        own prefill sooner than a snapshot round-trip, so nothing moves)
+        — but unlike a plain steal the completed chunk work ships too:
+        the victim serializes the slot (``export_prefill``), the thief
+        restores it into a free slot and parks it (``adopt_prefill``),
+        and the continuation resumes from its last completed chunk.
+        Re-stamping is the same ``absorb`` contract as stealing (age,
+        deadline slack, and priority survive; ``record=False`` — the
+        move lands in the thief's ``migrated`` counter, not ``steals``).
+        Engines without the snapshot hooks (DLRM, sim stubs) are
+        skipped. Returns tickets moved."""
+        moved = 0
+        for i in self.alive:
+            thief = self.replicas[i]
+            if getattr(thief, "adopt_prefill", None) is None:
+                continue
+            if thief.scheduler.fresh_depth > 0:
+                continue                # has its own queue to serve
+            cap = self.free_slots(i)
+            if cap <= 0:
+                continue
+            best, best_load = -1, self.load(i) + 1
+            for j in self.alive:
+                if j == i:
+                    continue
+                victim = self.replicas[j]
+                if getattr(victim, "export_prefill", None) is None \
+                        or getattr(victim, "migration_eligible",
+                                   None) is None:
+                    continue
+                if self.load(j) > best_load:
+                    best, best_load = j, self.load(j)
+            if best < 0:
+                continue
+            victim = self.replicas[best]
+            stolen = victim.scheduler.steal_pending(
+                cap, now=now, eligible=victim.migration_eligible,
+                include_continuations=True)
+            if not stolen:
+                continue
+            for t in stolen:
+                # serialize on the victim, restore+park on the thief —
+                # the ticket is never queued anywhere without its state
+                thief.adopt_prefill(t, victim.export_prefill(t))
+            thief.scheduler.absorb(stolen, record=False,
+                                   **self._absorb_kw(i, now))
             moved += len(stolen)
         return moved
 

@@ -192,8 +192,24 @@ class ServiceEstimator:
     item): the per-ticket service estimate the feasibility check charges
     is the p50 of recent completions in the ticket's size bucket, not a
     hand-tuned constant. Falls back to the pooled p50 across buckets,
-    then to the static seed estimate (``fallback_ms``), until a bucket
-    has accumulated ``min_samples`` observations."""
+    then to a static per-bucket cold-start prior, until a bucket has
+    accumulated ``min_samples`` observations.
+
+    Cold-start prior (PR 8): before any completion lands, the old
+    single pooled fallback priced a 256-token prefill and an 8-token
+    one identically, so early feasibility shedding was blind to size.
+    The prior scales ``fallback_ms`` linearly with the ticket's bucket
+    relative to the SMALLEST bucket (``fallback_ms`` = the estimate at
+    ``buckets[0]``): bucketed prefill executables are ~linear in padded
+    length, so cold estimates rank sizes correctly from the first
+    submit. The scale factor is ``COLD_PRIOR_SCALE`` — documented here
+    as THE constant, not tuned per deployment."""
+
+    # per-bucket cold prior: estimate(size) = fallback_ms *
+    # (bucket(size) / buckets[0]) ** COLD_PRIOR_SCALE. 1.0 = linear in
+    # padded prefill length, the measured shape of the bucketed
+    # executables (compute and K/V write both scale with the bucket).
+    COLD_PRIOR_SCALE = 1.0
 
     def __init__(self, fallback_ms: Optional[float] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
@@ -219,7 +235,11 @@ class ServiceEstimator:
             return percentile(sorted(s), 0.5)
         if len(self._pooled) >= self.min_samples:
             return percentile(sorted(self._pooled), 0.5)
-        return self.fallback_ms
+        if self.fallback_ms is None:
+            return None
+        # static per-bucket cold-start prior (see class docstring)
+        ratio = pick_bucket(size, self.buckets) / self.buckets[0]
+        return self.fallback_ms * ratio ** self.COLD_PRIOR_SCALE
 
 
 # ---- the scheduler --------------------------------------------------------

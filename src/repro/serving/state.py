@@ -61,10 +61,30 @@ model layer: models/attention.py ``chunk`` mode, models/ssm.py
 the all-global constructor gate: it raises only for layer kinds with no
 per-slot chunk contract (cross-attention encoder-decoder stacks), naming
 the offending kind.
+
+**The serialize/restore contract** (PR 8) makes a slot's state *movable*:
+``SequenceSnapshot`` is the host-side serialized form of one slot — per
+cache leaf, the slot's batch row with positional axes (global K/V and
+their int8 scales) sliced to the written prefix ``[0, length)`` and
+non-positional state (rings, recurrent state, conv tails) copied whole,
+because ring offsets and exit states are not prefix-addressable. Restore
+zero-pads the sliced axes back to full rows and scatters into ANY free
+slot through the same donated slot-write executable chunked prefill
+uses; bytes beyond the written prefix are never attended (decode writes
+position ``pos`` before reading it), so the round trip is exact. One
+snapshot contract backs all three movers — the prefix cache
+(content-hashed prompt prefixes at chunk granularity), host-RAM paging
+(long-idle active slots park to host memory and fault back), and
+mid-prefill migration (a stolen continuation ships its completed chunks
+to the thief). The device-side math lives in
+``InferenceEngine.snapshot_slot`` / ``restore_slot``; this module keeps
+the jax-free bookkeeping: the container plus the partition moves
+(``release_prefilling`` for migration-out, ``page_out`` for paging).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -142,6 +162,31 @@ def require_chunkable(cfg: ModelConfig) -> None:
             f"{sorted(SLOT_STATE_KINDS)})")
 
 
+@dataclass
+class SequenceSnapshot:
+    """Host-side serialized form of ONE slot's sequence state.
+
+    ``leaves`` mirrors the engine's cache pytree with each leaf reduced
+    to the slot's batch row (host numpy): positional axes are sliced to
+    the written prefix ``[0, length)``, everything else (rings, recurrent
+    state, conv tails, whole-leaf state) is copied verbatim — exactly
+    what must move for the row to be reproduced in any free slot of an
+    engine with the same config. ``length`` is the written prefix in
+    tokens (= ``prefill_pos`` for mid-prefill snapshots, the full prompt
+    length for prefix-cache entries) and doubles as the restore offset:
+    chunked prefill resumes its scatter at ``write_pos = length``.
+    ``pos`` carries the decode position for paged ACTIVE slots (0 for
+    snapshots taken mid-prefill). ``bytes_partial`` / ``bytes_full`` are
+    the staged-transfer accounting (what shipped vs what whole rows
+    would have shipped — the ``core/transfer.py`` partial-transfer
+    story applied to the snapshot path)."""
+    length: int
+    pos: int
+    leaves: Any
+    bytes_partial: int = 0
+    bytes_full: int = 0
+
+
 class SequenceStateManager:
     """The per-slot state manager behind ``InferenceEngine``: owns the
     free / active / prefilling partitions, per-slot decode positions, and
@@ -190,6 +235,27 @@ class SequenceStateManager:
         """Request complete: the slot returns to the free pool."""
         del self.active[slot]
         self.free.append(slot)
+
+    def release_prefilling(self, ticket) -> int:
+        """Migration-out: a mid-prefill ticket leaves this replica WITH
+        its snapshot, so the slot it held frees (the state now lives in
+        the snapshot, not the row). Returns the freed slot. The caller
+        snapshots BEFORE calling this — after it the row may be reused."""
+        slot = self.prefilling.pop(id(ticket))
+        self.free.append(slot)
+        return slot
+
+    def page_out(self, slot: int):
+        """Host-RAM paging: an ACTIVE slot parks its state to a host
+        snapshot and frees the row — the session keeps running, it just
+        no longer occupies device state. Returns the evicted ticket; the
+        engine holds it (with its snapshot) until the fault-back. The
+        partition stays exact: the slot moves active -> free in one
+        step, and the paged ticket is tracked engine-side, not here."""
+        t = self.active.pop(slot)
+        self.pos[slot] = 0
+        self.free.append(slot)
+        return t
 
     def evict_all(self) -> List[object]:
         """Fault drain: hand back every slot-holding ticket (decode batch

@@ -60,6 +60,12 @@ class Telemetry:
                                    # for (no fp32 replica was live)
     scaled_in: int = 0             # 1 if this replica joined the fleet via
                                    # elastic scale-up (fleet merge = joins)
+    prefix_hits: int = 0           # requests admitted with their prompt
+                                   # prefix restored from the prefix cache
+    paged_out: int = 0             # active slots parked to host RAM
+    paged_in: int = 0              # paged sessions faulted back to a slot
+    migrated: int = 0              # mid-prefill tickets this replica adopted
+                                   # with their snapshot (no restart-from-zero)
     queue_depths: List[int] = field(default_factory=list)
 
     # executor-side counters
@@ -116,6 +122,30 @@ class Telemetry:
         graceful-degradation path of the precision pin (work is served
         int8 rather than dropped, and the downgrade is counted)."""
         self.precision_rehomed += n
+
+    def record_prefix_hit(self, n: int = 1):
+        """``n`` requests hit the prefix cache at submit: their prompt
+        prefix is restored from a host-side snapshot instead of being
+        re-prefilled from token zero (the system-prompt TTFT cliff)."""
+        self.prefix_hits += n
+
+    def record_paged_out(self, n: int = 1):
+        """``n`` active slots parked their sequence state to host RAM
+        (host-RAM paging): slot count stops bounding concurrent sessions;
+        the session faults back in before its next token."""
+        self.paged_out += n
+
+    def record_paged_in(self, n: int = 1):
+        """``n`` paged sessions restored their snapshot into a free slot
+        and resumed decode where they left off."""
+        self.paged_in += n
+
+    def record_migrated(self, n: int = 1):
+        """``n`` mid-prefill tickets adopted WITH their snapshot (counted
+        on the adopting replica, like steals): the completed chunks moved
+        with the ticket, so prefill resumes at the last chunk boundary
+        instead of restarting from token zero."""
+        self.migrated += n
 
     def record_scaled_in(self, n: int = 1):
         """This replica joined a running fleet via elastic scale-up
@@ -274,6 +304,10 @@ class Telemetry:
                "drained": self.drained,
                "precision_rehomed": self.precision_rehomed,
                "scaled_in": self.scaled_in,
+               "prefix_hits": self.prefix_hits,
+               "paged_out": self.paged_out,
+               "paged_in": self.paged_in,
+               "migrated": self.migrated,
                "mean_queue_depth": self.mean_queue_depth}
         for k, v in self.latency_percentiles().items():
             out[f"latency_ms_{k}"] = v
@@ -310,6 +344,15 @@ class Telemetry:
         if self.scaled_in:
             lines.append(f"{self.scaled_in} replicas joined via elastic "
                          f"scale-up")
+        if self.prefix_hits:
+            lines.append(f"{self.prefix_hits} prefix-cache hits (prefill "
+                         f"restored from snapshot)")
+        if self.paged_out or self.paged_in:
+            lines.append(f"host-RAM paging: {self.paged_out} slots parked, "
+                         f"{self.paged_in} faulted back")
+        if self.migrated:
+            lines.append(f"{self.migrated} mid-prefill tickets migrated "
+                         f"with their snapshot")
         if self.sla_total:
             lines.append(f"SLA: {self.sla_misses}/{self.sla_total} misses "
                          f"({self.sla_miss_frac * 100:.1f}%)")

@@ -17,19 +17,35 @@ from repro.serving.fleet_sim import FleetSim, SimReplica  # noqa: F401
 def random_schedule(sim: FleetSim, n_ops: int, *, p_submit: float = 0.55,
                     skew: float = 0.0, hot: int = 0,
                     fail_at: int = -1, slo_ms=None,
-                    max_priority: int = 0) -> int:
+                    max_priority: int = 0, p_page: float = 0.0,
+                    p_migrate: float = 0.0) -> int:
     """Drive ``sim`` through ``n_ops`` seeded events: each op is a submit
     (probability ``p_submit``; pinned to replica ``hot`` with probability
     ``skew`` — the hot-keyed stream) or a tick; op ``fail_at`` (if in
     range and a live sibling remains) kills the currently most-loaded
-    live replica mid-run. Returns the index of the failed replica (-1 if
-    none). The caller drains and asserts afterwards."""
+    live replica mid-run. With probability ``p_page`` / ``p_migrate``
+    each op ALSO fires a movable-state event (PR 8) before the
+    submit-or-tick: a page_out or page_in on a random replica, or a
+    migrate between a random (src, dst) pair — conservation and ticket
+    identity must survive any interleaving of these with steals, fails,
+    and drains. Returns the index of the failed replica (-1 if none).
+    The caller drains and asserts afterwards."""
     failed = -1
+    n = len(sim.replicas)
     for op in range(n_ops):
         if op == fail_at and len(sim.router.alive) > 1:
             alive = sim.router.alive
             failed = max(alive, key=lambda i: (sim.router.load(i), i))
             sim.fail(failed)
+        if p_page > 0 and sim.rng.random() < p_page:
+            idx = int(sim.rng.integers(0, n))
+            if sim.rng.random() < 0.5:
+                sim.page_out(idx)
+            else:
+                sim.page_in(idx)
+        if p_migrate > 0 and sim.rng.random() < p_migrate:
+            sim.migrate(int(sim.rng.integers(0, n)),
+                        int(sim.rng.integers(0, n)))
         if sim.rng.random() < p_submit:
             pin = None
             if skew > 0 and sim.rng.random() < skew \

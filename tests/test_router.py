@@ -633,7 +633,21 @@ def _fake_payload():
                           "decode_throughput_improved": True,
                           "ttft_ms_p99_fp32": 1.0,
                           "ttft_ms_p99_w8a8": 0.5,
-                          "ttft_p99_no_worse": True}}
+                          "ttft_p99_no_worse": True},
+            "prefix_cache": {"arch": "a", "requests": 1,
+                             "prefix_tokens": 256, "prefill_chunk": 64,
+                             "offered_load_ms": 1.0,
+                             "cold": _fake_summary(),
+                             "hit": _fake_summary(),
+                             "ttft_hit_ratio": 0.5,
+                             "ttft_hit_improved": True,
+                             "token_identical": True, "prefix_hits": 1},
+            "paging": {"arch": "a", "sessions": 6, "slots": 2,
+                       "reference_slots": 6, "paged": _fake_summary(),
+                       "reference": _fake_summary(),
+                       "token_identical": True, "zero_lost": True,
+                       "paged_out": 1, "paged_in": 1,
+                       "partition_ok": True}}
 
 
 def test_bench_payload_schema_validates():
@@ -658,6 +672,10 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["elastic"]["shed_improved"]
     del p["elastic"]["elastic"]["scaled_in"]
     del p["elastic"]["controller"]["faults_drained"]
+    del p["prefix_cache"]["ttft_hit_ratio"]
+    del p["prefix_cache"]["hit"]["prefix_hits"]
+    del p["paging"]["partition_ok"]
+    del p["paging"]["paged"]["paged_out"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
@@ -675,6 +693,10 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "elastic.shed_improved" in msg
     assert "elastic.elastic.scaled_in" in msg
     assert "elastic.controller.faults_drained" in msg
+    assert "prefix_cache.ttft_hit_ratio" in msg
+    assert "prefix_cache.hit.prefix_hits" in msg
+    assert "paging.partition_ok" in msg
+    assert "paging.paged.paged_out" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -599,6 +599,98 @@ def test_sequence_state_partition_invariant(seed, slots, n_ops):
         assert mgr.inflight == len(held)
 
 
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), slots=st.integers(1, 6),
+       n_ops=st.integers(1, 120))
+def test_partition_invariant_with_paging_and_migration(seed, slots, n_ops):
+    """PR 8 partition moves compose with the PR 5 lifecycle: random
+    interleavings of acquire / park / activate / release with
+    ``page_out`` (active -> free, ticket leaves to the engine's paged
+    store), its fault-back re-``acquire`` + ``activate`` at the parked
+    position, and ``release_prefilling`` (migration-out: prefilling ->
+    free) keep the partition exact at every step — and after
+    ``evict_all`` a restore of the evicted sessions rebuilds the exact
+    free/active/prefilling split."""
+    from repro.serving.scheduler import Ticket
+    rng = np.random.default_rng(seed)
+    mgr = SequenceStateManager(slots)
+    held = {}                     # id(ticket) -> (ticket, slot, state)
+    paged = []                    # (ticket, pos) — engine-side paged store
+    next_tid = 0
+    for _ in range(n_ops):
+        op = rng.integers(0, 7)
+        if op == 0 and mgr.free_count:              # fresh acquire
+            t = Ticket(next_tid, None)
+            next_tid += 1
+            s = mgr.acquire(t)
+            if rng.random() < 0.5:
+                mgr.activate(t, s, int(rng.integers(1, 64)))
+                held[id(t)] = (t, s, "active")
+            else:
+                mgr.park(t, s)
+                held[id(t)] = (t, s, "prefilling")
+        elif op == 1:                               # continuation chunk
+            parked = [(t, s) for t, s, st_ in held.values()
+                      if st_ == "prefilling"]
+            if parked:
+                t, s = parked[int(rng.integers(len(parked)))]
+                assert mgr.acquire(t) == s
+                mgr.activate(t, s, int(rng.integers(1, 64)))
+                held[id(t)] = (t, s, "active")
+        elif op == 2:                               # completion
+            act = [(t, s) for t, s, st_ in held.values() if st_ == "active"]
+            if act:
+                t, s = act[int(rng.integers(len(act)))]
+                mgr.release(s)
+                del held[id(t)]
+        elif op == 3:                               # page-out (PR 8)
+            act = [(t, s) for t, s, st_ in held.values() if st_ == "active"]
+            if act:
+                t, s = act[int(rng.integers(len(act)))]
+                pos = int(mgr.pos[s])
+                got = mgr.page_out(s)
+                assert got is t, "page_out returned the wrong ticket"
+                paged.append((t, pos))
+                del held[id(t)]
+        elif op == 4 and paged and mgr.free_count:  # fault-back (PR 8)
+            t, pos = paged.pop(0)
+            s = mgr.acquire(t)
+            mgr.activate(t, s, pos)
+            assert int(mgr.pos[s]) == pos           # resumes where parked
+            held[id(t)] = (t, s, "active")
+        elif op == 5:                               # migration-out (PR 8)
+            parked = [(t, s) for t, s, st_ in held.values()
+                      if st_ == "prefilling"]
+            if parked:
+                t, s = parked[int(rng.integers(len(parked)))]
+                assert mgr.release_prefilling(t) == s
+                del held[id(t)]                     # left with its snapshot
+        else:                                       # evict + exact restore
+            evicted = mgr.evict_all()
+            assert sorted(id(t) for t in evicted) == sorted(
+                id(t) for t, _, st_ in held.values() if st_ == "active")
+            assert mgr.free_count == slots and mgr.inflight == 0
+            # restore every evicted session into fresh slots: the
+            # partition must come back exactly as large as before
+            restored = 0
+            for t in evicted:
+                if not mgr.free_count:
+                    break
+                s = mgr.acquire(t)
+                mgr.activate(t, s, int(rng.integers(1, 64)))
+                restored += 1
+            held = {id(t): (t, s, "active")
+                    for s, t in mgr.active.items()}
+            assert len(held) == restored == len(evicted)
+        mgr.check_partition()
+        assert mgr.inflight == len(held)
+        # a paged ticket holds NO slot: it must be invisible to the
+        # partition and fresh-stealable only via the engine's veto,
+        # not the manager's
+        for t, _ in paged:
+            assert id(t) not in mgr.prefilling
+
+
 def test_require_chunkable_names_offending_kind():
     """The capability check replacing the all-global gate: every
     state-carrying kind passes; encoder-decoder raises naming the
@@ -640,6 +732,90 @@ def test_fleet_conservation_under_steal_and_fault(seed, n_replicas, n_ops,
     assert len(sim.completed) == sum(1 for t in sim.submitted if not t.shed)
     if failed >= 0:
         assert not sim.replicas[failed].has_work
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n_replicas=st.integers(2, 4),
+       n_ops=st.integers(5, 120), steal=st.booleans(), fail=st.booleans(),
+       policy=st.sampled_from(POLICY_NAMES))
+def test_fleet_conservation_under_paging_and_migration(seed, n_replicas,
+                                                       n_ops, steal, fail,
+                                                       policy):
+    """PR 8 acceptance: the conservation identity survives random
+    page-out / page-in / migrate events interleaved with submits, ticks,
+    steal rounds, and a mid-run kill — submitted = completed +
+    pending-anywhere + shed, nothing duplicated, paged sessions included
+    in pending — and every accepted ticket still completes after the
+    drain (a paged or migrated session is never stranded)."""
+    sim = FleetSim(replicas=n_replicas, seed=seed, steal=steal,
+                   policy=policy, slots=2 + seed % 2,
+                   service_s=[0.004 * (1 + i) for i in range(n_replicas)],
+                   max_queue=12)
+    failed = random_schedule(sim, n_ops, skew=0.5, hot=0, max_priority=2,
+                             fail_at=n_ops // 2 if fail else -1,
+                             p_page=0.3, p_migrate=0.2)
+    run_to_completion(sim)
+    tel = sim.router.fleet_telemetry()
+    note(f"failed={failed} shed={len(sim.shed)} paged_out={tel.paged_out} "
+         f"migrated={tel.migrated}")
+    sim.assert_conserved()
+    assert len(sim.completed) == sum(1 for t in sim.submitted if not t.shed)
+    # every fault-back had a park; the shortfall is sessions that
+    # completed-by-drain or died with a failed card while still paged
+    assert tel.paged_in <= tel.paged_out
+    if failed >= 0:
+        assert not sim.replicas[failed].has_work
+
+
+def test_migrated_ticket_keeps_credit_and_remaining_service():
+    """Sim-level migration contract: the moved ticket keeps tid /
+    priority / deadline untouched (shared virtual clock — no restamp),
+    its frozen remaining service resumes on the destination (no
+    restart-from-zero), and the move lands in ``migrated``, not
+    ``steals``."""
+    sim = FleetSim(replicas=2, seed=0, steal=False, slots=1,
+                   service_s=0.01, dt=0.005)
+    t = sim.submit(size=4, priority=3, slo_ms=500.0, pin=0)
+    tid, prio, deadline = t.tid, t.priority, t.deadline_t
+    sim.tick()                                  # admit: due at now+0.01
+    (tkt, due), = sim.replicas[0].active
+    assert tkt is t
+    moved = sim.migrate(0, 1)
+    assert moved == 1
+    assert not sim.replicas[0].active
+    (tkt2, due2), = sim.replicas[1].active
+    assert tkt2 is t
+    assert t.tid == tid and t.priority == prio and t.deadline_t == deadline
+    # frozen remaining service: the due time is preserved exactly
+    # (migrate() re-bases from now, and now hasn't advanced)
+    assert due2 == pytest.approx(due)
+    tel = sim.router.fleet_telemetry()
+    assert tel.migrated == 1 and tel.steals == 0
+    run_to_completion(sim)
+    sim.assert_conserved()
+    assert t in sim.completed
+
+
+def test_page_out_round_trip_preserves_remaining_service():
+    """A page-out/page-in round trip at the sim level loses no progress:
+    remaining service is frozen while parked and resumes exactly."""
+    sim = FleetSim(replicas=1, seed=0, steal=False, slots=1,
+                   service_s=0.1, dt=0.005)
+    t = sim.submit(size=4, pin=0)
+    sim.tick()                                  # due at 0.005 + 0.1
+    (_, due), = sim.replicas[0].active
+    remaining_before = due - sim.now
+    assert sim.page_out(0) is t
+    for _ in range(10):                         # parked: the clock runs on
+        sim.now += sim.dt
+    # the auto fault-back path is step(); here exercise the explicit op
+    assert sim.page_in(0) is t
+    (_, due2), = sim.replicas[0].active
+    assert due2 - sim.now == pytest.approx(remaining_before)
+    run_to_completion(sim)
+    sim.assert_conserved()
+    tel = sim.router.fleet_telemetry()
+    assert tel.paged_out == 1 and tel.paged_in == 1
 
 
 @settings(max_examples=25, deadline=None)

@@ -535,3 +535,196 @@ def test_executor_caches_per_stage_and_key():
     assert tel.compiles == {"add": 2}
     assert tel.stage_calls == {"add": 3}
     assert ex.cached_keys("add") == [("add", 1), ("add", 2)]
+
+
+# ---- movable sequence state (PR 8): one snapshot contract, three movers ---
+
+def _shared_prefix_trace(cfg, *, seed=3, prefix_len=24,
+                         lens=(10, 6, 12), max_new=4):
+    """Requests sharing one system prompt (the prefix-cache workload)."""
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    return [Request(i, np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, l)]).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, l in enumerate(lens)]
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+SNAPSHOT_ARCHS = ("global", "local", "ssm", "hybrid-rec-rec-local",
+                  "int8-global", "int8-hybrid")
+
+
+@pytest.mark.parametrize("arch", SNAPSHOT_ARCHS)
+def test_snapshot_restore_round_trip_per_state_kind(arch):
+    """Acceptance (PR 8): serialize -> restore is an identity for every
+    slot-state kind — positional K/V rows (and their int8 scales) sliced
+    to the written prefix, ring / recurrent / conv-tail state moved
+    whole — landing in a DIFFERENT free slot, after a chunked run that
+    exercised padded-bucket rows (group of 3 -> P=4)."""
+    import dataclasses as _dc
+    if arch.startswith("int8-"):
+        base = "global" if arch == "int8-global" else "hybrid-local-global"
+        cfg = _int8_kv_cfg(base)
+    else:
+        cfg = (reduce_for_smoke(get_config("deepseek-7b"))
+               if arch == "global" else _arch_cfg(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, prefill_chunk=8, batch_slots=3,
+                          max_len=64, prefill_buckets=(8, 16, 32, 48))
+    eng.run(_mixed_trace(cfg, seed=7, lens=(16, 9, 5)))
+    if arch.startswith("int8-"):
+        dts = {np.asarray(l).dtype for l in jax.tree.leaves(eng.caches)}
+        assert np.dtype(np.int8) in dts       # the scales branch is live
+    src = eng.snapshot_slot(0, 16)
+    assert src.length == 16
+    # the staged-path accounting: one batched device_get, and on a
+    # positional-cache arch the prefix slice really saves bytes
+    assert eng.transfer_stats.num_transfers_batched >= 1
+    if arch in ("global", "int8-global"):
+        assert src.bytes_partial < src.bytes_full
+    eng.restore_slot(src, 2)
+    back = eng.snapshot_slot(2, 16)
+    _leaves_equal(src.leaves, back.leaves)
+    # restore composes with the partition: a second hop lands identically
+    eng.restore_slot(back, 1)
+    _leaves_equal(src.leaves, eng.snapshot_slot(1, 16).leaves)
+
+
+def test_prefix_cache_requires_chunking(lm_setup):
+    cfg, params = lm_setup
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        InferenceEngine(cfg, params, prefix_cache=8, batch_slots=2,
+                        max_len=64)
+
+
+def test_prefix_cache_hits_token_identical(lm_setup):
+    """Acceptance (PR 8): requests admitted with a cached prefix emit
+    token-identical output to a cold engine — the final chunk always
+    recomputes, so the first token goes through the same math — while
+    ``prefix_hits`` counts every warm admission and hit tickets are
+    steal-vetoed until their restore lands."""
+    cfg, params = lm_setup
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48),
+              prefill_chunk=8)
+    cold_eng = InferenceEngine(cfg, params, **kw)
+    cold = _shared_prefix_trace(cfg)
+    cold_eng.run(cold)
+    eng = InferenceEngine(cfg, params, prefix_cache=32, **kw)
+    eng.run(_shared_prefix_trace(cfg))          # pass 1 populates
+    assert len(eng._prefix_cache) > 0
+    warm = _shared_prefix_trace(cfg)
+    tickets = [eng.submit(r) for r in warm]
+    # every warm prompt found the shared system prefix at submit...
+    assert eng.telemetry.prefix_hits >= len(warm)
+    # ...and a hit ticket may NOT be stolen while its snapshot is local
+    assert all(not eng.steal_eligible(t) for t in tickets)
+    while eng.has_work:
+        eng.step_once()
+        eng.states.check_partition()
+    for a, b in zip(warm, cold):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.output == b.output, (a.rid, a.output, b.output)
+    assert not eng._pending_restore
+
+
+def test_prefix_cache_lru_bounded(lm_setup):
+    """The cache never exceeds its entry cap; eviction is LRU."""
+    cfg, params = lm_setup
+    eng = InferenceEngine(cfg, params, prefix_cache=2, prefill_chunk=8,
+                          batch_slots=3, max_len=64,
+                          prefill_buckets=(8, 16, 32, 48))
+    eng.run(_mixed_trace(cfg, seed=5, lens=(40, 30, 26, 33)))
+    assert len(eng._prefix_cache) <= 2
+
+
+def test_paging_serves_more_sessions_than_slots(lm_setup):
+    """Acceptance (PR 8): with host-RAM paging a 2-slot engine serves 6
+    concurrent sessions with ZERO loss and outputs token-identical to a
+    6-slot engine — slot count no longer bounds concurrency — with the
+    partition exact at every tick and real page traffic."""
+    cfg, params = lm_setup
+    lens = (40, 5, 9, 30, 3, 12)
+    big = InferenceEngine(cfg, params, prefill_chunk=8, batch_slots=6,
+                          max_len=64, prefill_buckets=(8, 16, 32, 48))
+    ref = _mixed_trace(cfg, seed=9, lens=lens)
+    big.run(ref)
+    eng = InferenceEngine(cfg, params, prefill_chunk=8, batch_slots=2,
+                          max_len=64, prefill_buckets=(8, 16, 32, 48),
+                          page_host=True)
+    got = _mixed_trace(cfg, seed=9, lens=lens)
+    for r in got:
+        eng.submit(r)
+    assert eng.inflight + eng.scheduler.depth == len(got)   # none shed
+    while eng.has_work:
+        eng.step_once()
+        eng.states.check_partition()
+    tel = eng.telemetry
+    assert tel.served == len(got) and all(r.done for r in got)
+    assert tel.paged_out > 0 and tel.paged_in > 0
+    assert tel.paged_in == tel.paged_out        # every park faulted back
+    assert not eng._paged
+    for a, b in zip(got, ref):
+        assert a.output == b.output, (a.rid, a.output, b.output)
+    assert sorted(eng.free) == list(range(2))
+
+
+def test_mid_prefill_migration_resumes_from_chunk(lm_setup):
+    """Acceptance (PR 8): under ``migrate=True`` an idle replica adopts a
+    loaded sibling's mid-prefill continuation WITH its snapshot — the
+    thief resumes from the last completed chunk (adoption sees the exact
+    chunk-boundary offset, never zero), outputs stay token-identical to
+    an unmigrated engine, and the moves land in ``migrated``, not
+    ``steals``."""
+    from repro.serving.router import ReplicaRouter
+    cfg, params = lm_setup
+    kw = dict(batch_slots=3, max_len=64, prefill_buckets=(8, 16, 32, 48),
+              prefill_chunk=8)
+    lens = (40, 38, 36, 30, 33, 12)
+    mono = InferenceEngine(cfg, params, **kw)
+    ref = _mixed_trace(cfg, seed=5, lens=lens)
+    mono.run(ref)
+    reps = [InferenceEngine(cfg, params, **kw) for _ in range(2)]
+    adopted = []                    # (prefill_pos at adoption, snap.length)
+    orig = reps[1].adopt_prefill
+    reps[1].adopt_prefill = lambda t, snap: (
+        adopted.append((t.payload.prefill_pos, snap.length)), orig(t, snap))
+    router = ReplicaRouter(reps, steal=False, migrate=True)
+    got = _mixed_trace(cfg, seed=5, lens=lens)
+    for r in got:
+        reps[0].submit(r)           # hot-keyed skew: replica 1 sits idle
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    assert tel.migrated > 0 and tel.steals == 0
+    assert tel.migrated == len(adopted)
+    for pos, length in adopted:
+        assert pos == length        # the snapshot ships the whole prefix
+        assert pos >= 8             # >= one completed chunk: no zero-restart
+        assert pos % 8 == 0         # chunk-boundary resume offset
+    for a, b in zip(got, ref):
+        assert a.output == b.output, (a.rid, a.output, b.output)
+    for e in reps:
+        e.states.check_partition()
+        assert sorted(e.free) == list(range(3))
+
+
+def test_snapshot_counters_round_trip_summary(lm_setup):
+    """The four PR 8 counters surface in summary() and merge correctly
+    through fleet aggregation (the report path smoke)."""
+    tel = Telemetry()
+    tel.record_prefix_hit()
+    tel.record_paged_out(2)
+    tel.record_paged_in(2)
+    tel.record_migrated(3)
+    s = tel.summary()
+    assert (s["prefix_hits"], s["paged_out"], s["paged_in"],
+            s["migrated"]) == (1, 2, 2, 3)
+    merged = Telemetry.merged([tel, Telemetry()])
+    assert merged.migrated == 3 and merged.prefix_hits == 1
+    rep = tel.report()
+    assert "prefix" in rep and "paging" in rep and "migrated" in rep
