@@ -2,7 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic smoke-prefix perf-gate bench ci
+	smoke-quant smoke-elastic smoke-prefix smoke-autotune perf-gate \
+	bench ci
 
 test:
 	python -m pytest -x -q
@@ -75,6 +76,17 @@ smoke-prefix:
 	    --requests 8 --new-tokens 4 --prefill-chunk 16 \
 	    --prefix-cache 16 --verify-prefix
 
+# self-tuning-knob smoke (PR 9): serve with --prefill-chunk auto — the
+# analytic perf model (seeded from the bench's published calibration
+# when results/BENCH_serving.json is present) picks the chunk at the
+# per-bucket efficiency knee — and assert the chosen chunk sits on the
+# ladder at or below the bench-measured knee, with outputs
+# token-identical to a hand-set reference chunk
+smoke-autotune:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 8 --new-tokens 4 --slots 2 --max-len 64 \
+	    --prefill-chunk auto --verify-autotune
+
 # perf-regression gate: named deterministic scenarios vs the bounds in
 # results/PERF_REFERENCES.json — exits 1 loudly on any violation
 perf-gate:
@@ -84,4 +96,5 @@ bench:
 	python -m benchmarks.run --only serving
 
 ci: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic smoke-prefix perf-gate bench
+	smoke-quant smoke-elastic smoke-prefix smoke-autotune perf-gate \
+	bench

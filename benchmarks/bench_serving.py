@@ -100,6 +100,22 @@ both call it):
   ``zero_lost``, ``paged_out``/``paged_in`` (real page traffic, equal —
   every parked session faulted back), ``partition_ok`` (the
   free|active|prefilling partition held at every tick).
+- ``perf_model``: the PR 9 analytic perf model audited on a temporal
+  holdout — calibration drains feed ``observe()`` per
+  ``(stage, bucket)`` cell, a second round re-measures the same cells,
+  and the fitted line must predict them within ``error_bound`` relative
+  error (``max_rel_error``/``within_bound``, enforced again by
+  ``make perf-gate``): ``scenarios`` (per-cell ``stage``/``tokens``/
+  ``predicted_ms``/``measured_ms``/``rel_err``/``overhead``),
+  ``fitted_terms`` (per-stage ``t_fix``/``t_tok`` — ``smoke-autotune``
+  reloads ``chunk_prefill/fp32``), ``knee_bucket`` (measured efficiency
+  knee on the bench ladder) vs ``cold_knee_bucket`` (the analytic
+  default's), ``auto_prefill_chunk`` (what
+  ``InferenceEngine(prefill_chunk="auto")`` resolves on this model) vs
+  ``hand_set_chunk``, ``suggested_buckets`` (ladder derived from the
+  chunked-trace length distribution), ``cold_prior`` (model vs linear
+  cold-start service ratio), ``transfer`` (per-snapshot cost from real
+  paging traffic at the spec's asymmetric H2D/D2H bandwidths).
 """
 from __future__ import annotations
 
@@ -138,7 +154,7 @@ def validate_payload(payload: Dict) -> None:
     missing = []
     for section in ("lm", "dlrm", "router", "overload", "chunked_prefill",
                     "work_stealing", "elastic", "quantized",
-                    "prefix_cache", "paging"):
+                    "prefix_cache", "paging", "perf_model"):
         if section not in payload:
             missing.append(section)
     for section in ("lm", "dlrm"):
@@ -237,6 +253,25 @@ def validate_payload(payload: Dict) -> None:
     for mode in ("paged", "reference"):
         for k in sorted(SUMMARY_KEYS - set(pg.get(mode, {}))):
             missing.append(f"paging.{mode}.{k}")
+    pm = payload.get("perf_model", {})
+    for k in ("arch", "flops_per_token", "error_bound", "max_rel_error",
+              "within_bound", "scenarios", "fitted_terms", "knee_bucket",
+              "cold_knee_bucket", "auto_prefill_chunk", "hand_set_chunk",
+              "suggested_buckets", "cold_prior", "transfer"):
+        if k not in pm:
+            missing.append(f"perf_model.{k}")
+    if "chunk_prefill/fp32" not in pm.get("fitted_terms", {}):
+        # the smoke-autotune reference line (launch/serve.py reloads it)
+        missing.append("perf_model.fitted_terms.chunk_prefill/fp32")
+    for i, sc in enumerate(pm.get("scenarios", [])):
+        for k in ("stage", "tokens", "predicted_ms", "measured_ms",
+                  "rel_err", "overhead"):
+            if k not in sc:
+                missing.append(f"perf_model.scenarios[{i}].{k}")
+    for k in ("bytes_per_transfer", "d2h_s", "h2d_s", "d2h_h2d_ratio",
+              "bytes_saved_frac"):
+        if k not in pm.get("transfer", {}):
+            missing.append(f"perf_model.transfer.{k}")
     if missing:
         raise ValueError("BENCH_serving.json schema violation; missing: "
                          + ", ".join(missing))
@@ -459,7 +494,8 @@ def _chunk_trace(cfg):
     head-of-line blocker: monolithically its dispatch stalls every
     request that arrives while it runs, chunked it yields at every
     chunk boundary. Its own TTFT is the price (one sample, the
-    distribution max, excluded by nearest-rank p99 at 100 samples)."""
+    distribution max; the interpolated p99 at 100 samples gives it only
+    1% weight against the 99th sample)."""
     rng = np.random.default_rng(23)
     reqs = []
     for i in range(_CHUNK_LOAD):
@@ -951,6 +987,144 @@ def _paging_summary():
             "partition_ok": partition_ok}
 
 
+# ---- analytic perf model: predicted vs measured step time (PR 9) ----------
+
+_PM_BOUND = 0.35           # max allowed |predicted-measured|/measured per cell
+_PM_PASSES = 5             # drains per cell, calibration AND measurement
+
+
+def _pm_cell_pass_s(eng, cfg, stage, length, seed, new_tokens=1):
+    """Serving-level seconds per ``stage`` dispatch of ONE single-request
+    drain. With JAX async dispatch the executor's per-stage timer sees
+    only dispatch latency, not device time (executor.py), so the cell is
+    timed by wall clock around the whole drain — the engine syncs on
+    every emitted token, so the wall time IS the step cost, admission
+    and slot-write overhead included (exactly what a serving-level model
+    should price) — divided by the pass's ``stage`` dispatch count. A
+    fixed-length prompt pins every dispatch of the pass to the same
+    ``(bucket, batch=1)`` cell, so the bare-stage-name telemetry count
+    attributes cleanly."""
+    rng = np.random.default_rng(seed)
+    tel = eng.telemetry
+    c0 = tel.stage_calls.get(stage, 0)
+    req = Request(7000 + seed,
+                  rng.integers(0, cfg.vocab_size, length).astype(np.int32),
+                  max_new_tokens=new_tokens)
+    t0 = time.perf_counter()
+    eng.run([req])
+    wall = time.perf_counter() - t0
+    calls = tel.stage_calls.get(stage, 0) - c0
+    assert calls > 0, f"calibration pass dispatched no {stage!r} stage"
+    return wall / calls
+
+
+def _pm_transfer_terms(pm):
+    """Calibrate the model's transfer terms from REAL snapshot traffic: a
+    tiny host-paging engine (slot-starved, so sessions park to host RAM
+    and fault back) populates ``transfer_stats`` with measured
+    bytes-per-batched-transfer, which the model prices at the backend
+    spec's asymmetric H2D/D2H rates."""
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = InferenceEngine(cfg, params, batch_slots=2, page_host=True,
+                          prefill_chunk=8, max_len=64,
+                          prefill_buckets=(8, 16, 32))
+    rng = np.random.default_rng(11)
+    eng.run([Request(i, rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                     max_new_tokens=4) for i in range(4)])
+    assert eng.transfer_stats.num_transfers_batched > 0, \
+        "paging pass produced no snapshot traffic to calibrate on"
+    return pm.snapshot_transfer_terms(eng.transfer_stats)
+
+
+def _perf_model_summary():
+    """Temporal-holdout audit of the analytic perf model (the PR 9
+    self-tuning source of truth): calibration drains feed ``observe()``
+    per ``(stage, bucket)`` cell, then a SECOND round of drains
+    re-measures the same cells and the fitted line must predict them to
+    within ``_PM_BOUND`` relative error — the bound ``make perf-gate``
+    enforces. Cells are single-request drains so the bare-stage-name
+    telemetry delta attributes cleanly (see ``_pm_cell_pass_s``); the
+    monolithic engine calibrates the ``prefill`` ladder, the chunked
+    engine the ``chunk_prefill`` ladder, and a decode run the ``decode``
+    stage. Alongside the error audit the section publishes every knob
+    answer the model now owns: the fitted lines (``fitted_terms`` —
+    ``make smoke-autotune`` reloads ``chunk_prefill/fp32``), the
+    measured efficiency knee (``knee_bucket``) and the engine's resolved
+    ``prefill_chunk="auto"``, the traffic-derived bucket ladder, the
+    sublinear cold-start prior, and the asymmetric-bandwidth transfer
+    terms calibrated from real snapshot traffic."""
+    from repro.serving.perf_model import PerfModel
+
+    cfg = _chunk_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    mono = InferenceEngine(cfg, params, **_CHUNK_KW)
+    chunked = InferenceEngine(cfg, params, prefill_chunk=_CHUNK,
+                              **_CHUNK_KW)
+    pm = mono.perf_model           # sized from params by the engine
+
+    # (engine, stage, bucket=padded cell tokens, prompt length, new_tokens):
+    # lengths pick the bucket (12->16, 60->64, 440->448); the 440-token
+    # chunked drain runs 7 chunk dispatches, all padded to bucket 64
+    cells = [(mono, "prefill", 16, 12, 1),
+             (mono, "prefill", 64, 60, 1),
+             (mono, "prefill", 448, 440, 1),
+             (chunked, "chunk_prefill", 16, 12, 1),
+             (chunked, "chunk_prefill", 64, 440, 1),
+             (mono, "decode", _CHUNK_KW["batch_slots"], 12, 9)]
+    for eng, stage, bucket, length, nt in cells:      # warm: compile cells
+        _pm_cell_pass_s(eng, cfg, stage, length, 999, new_tokens=nt)
+    for eng, stage, bucket, length, nt in cells:      # calibration round
+        for k in range(_PM_PASSES):
+            s = _pm_cell_pass_s(eng, cfg, stage, length, 100 + k,
+                                new_tokens=nt)
+            pm.observe(stage, bucket=bucket, seconds=s)
+
+    scenarios = []
+    for eng, stage, bucket, length, nt in cells:      # held-out measurement
+        meas = sorted(_pm_cell_pass_s(eng, cfg, stage, length, 200 + k,
+                                      new_tokens=nt)
+                      for k in range(_PM_PASSES))
+        measured = meas[len(meas) // 2]
+        predicted = pm.predict_dispatch_s(stage, bucket)
+        scenarios.append({
+            "stage": stage, "tokens": bucket,
+            "predicted_ms": predicted * 1e3, "measured_ms": measured * 1e3,
+            "rel_err": abs(predicted - measured) / max(measured, 1e-12),
+            "overhead": pm.cell_overhead(stage, bucket=bucket)})
+    max_rel_error = max(s["rel_err"] for s in scenarios)
+    assert max_rel_error <= _PM_BOUND, (
+        f"perf-model relative error {max_rel_error:.3f} over the "
+        f"{_PM_BOUND} bound — the analytic model no longer prices the "
+        f"knobs it tunes")
+
+    # the knob answers, from the SAME calibrated model the engines consume
+    auto = InferenceEngine(cfg, params, prefill_chunk="auto",
+                           perf_model=pm, **_CHUNK_KW)
+    cold_knee = PerfModel(pm.flops_per_token).suggest_prefill_chunk(
+        _CHUNK_KW["prefill_buckets"])
+    lengths = [len(r.tokens) for r in _chunk_trace(cfg)]
+    return {"arch": "deepseek-7b",
+            "flops_per_token": pm.flops_per_token,
+            "error_bound": _PM_BOUND,
+            "max_rel_error": max_rel_error,
+            "within_bound": max_rel_error <= _PM_BOUND,
+            "scenarios": scenarios,
+            "fitted_terms": pm.fitted_terms(),
+            "knee_bucket": pm.suggest_prefill_chunk(
+                _CHUNK_KW["prefill_buckets"]),
+            "cold_knee_bucket": cold_knee,
+            "auto_prefill_chunk": auto.prefill_chunk,
+            "hand_set_chunk": _CHUNK,
+            "suggested_buckets": list(pm.suggest_buckets(
+                lengths, max_len=_CHUNK_KW["max_len"])),
+            "cold_prior": {
+                "bucket": 448, "base": 16,
+                "model_ratio": pm.service_ratio(448, 16),
+                "linear_ratio": 448 / 16},
+            "transfer": _pm_transfer_terms(pm)}
+
+
 def run() -> List[Row]:
     lm = _lm_summary()
     dlrm = _dlrm_summary()
@@ -962,10 +1136,11 @@ def run() -> List[Row]:
     quantized = _quantized_summary()
     prefix = _prefix_cache_summary()
     paging = _paging_summary()
+    perf = _perf_model_summary()
     emit({"lm": lm, "dlrm": dlrm, "router": router, "overload": overload,
           "chunked_prefill": chunked, "work_stealing": stealing,
           "elastic": elastic, "quantized": quantized,
-          "prefix_cache": prefix, "paging": paging})
+          "prefix_cache": prefix, "paging": paging, "perf_model": perf})
     rows = []
     for name, s in (("lm", lm), ("dlrm", dlrm),
                     ("router_single", router["single"]),
@@ -1054,4 +1229,18 @@ def run() -> List[Row]:
         f"ttft_no_worse={quantized['ttft_p99_no_worse']};"
         f"high_on_fp32={qf['high_on_fp32']};"
         f"zero_lost={qf['zero_lost']};measured=true"))
+    top = max(perf["scenarios"], key=lambda s: s["tokens"])
+    rows.append(Row(
+        "serving/perf_model",
+        top["measured_ms"] * 1e3,
+        f"max_rel_err={perf['max_rel_error']:.3f};"
+        f"bound={perf['error_bound']};"
+        f"within_bound={perf['within_bound']};"
+        f"knee={perf['knee_bucket']};cold_knee={perf['cold_knee_bucket']};"
+        f"auto_chunk={perf['auto_prefill_chunk']};"
+        f"hand_set={perf['hand_set_chunk']};"
+        f"buckets={'/'.join(str(b) for b in perf['suggested_buckets'])};"
+        f"cold_ratio={perf['cold_prior']['model_ratio']:.2f}"
+        f"v{perf['cold_prior']['linear_ratio']:.0f}linear;"
+        f"measured=true"))
     return rows

@@ -170,12 +170,31 @@ def scenario_prefix() -> Dict[str, float]:
             "token_identical": pc["token_identical"]}
 
 
+def scenario_perf_model() -> Dict[str, float]:
+    """Analytic perf-model error bound from the checked-in bench JSON
+    (the calibration/holdout measurement is wall-clock on real engines,
+    like ``chunked``): the model's worst predicted-vs-measured relative
+    error across the audited cells must stay under the bench's
+    ``error_bound`` — a violation means the self-tuning knobs (auto
+    prefill chunk, bucket ladder, cold-start priors) are being priced
+    off a model that no longer tracks the runtime it tunes. The resolved
+    auto chunk must also stay on the measured efficiency knee."""
+    with open(BENCH_PATH) as f:
+        payload = json.load(f)
+    pm = payload["perf_model"]
+    return {"max_rel_error": pm["max_rel_error"],
+            "within_bound": pm["within_bound"],
+            "auto_on_knee":
+                pm["auto_prefill_chunk"] == pm["knee_bucket"]}
+
+
 SCENARIOS: Dict[str, Callable[[], Dict[str, float]]] = {
     "steal": scenario_steal,
     "router": scenario_router,
     "elastic": scenario_elastic,
     "chunked": scenario_chunked,
     "prefix": scenario_prefix,
+    "perf_model": scenario_perf_model,
 }
 
 

@@ -37,6 +37,9 @@ make smoke-elastic
 echo "== prefix-cache smoke: warm-cache replay, token-identical hits =="
 make smoke-prefix
 
+echo "== autotune smoke: --prefill-chunk auto on the perf-model knee =="
+make smoke-autotune
+
 echo "== perf-regression gate (results/PERF_REFERENCES.json) =="
 make perf-gate
 

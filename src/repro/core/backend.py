@@ -1,0 +1,76 @@
+"""Hardware backend specs for the analytic performance layer.
+
+The roofline terms in ``launch/hlo_analysis.py`` and the serving perf
+model (``serving/perf_model.py``) both need peak-rate constants.  They
+used to be TPU-v5e literals hardcoded at the roofline call site; this
+module makes them a parameter so a different part (or the paper's
+first-generation accelerator itself) is a spec, not a code edit.
+
+Transfer-path asymmetry: the paper's deployment measured the
+host->device ingest path sustaining ~0.868 words/cycle while the
+device->host readback path (gather-contended) sustained only ~0.298
+words/cycle — a ~2.9x asymmetry.  We carry that ratio on the spec so
+snapshot/restore cost predictions charge the two directions
+differently instead of assuming a symmetric link.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+# Measured ingest/readback rates (words/cycle) from the accelerator
+# bring-up; only the RATIO is used — absolute link bandwidth is a spec
+# field in bytes/s.
+H2D_WORDS_PER_CYCLE = 0.868
+D2H_WORDS_PER_CYCLE = 0.298
+D2H_H2D_RATIO = D2H_WORDS_PER_CYCLE / H2D_WORDS_PER_CYCLE   # ~0.343
+
+
+@dataclass(frozen=True)
+class BackendSpec:
+    """Peak envelope of one accelerator chip.
+
+    All rates are per-chip except ``ici_bw`` (per link).  ``h2d_bw`` is
+    the host->device ingest bandwidth; ``d2h_bw`` the device->host
+    readback bandwidth (typically much lower — gather contention).
+    """
+    name: str
+    peak_flops_bf16: float        # FLOP/s, dense bf16/fp16
+    peak_flops_int8: float        # FLOP/s, dense int8
+    hbm_bw: float                 # bytes/s
+    ici_bw: float                 # bytes/s per link
+    h2d_bw: float                 # bytes/s, host -> device
+    d2h_bw: float                 # bytes/s, device -> host
+
+    def peak_flops(self, precision: str = "fp32") -> float:
+        """Peak dense FLOP/s for an engine precision string.
+
+        ``w8a8``/``int8`` run on the int8 path; everything else (fp32
+        emulation included — the model is relative, the measured
+        overhead factor absorbs the absolute scale) gets the bf16 peak.
+        """
+        if precision in ("w8a8", "int8"):
+            return self.peak_flops_int8
+        return self.peak_flops_bf16
+
+    def precision_scale(self, precision: str = "fp32") -> float:
+        """Predicted step-time multiplier vs the bf16/fp32 baseline
+        (1.0 for fp32, 0.5 for w8a8 on a 2x-int8 part)."""
+        return self.peak_flops_bf16 / self.peak_flops(precision)
+
+
+# TPU v5e — the numbers previously hardcoded in hlo_analysis.py, plus a
+# PCIe-class host link with the measured readback asymmetry applied.
+TPU_V5E = BackendSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_int8=394e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    h2d_bw=32e9,
+    d2h_bw=32e9 * D2H_H2D_RATIO,
+)
+
+DEFAULT_BACKEND = TPU_V5E
+
+BACKENDS: Dict[str, BackendSpec] = {TPU_V5E.name: TPU_V5E}

@@ -562,19 +562,24 @@ def analyze(text: str) -> HloSummary:
 
 
 # --------------------------------------------------------------------------
-# Roofline terms (TPU v5e)
+# Roofline terms — peak rates come from a BackendSpec (default TPU v5e)
 # --------------------------------------------------------------------------
-PEAK_FLOPS_BF16 = 197e12      # per chip
-HBM_BW = 819e9                # per chip
-ICI_BW = 50e9                 # per link
+from repro.core.backend import DEFAULT_BACKEND, BackendSpec  # noqa: E402
+
+# Back-compat aliases: these used to be hardcoded literals here and are
+# imported by the roofline/fig7/table2 benches.
+PEAK_FLOPS_BF16 = DEFAULT_BACKEND.peak_flops_bf16   # per chip
+HBM_BW = DEFAULT_BACKEND.hbm_bw                     # per chip
+ICI_BW = DEFAULT_BACKEND.ici_bw                     # per link
 
 
 def roofline_terms(summary: HloSummary, *,
-                   flops_override: Optional[float] = None) -> Dict[str, float]:
+                   flops_override: Optional[float] = None,
+                   spec: BackendSpec = DEFAULT_BACKEND) -> Dict[str, float]:
     """All terms are seconds (per-device program => per-chip time)."""
     flops = flops_override if flops_override is not None else summary.dot_flops
     return {
-        "compute_s": flops / PEAK_FLOPS_BF16,
-        "memory_s": summary.hbm_bytes / HBM_BW,
-        "collective_s": summary.total_collective_bytes / ICI_BW,
+        "compute_s": flops / spec.peak_flops_bf16,
+        "memory_s": summary.hbm_bytes / spec.hbm_bw,
+        "collective_s": summary.total_collective_bytes / spec.ici_bw,
     }

@@ -60,6 +60,36 @@ from repro.serving.router import ReplicaRouter
 # (BENCH_serving.json quantized.agreement_threshold)
 QUANT_AGREEMENT_THRESHOLD = 0.90
 
+# the hand-set chunk the CI chunked smoke uses — the reference the
+# autotune smoke must be token-identical to
+AUTOTUNE_REF_CHUNK = 16
+BENCH_JSON = "results/BENCH_serving.json"
+
+
+def _autotune_model():
+    """(PerfModel, bench_knee) for the autotune smoke: the model is
+    seeded from the bench-published fitted dispatch-cost line
+    (``perf_model.fitted_terms`` in BENCH_serving.json) when the file is
+    present, so the smoke's auto chunk sits on the SAME measured
+    efficiency curve the bench knee was read from — which makes
+    ``chosen <= knee`` exact (a smaller ladder with a lower top bucket
+    has a lower knee threshold on the same curve), not a flaky
+    cross-measurement comparison.  Cold analytic defaults (and no knee
+    bound) when the bench file is missing."""
+    import json
+    from repro.serving.perf_model import PerfModel
+    pm, knee = PerfModel(), None
+    try:
+        with open(BENCH_JSON) as f:
+            sec = json.load(f)["perf_model"]
+        terms = sec["fitted_terms"]["chunk_prefill/fp32"]
+        pm.set_dispatch_cost("chunk_prefill", terms["t_fix_ms"] / 1e3,
+                             terms["t_tok_us"] / 1e6)
+        knee = int(sec["knee_bucket"])
+    except (OSError, KeyError, ValueError):
+        pass
+    return pm, knee
+
 
 def _lm_requests(args, cfg):
     rng = np.random.default_rng(7)
@@ -94,6 +124,9 @@ def serve_lm(args):
         if args.verify_chunked:
             raise SystemExit("--verify-chunked runs single-engine only "
                              "(drop --replicas)")
+        if args.verify_autotune:
+            raise SystemExit("--verify-autotune runs single-engine only "
+                             "(drop --replicas)")
         precisions = [p.strip() for p in args.replica_precisions.split(",")] \
             if args.replica_precisions \
             else [args.precision] * args.replicas
@@ -119,6 +152,11 @@ def serve_lm(args):
         raise SystemExit("--verify-steal needs --replicas >= 2 --steal")
     if args.replica_precisions:
         raise SystemExit("--replica-precisions needs --replicas >= 2")
+    bench_knee = None
+    if args.verify_autotune:
+        if args.prefill_chunk != "auto":
+            raise SystemExit("--verify-autotune needs --prefill-chunk auto")
+        kw["perf_model"], bench_knee = _autotune_model()
     eng = InferenceEngine(cfg, params, precision=args.precision, **kw)
     t0 = time.perf_counter()
     eng.run(reqs)
@@ -144,6 +182,31 @@ def serve_lm(args):
                              f"monolithic for requests {bad}")
         print(f"verify-chunked OK: {len(reqs)} requests token-identical "
               f"to monolithic prefill")
+    if args.verify_autotune:
+        chosen = eng.prefill_chunk
+        if chosen not in eng.buckets:
+            raise SystemExit(f"FAIL: auto chunk {chosen} is not on the "
+                             f"bucket ladder {eng.buckets}")
+        if bench_knee is not None and chosen > bench_knee:
+            raise SystemExit(f"FAIL: auto chunk {chosen} above the "
+                             f"bench-measured efficiency knee "
+                             f"{bench_knee}")
+        ref = InferenceEngine(cfg, params, precision=args.precision,
+                              **dict(kw, perf_model=None,
+                                     prefill_chunk=AUTOTUNE_REF_CHUNK))
+        ref_reqs = _lm_requests(args, cfg)
+        ref.run(ref_reqs)
+        bad = [r.rid for r, m in zip(reqs, ref_reqs)
+               if r.output != m.output]
+        if bad:
+            raise SystemExit(f"FAIL: auto-chunk outputs diverge from the "
+                             f"hand-set chunk {AUTOTUNE_REF_CHUNK} for "
+                             f"requests {bad}")
+        knee_note = (f"<= bench knee {bench_knee}" if bench_knee is not None
+                     else "no bench reference, analytic model")
+        print(f"verify-autotune OK: auto chunk {chosen} on ladder "
+              f"{eng.buckets} ({knee_note}); {len(reqs)} requests "
+              f"token-identical to hand-set chunk {AUTOTUNE_REF_CHUNK}")
     if args.verify_quant:
         if args.precision != "w8a8":
             raise SystemExit("--verify-quant needs --precision w8a8 "
@@ -380,6 +443,10 @@ def _service_est(v: str):
     return v if v == "auto" else float(v)
 
 
+def _chunk_arg(v: str):
+    return v if v == "auto" else int(v)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
@@ -410,12 +477,20 @@ def main(argv=None):
                     help="hot-spot all requests onto replica 0, kill it "
                          "mid-run, and assert nonzero steals + zero lost "
                          "requests (the CI steal smoke)")
-    ap.add_argument("--prefill-chunk", type=int, default=None,
+    ap.add_argument("--prefill-chunk", type=_chunk_arg, default=None,
                     help="split prompts into N-token chunks interleaved "
-                         "with decode steps (LM only)")
+                         "with decode steps (LM only); 'auto' picks the "
+                         "chunk at the perf model's per-bucket "
+                         "efficiency knee")
     ap.add_argument("--verify-chunked", action="store_true",
                     help="replay the trace monolithically and assert "
                          "chunked outputs are token-identical")
+    ap.add_argument("--verify-autotune", action="store_true",
+                    help="with --prefill-chunk auto: assert the chosen "
+                         "chunk is on the bucket ladder, within the "
+                         "bench-measured efficiency knee, and "
+                         "token-identical to the hand-set default "
+                         "(the CI autotune smoke)")
     ap.add_argument("--prefix-cache", type=int, default=None,
                     help="content-hash prefix cache capacity (entries): "
                          "snapshot prompt prefixes at chunk granularity "

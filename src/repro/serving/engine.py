@@ -52,6 +52,7 @@ from repro.core.transfer import (TransferStats, snapshot_device_get,
                                  snapshot_device_put)
 from repro.models import model as model_mod
 from repro.serving.executor import StageExecutor
+from repro.serving.perf_model import PerfModel
 from repro.serving.scheduler import Scheduler, SizeTimePolicy, Ticket
 from repro.serving.state import (SequenceSnapshot, SequenceStateManager,
                                  require_chunkable)
@@ -128,7 +129,8 @@ class InferenceEngine:
                  max_queue: Optional[int] = None,
                  service_ms_est: Optional[float | str] = None,
                  service_ms_fallback: Optional[float] = None,
-                 prefill_chunk: Optional[int] = None,
+                 prefill_chunk: Optional[int | str] = None,
+                 perf_model: Optional[PerfModel] = None,
                  precision: str = "fp32",
                  quantized_params=None,
                  quant_budget: float = 0.05,
@@ -161,6 +163,18 @@ class InferenceEngine:
         # (kept for A/B tests); default admits up to all free slots at once
         self.max_prefill_batch = max_prefill_batch or batch_slots
 
+        # analytic perf model (PR 9), sized from the fp32 weights: prices
+        # the auto prefill chunk, the estimator's cold-start priors, and
+        # the router's per-precision scale-up seed
+        self.perf_model = (perf_model if perf_model is not None
+                           else PerfModel.for_params(params))
+        if prefill_chunk == "auto":
+            # self-tuning knob: the chunk at the model's per-bucket
+            # efficiency knee instead of a hand-set literal (chunked
+            # prefill is token-identical for ANY chunk, so this only
+            # moves the latency/efficiency trade, never the outputs)
+            prefill_chunk = self.perf_model.suggest_prefill_chunk(
+                self.buckets)
         self.prefill_chunk = prefill_chunk
         if prefill_chunk is not None:
             if prefill_chunk < 1:
@@ -191,7 +205,8 @@ class InferenceEngine:
                                    default_slo_ms=slo_ms,
                                    max_queue=max_queue,
                                    service_ms_est=service_ms_est,
-                                   service_ms_fallback=service_ms_fallback)
+                                   service_ms_fallback=service_ms_fallback,
+                                   perf_model=self.perf_model)
 
         self.caches = model_mod.init_caches(cfg, batch_slots, max_len)
         self._batch_axes = _cache_batch_axes(cfg, max_len)

@@ -93,7 +93,7 @@ class ReplicaRouter:
 
     def __init__(self, replicas: Sequence[Any], *, route: str = "count",
                  ewma_alpha: float = 0.25, steal: bool = False,
-                 migrate: bool = False):
+                 migrate: bool = False, perf_model: Any = None):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         if route not in ("count", "feedback"):
@@ -113,6 +113,14 @@ class ReplicaRouter:
         # exists; a homogeneous fleet routes exactly as before.
         self.precisions = [getattr(r, "precision", "fp32")
                            for r in self.replicas]
+        # analytic perf model (PR 9): prices an unmeasured replica's
+        # EWMA seed by its PRECISION instead of the raw fleet mean (an
+        # int8 joiner in an fp32-dominated fleet was charged fp32 cost
+        # and misrouted until measured). Defaults to whatever model the
+        # first replica carries; None degrades to the old fleet mean.
+        self.perf_model = (perf_model if perf_model is not None
+                           else getattr(self.replicas[0], "perf_model",
+                                        None))
         self.ewma_s = [0.0] * len(self.replicas)  # 0 = not yet measured
         self.routed = [0] * len(self.replicas)   # submits per replica
         self.shed = 0                            # fleet admission rejections
@@ -133,9 +141,11 @@ class ReplicaRouter:
                     now: Optional[float] = None) -> int:
         """Elastic scale-up: register a fresh replica (engine-factory
         output) as a live routing target and return its index. The new
-        replica starts with an empty queue, an unmeasured EWMA (it
-        inherits the fleet mean until its first measurement), and takes
-        traffic immediately; cross-replica stealing rebalances existing
+        replica starts with an empty queue, an unmeasured EWMA (until
+        its first measurement it is charged the fleet mean re-priced to
+        ITS precision via the perf model — ``_seed_ewma`` — so an int8
+        joiner is not misrouted at fp32 cost), and takes traffic
+        immediately; cross-replica stealing rebalances existing
         backlog onto it on the next steal round — scale-up needs no
         dedicated work-movement path. ``clock_offset`` is the replica's
         local-clock offset vs the fleet clock for late joiners running
@@ -180,17 +190,39 @@ class ReplicaRouter:
         self.ewma_s[i] = seconds if e == 0.0 else \
             (1.0 - self.ewma_alpha) * e + self.ewma_alpha * seconds
 
+    def _seed_ewma(self, i: int) -> float:
+        """EWMA seed for an unmeasured replica ``i`` (a late joiner from
+        ``add_replica``, or any replica before its first measurement).
+
+        With a perf model, each measured sibling's EWMA is re-priced to
+        the joiner's precision by the model's predicted per-precision
+        step-time ratio, then averaged — an int8 joiner in a mixed fleet
+        seeds at ~half the fp32 siblings' step time instead of
+        inheriting their fp32-dominated mean (the scale-up misrouting
+        bug this fixes). Without a model it degrades to the raw fleet
+        mean; with no measurements at all it returns 0 (count-based
+        fallback in ``_cost``)."""
+        measured = [(e, self.precisions[j])
+                    for j, e in enumerate(self.ewma_s) if e > 0.0]
+        if not measured:
+            return 0.0
+        if self.perf_model is None:
+            return sum(e for e, _ in measured) / len(measured)
+        scale_i = self.perf_model.precision_scale(self.precisions[i])
+        return sum(e * scale_i / self.perf_model.precision_scale(p)
+                   for e, p in measured) / len(measured)
+
     def _cost(self, i: int) -> float:
         """Routing cost. Count mode: raw load. Feedback mode: estimated
         clearing time of the new ticket = (load + 1) x EWMA step time
-        (an unmeasured replica is charged the fleet-mean EWMA so it
-        neither hoards nor starves before its first measurement)."""
+        (an unmeasured replica is charged the precision-scaled fleet
+        seed — ``_seed_ewma`` — so it neither hoards nor starves before
+        its first measurement)."""
         if self.route_mode != "feedback":
             return float(self.load(i))
-        measured = [e for e in self.ewma_s if e > 0.0]
-        if not measured:
+        e = self.ewma_s[i] or self._seed_ewma(i)
+        if e == 0.0:
             return float(self.load(i))
-        e = self.ewma_s[i] or (sum(measured) / len(measured))
         return (self.load(i) + 1) * e
 
     def _deadline_depth(self, i: int) -> int:

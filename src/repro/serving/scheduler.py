@@ -191,55 +191,83 @@ class ServiceEstimator:
     """Admission-estimator calibration from live telemetry (ROADMAP open
     item): the per-ticket service estimate the feasibility check charges
     is the p50 of recent completions in the ticket's size bucket, not a
-    hand-tuned constant. Falls back to the pooled p50 across buckets,
-    then to a static per-bucket cold-start prior, until a bucket has
-    accumulated ``min_samples`` observations.
+    hand-tuned constant.
 
-    Cold-start prior (PR 8): before any completion lands, the old
-    single pooled fallback priced a 256-token prefill and an 8-token
-    one identically, so early feasibility shedding was blind to size.
-    The prior scales ``fallback_ms`` linearly with the ticket's bucket
-    relative to the SMALLEST bucket (``fallback_ms`` = the estimate at
-    ``buckets[0]``): bucketed prefill executables are ~linear in padded
-    length, so cold estimates rank sizes correctly from the first
-    submit. The scale factor is ``COLD_PRIOR_SCALE`` — documented here
-    as THE constant, not tuned per deployment."""
+    Cold-start precedence (pinned by the PR 9 regression tests, most
+    specific first):
 
-    # per-bucket cold prior: estimate(size) = fallback_ms *
-    # (bucket(size) / buckets[0]) ** COLD_PRIOR_SCALE. 1.0 = linear in
-    # padded prefill length, the measured shape of the bucketed
-    # executables (compute and K/V write both scale with the bucket).
+    1. warm bucket — its own p50 once it holds ``min_samples``,
+    2. pooled fallback, SIZE-RESCALED — the pooled p50 anchored at the
+       median sampled bucket and rescaled to the target bucket.  The old
+       raw pooled p50 priced every cold size off whatever bucket
+       happened to be warm (a 32-token sample set priced a 512-token
+       prefill, and a warm bucket silently flipped the size-aware static
+       prior OFF for every other still-cold bucket),
+    3. static prior — ``fallback_ms`` (the estimate at ``buckets[0]``)
+       rescaled to the target bucket,
+    4. ``None`` (no estimate, no feasibility shedding).
+
+    The rescaling ratio comes from the analytic perf model when one is
+    wired (``PerfModel.service_ratio`` — sublinear, because the fixed
+    dispatch cost amortizes with bucket size) and falls back to the
+    linear ``COLD_PRIOR_SCALE`` guess without one."""
+
+    # linear cold prior used when no perf model is wired: estimate
+    # scales as (bucket / base) ** COLD_PRIOR_SCALE. 1.0 = linear in
+    # padded prefill length, the rough shape of the bucketed
+    # executables; the perf model's fitted t_fix/t_tok line replaces
+    # this with the measured sublinear curve.
     COLD_PRIOR_SCALE = 1.0
 
     def __init__(self, fallback_ms: Optional[float] = None,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 window: int = 64, min_samples: int = 5):
+                 window: int = 64, min_samples: int = 5,
+                 perf_model=None):
         self.fallback_ms = fallback_ms
         self.buckets = tuple(buckets)
         self.window = window
         self.min_samples = min_samples
+        self.perf_model = perf_model
         self._samples: Dict[int, List[float]] = {}
-        self._pooled: List[float] = []
+        # pooled fallback keeps (bucket, service_ms) pairs so the
+        # estimate can be re-anchored to the target bucket's size
+        self._pooled: List[tuple] = []
 
     def observe(self, size: int, service_ms: float):
         b = pick_bucket(size, self.buckets)
         s = self._samples.setdefault(b, [])
         s.append(service_ms)
         del s[:-self.window]
-        self._pooled.append(service_ms)
+        self._pooled.append((b, service_ms))
         del self._pooled[:-self.window * 4]
 
+    def _ratio(self, bucket: float, base: float) -> float:
+        """Predicted service-time ratio bucket/base: perf-model curve
+        when wired, linear guess otherwise."""
+        if bucket == base:
+            return 1.0
+        if self.perf_model is not None:
+            return self.perf_model.service_ratio(bucket, base)
+        return (bucket / base) ** self.COLD_PRIOR_SCALE
+
     def estimate(self, size: int) -> Optional[float]:
-        s = self._samples.get(pick_bucket(size, self.buckets), [])
+        b = pick_bucket(size, self.buckets)
+        s = self._samples.get(b, [])
         if len(s) >= self.min_samples:
             return percentile(sorted(s), 0.5)
         if len(self._pooled) >= self.min_samples:
-            return percentile(sorted(self._pooled), 0.5)
+            # pooled fallback, rescaled: anchor the pooled p50 at the
+            # median sampled bucket, then scale to the target bucket —
+            # a small bucket is never priced off a large-bucket sample
+            # set (or vice versa)
+            ms = percentile(sorted(m for _, m in self._pooled), 0.5)
+            anchor = percentile(sorted(float(k) for k, _ in self._pooled),
+                                0.5)
+            return ms * self._ratio(b, anchor)
         if self.fallback_ms is None:
             return None
-        # static per-bucket cold-start prior (see class docstring)
-        ratio = pick_bucket(size, self.buckets) / self.buckets[0]
-        return self.fallback_ms * ratio ** self.COLD_PRIOR_SCALE
+        # static cold-start prior (see class docstring)
+        return self.fallback_ms * self._ratio(b, self.buckets[0])
 
 
 # ---- the scheduler --------------------------------------------------------
@@ -272,7 +300,8 @@ class Scheduler:
                  default_slo_ms: Optional[float] = None,
                  max_queue: Optional[int] = None,
                  service_ms_est: Optional[float | str] = None,
-                 service_ms_fallback: Optional[float] = None):
+                 service_ms_fallback: Optional[float] = None,
+                 perf_model=None):
         self.policy = make_policy(policy)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.default_slo_ms = default_slo_ms
@@ -280,7 +309,8 @@ class Scheduler:
         if service_ms_est == "auto":
             self.service_ms_est = None
             self._svc_auto: Optional[ServiceEstimator] = \
-                ServiceEstimator(fallback_ms=service_ms_fallback)
+                ServiceEstimator(fallback_ms=service_ms_fallback,
+                                 perf_model=perf_model)
         elif isinstance(service_ms_est, str):
             raise ValueError(f"service_ms_est must be a number, 'auto', or "
                              f"None; got {service_ms_est!r}")

@@ -20,11 +20,25 @@ MAX_SAMPLES = 8192
 
 
 def percentile(sorted_vals: List[float], p: float) -> float:
-    """Nearest-rank percentile of an ascending-sorted list (0 if empty)."""
+    """Linearly interpolated percentile of an ascending-sorted list
+    (0 if empty).
+
+    The old nearest-rank form (``ceil(n*p)-1``) returned the LOWER
+    middle element at p=0.5 for even n — the same lower-middle bias
+    ``StepDeadline`` fixed by moving to ``statistics.median`` (PR 7).
+    Interpolated rank ``p*(n-1)`` agrees with ``statistics.median`` at
+    p=0.5 and is exact at p=0/p=1 (min/max).
+    """
     if not sorted_vals:
         return 0.0
-    i = max(math.ceil(len(sorted_vals) * p) - 1, 0)
-    return sorted_vals[min(i, len(sorted_vals) - 1)]
+    n = len(sorted_vals)
+    if n == 1:
+        return sorted_vals[0]
+    rank = min(max(p, 0.0), 1.0) * (n - 1)
+    lo = math.floor(rank)
+    hi = min(lo + 1, n - 1)
+    frac = rank - lo
+    return sorted_vals[lo] + (sorted_vals[hi] - sorted_vals[lo]) * frac
 
 
 @dataclass

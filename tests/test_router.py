@@ -647,7 +647,28 @@ def _fake_payload():
                        "reference": _fake_summary(),
                        "token_identical": True, "zero_lost": True,
                        "paged_out": 1, "paged_in": 1,
-                       "partition_ok": True}}
+                       "partition_ok": True},
+            "perf_model": {"arch": "a", "flops_per_token": 1.0,
+                           "error_bound": 0.35, "max_rel_error": 0.1,
+                           "within_bound": True,
+                           "scenarios": [{"stage": "prefill", "tokens": 16,
+                                          "predicted_ms": 1.0,
+                                          "measured_ms": 1.0,
+                                          "rel_err": 0.0,
+                                          "overhead": 2.0}],
+                           "fitted_terms": {"chunk_prefill/fp32":
+                                            {"t_fix_ms": 1.0,
+                                             "t_tok_us": 10.0}},
+                           "knee_bucket": 64, "cold_knee_bucket": 32,
+                           "auto_prefill_chunk": 64, "hand_set_chunk": 16,
+                           "suggested_buckets": [16, 64],
+                           "cold_prior": {"bucket": 448, "base": 16,
+                                          "model_ratio": 6.0,
+                                          "linear_ratio": 28.0},
+                           "transfer": {"bytes_per_transfer": 1.0,
+                                        "d2h_s": 1.0, "h2d_s": 1.0,
+                                        "d2h_h2d_ratio": 2.9,
+                                        "bytes_saved_frac": 0.4}}}
 
 
 def test_bench_payload_schema_validates():
@@ -676,6 +697,10 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["prefix_cache"]["hit"]["prefix_hits"]
     del p["paging"]["partition_ok"]
     del p["paging"]["paged"]["paged_out"]
+    del p["perf_model"]["max_rel_error"]
+    del p["perf_model"]["fitted_terms"]["chunk_prefill/fp32"]
+    del p["perf_model"]["scenarios"][0]["rel_err"]
+    del p["perf_model"]["transfer"]["d2h_h2d_ratio"]
     with pytest.raises(ValueError) as ei:
         validate_payload(p)
     msg = str(ei.value)
@@ -697,6 +722,10 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "prefix_cache.hit.prefix_hits" in msg
     assert "paging.partition_ok" in msg
     assert "paging.paged.paged_out" in msg
+    assert "perf_model.max_rel_error" in msg
+    assert "perf_model.fitted_terms.chunk_prefill/fp32" in msg
+    assert "perf_model.scenarios[0].rel_err" in msg
+    assert "perf_model.transfer.d2h_h2d_ratio" in msg
 
 
 def test_bench_emit_writes_valid_json(tmp_path):

@@ -448,9 +448,11 @@ def test_resubmit_refuses_shed_ticket():
 # ---- live service estimation (auto admission calibration) -----------------
 
 def test_auto_estimator_falls_back_until_samples_exist():
-    """service_ms_est="auto": no shedding before any completions (no
-    estimate), static fallback until min_samples, then the per-bucket
-    p50 of observed admit->finish service times."""
+    """service_ms_est="auto": static fallback until min_samples, then
+    the per-bucket p50 of observed admit->finish service times. A bucket
+    with no samples of its own borrows the pooled p50 SIZE-RESCALED from
+    the median sampled bucket (PR 9) — the old raw pooled borrow priced
+    a 512-token prefill off a 32-token sample set."""
     s = Scheduler("fifo", service_ms_est="auto", service_ms_fallback=20.0)
     assert s.service_ms_for(10) == 20.0          # fallback seeds the check
     for i in range(5):
@@ -458,8 +460,10 @@ def test_auto_estimator_falls_back_until_samples_exist():
         s.admit(1, now=float(i))
         s.complete(t, now=float(i) + 0.05)       # 50 ms service each
     assert s.service_ms_for(10) == pytest.approx(50.0)
-    # a bucket with no samples borrows the pooled p50, not the fallback
-    assert s.service_ms_for(400) == pytest.approx(50.0)
+    # a cold bucket borrows the pooled p50 rescaled from the anchor
+    # bucket (32, where every sample lives) to its own size: with no
+    # perf model wired the prior is linear, 50ms * 512/32
+    assert s.service_ms_for(400) == pytest.approx(50.0 * 512 / 32)
 
 
 def test_auto_estimator_none_without_fallback_means_no_shedding():
