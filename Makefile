@@ -2,8 +2,8 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
 .PHONY: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic smoke-prefix smoke-autotune perf-gate \
-	bench ci
+	smoke-quant smoke-elastic smoke-prefix smoke-fleet-prefix \
+	smoke-autotune perf-gate bench ci
 
 test:
 	python -m pytest -x -q
@@ -76,6 +76,16 @@ smoke-prefix:
 	    --requests 8 --new-tokens 4 --prefill-chunk 16 \
 	    --prefix-cache 16 --verify-prefix
 
+# fleet-prefix smoke (PR 10): 2-replica fleet with the fleet-shared
+# prefix tier under a hot-system-prompt trace — populate one replica,
+# then route the rest through locality-aware steering and assert
+# nonzero remote hits, zero lost, outputs token-identical to cold
+# prefill
+smoke-fleet-prefix:
+	python -m repro.launch.serve --arch deepseek-7b --smoke \
+	    --requests 10 --new-tokens 4 --prefill-chunk 16 \
+	    --prefix-cache 16 --replicas 2 --verify-fleet-prefix
+
 # self-tuning-knob smoke (PR 9): serve with --prefill-chunk auto — the
 # analytic perf model (seeded from the bench's published calibration
 # when results/BENCH_serving.json is present) picks the chunk at the
@@ -96,5 +106,5 @@ bench:
 	python -m benchmarks.run --only serving
 
 ci: test properties smoke smoke-router smoke-chunked smoke-steal \
-	smoke-quant smoke-elastic smoke-prefix smoke-autotune perf-gate \
-	bench
+	smoke-quant smoke-elastic smoke-prefix smoke-fleet-prefix \
+	smoke-autotune perf-gate bench

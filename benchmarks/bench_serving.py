@@ -92,6 +92,31 @@ both call it):
   ``ttft_hit_improved``, ``token_identical`` (hit outputs must match a
   cold engine token for token — the final chunk always recomputes, so
   this is exact, not a bound), ``prefix_hits``.
+- ``fleet_prefix``: the PR 10 fleet-shared prefix tier. A multi-family
+  hot-prompt trace (``families`` shared ``prefix_tokens``-token system
+  prompts, each request one family plus a unique tail) runs through a
+  2-replica fleet in three arms at the SAME offered load (median-of-3,
+  caches rewound to the same snapshot before every trial): ``cold``
+  (caches disabled), ``per_engine`` (today's fleet — each replica its
+  own LRU, each family populated on exactly one replica, so load
+  balancing keeps paying cold misses on the other), and ``shared`` (the
+  fleet index: hit traffic steers to holders when the perf-model-priced
+  locality win beats the load-imbalance cost, otherwise the holder's
+  snapshot ships — or the prefix recomputes — per the model's
+  restore-vs-recompute pricing, with evictions parked in the shared
+  host-RAM tier). ``ttft_hit_ratio`` (shared p99 / cold p99),
+  ``ttft_fleet_improved`` (shared must beat per-engine strictly),
+  ``token_identical`` (steered/shipped/faulted hits emit exactly a cold
+  single engine's tokens), ``zero_lost``, fleet-level
+  ``prefix_remote_hits``/``prefix_shipped``/``prefix_recomputed``
+  (timed pass + probes), ``host_tier`` (shared-tier occupancy/traffic;
+  ``drain_fault_ins`` proves a drained holder's prefix survives for the
+  fleet — replayed on the survivor it faults in from host RAM
+  token-identically instead of recomputing), and ``pricing`` — two deterministic probes that force the
+  restore-vs-recompute decision and must land on OPPOSITE legs:
+  ``ship`` on a wide-recurrent-state hybrid (snapshot bytes flat in
+  prefix length) and ``recompute`` on pure attention (KV bytes grow
+  per cached token past what the chunk-prefill line charges to redo).
 - ``paging``: host-RAM paging lifts the slot bound on concurrency. A
   2-slot engine with ``page_host=True`` serves ``sessions`` (> slots)
   concurrent sessions: ``paged``/``reference`` (summary dicts; the
@@ -108,7 +133,12 @@ both call it):
   ``make perf-gate``): ``scenarios`` (per-cell ``stage``/``tokens``/
   ``predicted_ms``/``measured_ms``/``rel_err``/``overhead``),
   ``fitted_terms`` (per-stage ``t_fix``/``t_tok`` — ``smoke-autotune``
-  reloads ``chunk_prefill/fp32``), ``knee_bucket`` (measured efficiency
+  reloads ``chunk_prefill/fp32``; the chunk ladder is calibrated at
+  BOTH precisions, so the dict also carries ``chunk_prefill/w8a8`` and
+  ``load_precision_scale`` can pin the measured int8-vs-fp32 multiplier
+  from this JSON instead of assuming the paper's §V 0.5 constant —
+  published as ``precision_scale`` with the fitted ratio and the spec
+  default), ``knee_bucket`` (measured efficiency
   knee on the bench ladder) vs ``cold_knee_bucket`` (the analytic
   default's), ``auto_prefill_chunk`` (what
   ``InferenceEngine(prefill_chunk="auto")`` resolves on this model) vs
@@ -142,8 +172,9 @@ SUMMARY_KEYS = frozenset({
     "served", "qps", "steps", "prefills", "prefill_batches",
     "total_tokens", "compile_count", "sla_miss_frac", "shed",
     "continuations", "steals", "drained", "precision_rehomed",
-    "scaled_in", "mean_queue_depth", "prefix_hits", "paged_out",
-    "paged_in", "migrated",
+    "scaled_in", "mean_queue_depth", "prefix_hits", "prefix_remote_hits",
+    "prefix_shipped", "prefix_recomputed", "prefix_host_hits",
+    "paged_out", "paged_in", "migrated",
     "latency_ms_p50", "latency_ms_p95", "latency_ms_p99",
     "latency_ms_max", "ttft_ms_p50", "ttft_ms_p95", "ttft_ms_p99",
 })
@@ -154,7 +185,7 @@ def validate_payload(payload: Dict) -> None:
     missing = []
     for section in ("lm", "dlrm", "router", "overload", "chunked_prefill",
                     "work_stealing", "elastic", "quantized",
-                    "prefix_cache", "paging", "perf_model"):
+                    "prefix_cache", "fleet_prefix", "paging", "perf_model"):
         if section not in payload:
             missing.append(section)
     for section in ("lm", "dlrm"):
@@ -244,6 +275,22 @@ def validate_payload(payload: Dict) -> None:
     for mode in ("cold", "hit"):
         for k in sorted(SUMMARY_KEYS - set(pc.get(mode, {}))):
             missing.append(f"prefix_cache.{mode}.{k}")
+    fp = payload.get("fleet_prefix", {})
+    for k in ("arch", "replicas", "families", "requests", "prefix_tokens",
+              "prefill_chunk", "offered_load_ms", "cold", "per_engine",
+              "shared", "ttft_hit_ratio", "ttft_fleet_improved",
+              "token_identical", "zero_lost", "prefix_remote_hits",
+              "prefix_shipped", "prefix_recomputed", "host_tier",
+              "pricing"):
+        if k not in fp:
+            missing.append(f"fleet_prefix.{k}")
+    for mode in ("cold", "per_engine", "shared"):
+        for k in sorted(SUMMARY_KEYS - set(fp.get(mode, {}))):
+            missing.append(f"fleet_prefix.{mode}.{k}")
+    for arm in ("ship", "recompute"):
+        for k in ("arch", "shipped", "recomputed", "remote_hits"):
+            if k not in fp.get("pricing", {}).get(arm, {}):
+                missing.append(f"fleet_prefix.pricing.{arm}.{k}")
     pg = payload.get("paging", {})
     for k in ("arch", "sessions", "slots", "reference_slots", "paged",
               "reference", "token_identical", "zero_lost", "paged_out",
@@ -934,6 +981,320 @@ def _prefix_cache_summary():
             "prefix_hits": hit["prefix_hits"]}
 
 
+# ---- fleet-shared prefix tier: locality + priced ships (PR 10) ------------
+
+_FP_CHUNK = 16
+# 512-token shared prefix per prompt family: long enough that the cold
+# full-prefill denominator dwarfs the ~ms-scale environmental jitter a
+# warm hit's TTFT carries (a single slow dispatch in the shared arm's
+# p99 must not swing the published ratio across its gate bound)
+_FP_PREFIX_CHUNKS = 32
+# ODD family count: coprime to the 2-replica round-robin, so a family's
+# requests ALTERNATE replicas (with families % replicas == 0 the i%2
+# routing aligns with the i%families tagging and the per-engine baseline
+# gets accidental perfect locality — the miss it exists to show)
+_FP_FAMILIES = 5
+_FP_LOAD = 36               # requests per timed pass
+_FP_ARCH = "recurrentgemma-9b-hybrid"
+# cache sizing pins the regime: the trace's working set is 5 families x
+# 32 chunk keys = 160; one card's LRU holds 2 families (64), the fleet's
+# local tiers 4 (128) — so per-engine caches THRASH (every replica sees
+# every family), while the fleet tier's steering partitions families
+# onto holders and the host-RAM backstop keeps what the cards drop
+_FP_KW = dict(batch_slots=2, max_len=576, prefill_buckets=(16, 64, 544),
+              prefill_chunk=_FP_CHUNK, prefix_cache=64)
+
+
+def _fp_cfg():
+    """Stateful hybrid (RG-LRU + global attention): the fixed-size
+    recurrent state dominates the snapshot, so shipping a cached prefix
+    across replicas prices below recomputing it — the arch where the
+    restore-vs-recompute decision goes the SHIP way (the pure-attention
+    probe in ``pricing`` goes the other way)."""
+    from repro.configs import ATTN_GLOBAL, RECURRENT
+    cfg = reduce_for_smoke(get_config("recurrentgemma-9b"))
+    return dataclasses.replace(cfg, block_pattern=(RECURRENT, ATTN_GLOBAL))
+
+
+def _fp_prefixes(cfg):
+    # family prefixes are FIXED across passes (seed independent of the
+    # trace seed): trials vary arrival tails, not which prompts are hot
+    rng = np.random.default_rng(37)
+    return [rng.integers(0, cfg.vocab_size, _FP_CHUNK * _FP_PREFIX_CHUNKS)
+            for _ in range(_FP_FAMILIES)]
+
+
+def _fp_trace(cfg, seed=0, n=_FP_LOAD, rid0=0):
+    """Multi-tenant hot-prompt stream: request i cycles through
+    ``_FP_FAMILIES`` shared 128-token system prompts plus a short unique
+    tail. One engine's LRU could hold every family — the fleet problem
+    is that load balancing SPREADS a family's requests across replicas,
+    so today's per-engine caches pay a cold miss per (family, replica)
+    pair."""
+    prefixes = _fp_prefixes(cfg)
+    rng = np.random.default_rng(41 + seed)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 12)))
+        out.append(Request(rid0 + i,
+                           np.concatenate([prefixes[i % _FP_FAMILIES],
+                                           tail]).astype(np.int32),
+                           max_new_tokens=3))
+    return out
+
+
+def _fleet_timed_pass(router, reqs, gap_ms):
+    """``_timed_pass`` for a fleet: paced arrivals through the router
+    (where steering happens), every live replica ticking between
+    arrivals; the fleet summary over the pass's wall clock."""
+    for rep in router.replicas:
+        rep.telemetry.reset_serving_stats()
+    router._serving_s = 0.0
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or router.has_work:
+        now_ms = (time.perf_counter() - t0) * 1e3
+        while i < len(reqs) and i * gap_ms <= now_ms:
+            router.submit(reqs[i])
+            i += 1
+        stepped = False
+        for k, rep in enumerate(router.replicas):
+            if not router.dead[k] and rep.has_work:
+                rep.step_once()
+                stepped = True
+        if not stepped and i < len(reqs):
+            time.sleep(max((i * gap_ms - now_ms) / 1e3, 0.0))
+    router._serving_s = time.perf_counter() - t0
+    return router.summary()
+
+
+def _fp_cache_state(router):
+    idx = router.prefix_index
+    return ([list(rep.export_prefix_cache()) for rep in router.replicas],
+            list(idx.host.items()) if idx is not None else [])
+
+
+def _fp_restore(router, state):
+    """Rewind every replica's local prefix LRU — and the fleet index's
+    holder map and host-RAM tier, when the router carries one — to a
+    snapshotted state, so repeated timed trials start from identical
+    cache contents (a timed pass mutates the caches it measures: misses
+    insert, evictions park to the host tier, ships copy entries across
+    replicas)."""
+    from collections import OrderedDict
+    local_caches, host = state
+    for rep, entries in zip(router.replicas, local_caches):
+        rep._prefix_cache = OrderedDict(entries)
+    idx = router.prefix_index
+    if idx is not None:
+        idx._holders.clear()
+        idx.host = OrderedDict(host)
+        idx.host_evicted = 0
+        for rid, entries in enumerate(local_caches):
+            for key, _ in entries:
+                idx.add(key, rid)
+
+
+def _fp_median(router, cfg, gap_ms, state, trials=3):
+    outs = []
+    for t in range(trials):
+        _fp_restore(router, state)
+        outs.append(_fleet_timed_pass(router, _fp_trace(cfg, seed=t),
+                                      gap_ms))
+    outs.sort(key=lambda s: s["ttft_ms_p99"])
+    return outs[len(outs) // 2]
+
+
+def _fp_pricing_probe(cfg, params, arch):
+    """Deterministic restore-vs-recompute probe: replica 0 prefills one
+    family (becoming its only holder), filler load on it prices the
+    locality steer out, and the next request of that family lands on
+    replica 1 — the perf model must then price shipping the holder's
+    snapshot against recomputing the prefix. Which leg wins is the
+    architecture's call: a wide fixed-size recurrent state ships
+    (snapshot bytes flat in prefix length), pure-attention KV recomputes
+    (bytes grow with every cached token while the recompute stays on the
+    chunk-prefill line). The section runs BOTH archs so every bench run
+    exercises both legs."""
+    from repro.serving.perf_model import PerfModel
+    pm = PerfModel.for_params(params)
+    reps = make_replicas(cfg, params, 2, **_FP_KW)
+    router = ReplicaRouter(reps, perf_model=pm, fleet_prefix=True,
+                           prefix_host_entries=64)
+    reps[0].submit(_fp_trace(cfg, seed=7, n=1, rid0=500)[0])
+    router.run_until_drained()          # replica 0 now holds the family
+    # filler depth that prices steering to the holder out: the steer
+    # needs saved >= (load_0 - load_1) x step, so pile load_0 past it
+    saved = pm.predict_step_s("chunk_prefill",
+                              bucket=_FP_CHUNK * _FP_PREFIX_CHUNKS,
+                              chunk=_FP_CHUNK)
+    step = pm.predict_dispatch_s("decode", 1)
+    rng = np.random.default_rng(43)
+    for j in range(int(saved / max(step, 1e-12)) + 3):
+        reps[0].submit(Request(600 + j,
+                               rng.integers(0, cfg.vocab_size, 6)
+                               .astype(np.int32), max_new_tokens=1))
+    router.submit(_fp_trace(cfg, seed=8, n=1, rid0=700)[0])
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    assert tel.prefix_remote_hits > 0, \
+        f"{arch}: pricing probe produced no remote hit"
+    return {"arch": arch, "shipped": tel.prefix_shipped,
+            "recomputed": tel.prefix_recomputed,
+            "remote_hits": tel.prefix_remote_hits}
+
+
+def _fleet_prefix_summary():
+    """The PR 10 claim: one replica's warm prefix is the FLEET's warm
+    prefix. Three arms over the same multi-family hot-prompt trace at
+    the SAME offered load (median-of-3 timed passes, caches rewound to
+    the same snapshot before every trial):
+
+    - ``cold``: caches disabled — every request pays its full prefill;
+    - ``per_engine``: today's fleet — per-replica LRUs populated with
+      ONE request per family through normal routing, so every family is
+      warm SOMEWHERE but load balancing keeps landing its traffic on
+      the replica that never saw it;
+    - ``shared``: same populate plus the fleet index — hit traffic
+      steers to holders when the predicted prefill saving beats the
+      load-imbalance cost, otherwise the snapshot ships (or the prefix
+      recomputes) per the perf model's pricing, and local evictions
+      park in the shared host-RAM tier.
+
+    Guardrails: shared-fleet outputs token-identical to a cold single
+    engine on a fresh-tail trace, zero lost in every arm, and the
+    ``pricing`` probes must land on OPPOSITE restore-vs-recompute
+    legs."""
+    from repro.serving.perf_model import PerfModel
+    cfg = _fp_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    pm = PerfModel.for_params(params)
+
+    base = ReplicaRouter(make_replicas(cfg, params, 2, **_FP_KW))
+    shared = ReplicaRouter(make_replicas(cfg, params, 2, **_FP_KW),
+                           perf_model=pm, fleet_prefix=True,
+                           prefix_host_entries=4 * _FP_KW["prefix_cache"])
+
+    empty = ([[] for _ in base.replicas], [])
+    for router in (base, shared):     # warm every executable, incl. the
+        for r in _fp_trace(cfg, seed=99, rid0=900):   # hit/restore path
+            router.submit(r)
+        router.run_until_drained()
+        # executor caches are PER replica, and a drain keeps both slots
+        # busy — so the batch-1 chunk path a PACED pass mostly runs
+        # would otherwise compile mid-trial on whichever replica the
+        # drain tail missed (one compile stall queues every arrival
+        # behind it). One solo request per replica pins it down.
+        for rid, rep in enumerate(router.replicas):
+            rep.submit(_fp_trace(cfg, seed=97, n=1, rid0=950 + rid)[0])
+            router.run_until_drained()
+        _fp_restore(router, empty)
+
+    # offered load calibrated against the COLD fleet's drain rate (cache
+    # off while calibrating), with GENEROUS headroom: the gap-0 drain
+    # overlaps both batch slots per replica, while a paced pass serves
+    # mostly solo — about half the drain rate — and a gap near the solo
+    # service time puts the cold arm on a bimodal knife edge (one early
+    # queue tips it into the slower batched regime and it never
+    # recovers). 4.4x keeps every arm in the stable regime, so the
+    # ratio measures prefill work saved rather than queue collapse.
+    for rep in base.replicas:
+        rep.prefix_cache = None
+    cal = _fleet_timed_pass(base, _fp_trace(cfg, seed=98, rid0=800), 0.0)
+    gap_ms = 4.4 * 1e3 / max(cal["qps"], 1e-6)
+    cold = _fp_median(base, cfg, gap_ms, empty)
+    for rep in base.replicas:
+        rep.prefix_cache = _FP_KW["prefix_cache"]
+
+    # populate: ONE request per family through normal routing — the
+    # families split across replicas, each warm on exactly one card
+    for router in (base, shared):
+        for r in _fp_trace(cfg, seed=5, n=_FP_FAMILIES, rid0=400):
+            router.submit(r)
+        router.run_until_drained()
+    per_engine = _fp_median(base, cfg, gap_ms, _fp_cache_state(base))
+    shared_state = _fp_cache_state(shared)
+    shared_s = _fp_median(shared, cfg, gap_ms, shared_state)
+
+    # exactness: steered/shipped/faulted hits must emit the same tokens
+    # a cold single engine does on the same fresh-tail trace
+    cold_eng = InferenceEngine(cfg, params,
+                               **{**_FP_KW, "prefix_cache": None})
+    ref = _fp_trace(cfg, seed=9, rid0=0)
+    cold_eng.run(ref)
+    got = _fp_trace(cfg, seed=9, rid0=0)
+    _fp_restore(shared, shared_state)
+    for r in got:
+        shared.submit(r)
+    shared.run_until_drained()
+    identical = all(a.output == b.output for a, b in zip(got, ref))
+    assert identical, "fleet-shared hit outputs diverged from cold prefill"
+    zero_lost = (all(r.done for r in got)
+                 and cold["served"] == _FP_LOAD
+                 and per_engine["served"] == _FP_LOAD
+                 and shared_s["served"] == _FP_LOAD)
+
+    # a prefix evicted from — or orphaned by — a card survives for the
+    # fleet: drain a family's ONLY holder (the drain path exports its
+    # cache into the host tier and purges it from the index), replay
+    # that family on the survivor, and the prefix must fault in from
+    # host RAM token-identically instead of recomputing cold
+    _fp_restore(shared, shared_state)
+    probe = _fp_trace(cfg, seed=17, n=1, rid0=450)[0]
+    probe_ref = _fp_trace(cfg, seed=17, n=1, rid0=450)[0]
+    cold_eng.run([probe_ref])
+    key = shared.replicas[0].prefix_keys(probe)[0]
+    holder = shared.prefix_index.holders(key)[0]
+    survivor = next(i for i in range(len(shared.replicas)) if i != holder)
+    shared.drain_replica(holder)
+    before = shared.replicas[survivor].telemetry.prefix_host_hits
+    shared.submit(probe)
+    shared.run_until_drained()
+    drain_fault_ins = (shared.replicas[survivor].telemetry.prefix_host_hits
+                       - before)
+    assert drain_fault_ins > 0, \
+        "drained holder's prefix did not fault in from the host tier"
+    assert probe.output == probe_ref.output, \
+        "host-tier fault-in diverged from cold prefill"
+
+    att_cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    pricing = {"ship": _fp_pricing_probe(cfg, params, _FP_ARCH),
+               "recompute": _fp_pricing_probe(
+                   att_cfg, M.init_params(att_cfg, jax.random.PRNGKey(0)),
+                   "deepseek-7b")}
+    assert pricing["ship"]["shipped"] > 0, \
+        "wide-state probe never shipped: the ship leg went unexercised"
+    assert pricing["recompute"]["recomputed"] > 0, \
+        "attention probe never recomputed: the priced-out leg went " \
+        "unexercised"
+
+    return {
+        "arch": _FP_ARCH, "replicas": 2, "families": _FP_FAMILIES,
+        "requests": _FP_LOAD,
+        "prefix_tokens": _FP_CHUNK * _FP_PREFIX_CHUNKS,
+        "prefill_chunk": _FP_CHUNK, "offered_load_ms": gap_ms,
+        "cold": cold, "per_engine": per_engine, "shared": shared_s,
+        "ttft_hit_ratio": shared_s["ttft_ms_p99"]
+            / max(cold["ttft_ms_p99"], 1e-9),
+        "ttft_fleet_improved":
+            shared_s["ttft_ms_p99"] < per_engine["ttft_ms_p99"],
+        "token_identical": identical,
+        "zero_lost": zero_lost,
+        "prefix_remote_hits": shared_s["prefix_remote_hits"]
+            + pricing["ship"]["remote_hits"]
+            + pricing["recompute"]["remote_hits"],
+        "prefix_shipped": shared_s["prefix_shipped"]
+            + pricing["ship"]["shipped"],
+        "prefix_recomputed": shared_s["prefix_recomputed"]
+            + pricing["recompute"]["recomputed"],
+        "host_tier": {"entries": len(shared.prefix_index.host),
+                      "evicted_into": shared.prefix_index.host_evicted,
+                      "host_hits": shared_s["prefix_host_hits"],
+                      "drain_fault_ins": drain_fault_ins},
+        "pricing": pricing,
+    }
+
+
 # ---- host-RAM paging: slot count stops bounding concurrency (PR 8) --------
 
 _PG_SESSIONS = 6
@@ -1080,6 +1441,27 @@ def _perf_model_summary():
                                 new_tokens=nt)
             pm.observe(stage, bucket=bucket, seconds=s)
 
+    # w8a8 calibration cells (PR 10): the same chunk ladder measured on
+    # a quantized engine, so ``fitted_terms`` carries a
+    # ``chunk_prefill/w8a8`` line and the router's ``precision_scale``
+    # can be FIT from measurement (``load_precision_scale``) instead of
+    # assumed from the paper's §V 0.5 MAC-density projection. CPU int8
+    # emulation is SLOWER than fp32 BLAS, so the fitted scale lands
+    # above 1 here — measured beats assumed; on the paper's part the
+    # same fit lands near 0.5. Calibration-only: the holdout audit
+    # below stays on the fp32 cells.
+    int8 = InferenceEngine(cfg, params, precision="w8a8",
+                           prefill_chunk=_CHUNK, **_CHUNK_KW)
+    w8_cells = [(int8, "chunk_prefill", 16, 12, 1),
+                (int8, "chunk_prefill", 64, 440, 1)]
+    for eng, stage, bucket, length, nt in w8_cells:
+        _pm_cell_pass_s(eng, cfg, stage, length, 998, new_tokens=nt)
+    for eng, stage, bucket, length, nt in w8_cells:
+        for k in range(_PM_PASSES):
+            s = _pm_cell_pass_s(eng, cfg, stage, length, 300 + k,
+                                new_tokens=nt)
+            pm.observe(stage, bucket=bucket, precision="w8a8", seconds=s)
+
     scenarios = []
     for eng, stage, bucket, length, nt in cells:      # held-out measurement
         meas = sorted(_pm_cell_pass_s(eng, cfg, stage, length, 200 + k,
@@ -1122,6 +1504,9 @@ def _perf_model_summary():
                 "bucket": 448, "base": 16,
                 "model_ratio": pm.service_ratio(448, 16),
                 "linear_ratio": 448 / 16},
+            "precision_scale": {
+                "fitted": pm.fit_precision_scale("w8a8"),
+                "spec_default": pm.spec.precision_scale("w8a8")},
             "transfer": _pm_transfer_terms(pm)}
 
 
@@ -1135,12 +1520,14 @@ def run() -> List[Row]:
     elastic = _elastic_summary()
     quantized = _quantized_summary()
     prefix = _prefix_cache_summary()
+    fleet = _fleet_prefix_summary()
     paging = _paging_summary()
     perf = _perf_model_summary()
     emit({"lm": lm, "dlrm": dlrm, "router": router, "overload": overload,
           "chunked_prefill": chunked, "work_stealing": stealing,
           "elastic": elastic, "quantized": quantized,
-          "prefix_cache": prefix, "paging": paging, "perf_model": perf})
+          "prefix_cache": prefix, "fleet_prefix": fleet, "paging": paging,
+          "perf_model": perf})
     rows = []
     for name, s in (("lm", lm), ("dlrm", dlrm),
                     ("router_single", router["single"]),
@@ -1208,6 +1595,19 @@ def run() -> List[Row]:
         f"token_identical={prefix['token_identical']};"
         f"hits={prefix['prefix_hits']};"
         f"prefix_tokens={prefix['prefix_tokens']};measured=true"))
+    rows.append(Row(
+        "serving/fleet_prefix",
+        fleet["shared"]["ttft_ms_p99"] * 1e3,
+        f"cold_ttft_p99_ms={fleet['cold']['ttft_ms_p99']:.1f};"
+        f"per_engine_ttft_p99_ms={fleet['per_engine']['ttft_ms_p99']:.1f};"
+        f"shared_ttft_p99_ms={fleet['shared']['ttft_ms_p99']:.1f};"
+        f"hit_ratio={fleet['ttft_hit_ratio']:.3f};"
+        f"fleet_improved={fleet['ttft_fleet_improved']};"
+        f"token_identical={fleet['token_identical']};"
+        f"remote_hits={fleet['prefix_remote_hits']};"
+        f"shipped={fleet['prefix_shipped']};"
+        f"recomputed={fleet['prefix_recomputed']};"
+        f"zero_lost={fleet['zero_lost']};measured=true"))
     rows.append(Row(
         "serving/paging",
         paging["paged"]["latency_ms_p50"] * 1e3,

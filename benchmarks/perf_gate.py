@@ -128,7 +128,9 @@ def scenario_elastic() -> Dict[str, float]:
     nothing across every scale/drain event."""
     from repro.serving.fleet_sim import elastic_vs_fixed
     r = elastic_vs_fixed()
+    slo_ms = 500.0
     return {"p99_ms": r["elastic"]["fleet"]["latency_ms_p99"],
+            "p99_vs_slo": r["elastic"]["fleet"]["latency_ms_p99"] / slo_ms,
             "shed_elastic": r["elastic"]["shed"],
             "shed_ratio": r["elastic"]["shed"]
             / max(r["fixed"]["shed"], 1),
@@ -188,12 +190,36 @@ def scenario_perf_model() -> Dict[str, float]:
                 pm["auto_prefill_chunk"] == pm["knee_bucket"]}
 
 
+def scenario_fleet_prefix() -> Dict[str, float]:
+    """Fleet-shared prefix-cache claims from the checked-in bench JSON
+    (wall-clock on real engines, like ``prefix``): the fleet-level
+    warm-hit TTFT ratio must stay under its bound — a regression means
+    locality steering stopped landing traffic on holders — the shared
+    tier must beat the per-engine-cache fleet at equal offered load,
+    hits must stay token-identical with nothing lost, and the priced
+    restore-vs-recompute decision must have been exercised in BOTH
+    directions (a snapshot shipped where transfer beat recompute, and a
+    recompute where it did not)."""
+    with open(BENCH_PATH) as f:
+        payload = json.load(f)
+    fp = payload["fleet_prefix"]
+    return {"ttft_hit_ratio": fp["ttft_hit_ratio"],
+            "ttft_fleet_improved": fp["ttft_fleet_improved"],
+            "token_identical": fp["token_identical"],
+            "zero_lost": fp["zero_lost"],
+            "prefix_remote_hits": fp["prefix_remote_hits"],
+            "prefix_shipped": fp["prefix_shipped"],
+            "prefix_recomputed": fp["prefix_recomputed"],
+            "drain_fault_ins": fp["host_tier"]["drain_fault_ins"]}
+
+
 SCENARIOS: Dict[str, Callable[[], Dict[str, float]]] = {
     "steal": scenario_steal,
     "router": scenario_router,
     "elastic": scenario_elastic,
     "chunked": scenario_chunked,
     "prefix": scenario_prefix,
+    "fleet_prefix": scenario_fleet_prefix,
     "perf_model": scenario_perf_model,
 }
 

@@ -37,6 +37,9 @@ make smoke-elastic
 echo "== prefix-cache smoke: warm-cache replay, token-identical hits =="
 make smoke-prefix
 
+echo "== fleet-prefix smoke: locality steering, remote hits, 0 lost =="
+make smoke-fleet-prefix
+
 echo "== autotune smoke: --prefill-chunk auto on the perf-model knee =="
 make smoke-autotune
 

@@ -119,6 +119,8 @@ def serve_lm(args):
             raise SystemExit("--verify-prefix runs single-engine only "
                              "(drop --replicas)")
         return _verify_prefix(args, cfg, params, kw)
+    if args.verify_fleet_prefix:
+        return _verify_fleet_prefix(args, cfg, params, kw)
     reqs = _lm_requests(args, cfg)
     if args.replicas > 1:
         if args.verify_chunked:
@@ -130,9 +132,20 @@ def serve_lm(args):
         precisions = [p.strip() for p in args.replica_precisions.split(",")] \
             if args.replica_precisions \
             else [args.precision] * args.replicas
+        router_kw = {}
+        if len(set(precisions)) > 1:
+            # mixed fleet: seed the router's cross-precision cost scaling
+            # from the bench-measured fp32/w8a8 fitted terms when the
+            # bench file is present (PerfModel falls back to the paper's
+            # SecV 2x-density constant otherwise)
+            from repro.serving.perf_model import PerfModel
+            pm = PerfModel()
+            pm.load_precision_scale(BENCH_JSON)
+            router_kw["perf_model"] = pm
         router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
                                              precisions=precisions, **kw),
-                               route=args.route, steal=args.steal)
+                               route=args.route, steal=args.steal,
+                               **router_kw)
         if args.verify_steal:
             return _verify_steal(router, reqs, args)
         if args.verify_quant:
@@ -277,6 +290,64 @@ def _verify_prefix(args, cfg, params, kw):
           f"{tel.prefix_hits} prefix-cache hits, outputs token-identical "
           f"to cold prefill")
     print(tel.report())
+    return tel
+
+
+def _verify_fleet_prefix(args, cfg, params, kw):
+    """The CI fleet-prefix smoke (PR 10): a multi-replica fleet with the
+    fleet-shared prefix tier under a hot-system-prompt trace. A populate
+    pass lands the shared prefix on whichever replica serves it first;
+    the rest of the trace then routes through the locality-aware
+    steering path, which must produce nonzero remote hits (steered or
+    shipped), lose nothing, and stay token-identical to a cold
+    single-engine replay. Exits non-zero on any violation."""
+    if args.replicas < 2:
+        raise SystemExit("--verify-fleet-prefix needs --replicas >= 2")
+    if not args.prefix_cache:
+        raise SystemExit("--verify-fleet-prefix needs --prefix-cache")
+    if not args.prefill_chunk:
+        raise SystemExit("--prefix-cache needs --prefill-chunk")
+    from repro.serving.perf_model import PerfModel
+    pm = PerfModel.for_params(params)
+    reqs = _prefix_requests(args, cfg)
+    router = ReplicaRouter(make_replicas(cfg, params, args.replicas,
+                                         **kw),
+                           route=args.route, steal=args.steal,
+                           perf_model=pm, fleet_prefix=True,
+                           prefix_host_entries=4 * args.prefix_cache)
+    # populate pass: the first request warms ONE replica's cache and
+    # registers it in the fleet index — steering only has holders to
+    # steer to once the index is populated
+    router.submit(reqs[0])
+    router.run_until_drained()
+    for r in reqs[1:]:
+        router.submit(r)
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    lost = [r.rid for r in reqs if not r.done]
+    if lost:
+        raise SystemExit(f"FAIL: fleet-prefix run lost requests {lost}")
+    cold = InferenceEngine(cfg, params, precision=args.precision,
+                           **dict(kw, prefix_cache=None))
+    ref = _prefix_requests(args, cfg)
+    cold.run(ref)
+    bad = [r.rid for r, m in zip(reqs, ref) if r.output != m.output]
+    if bad:
+        raise SystemExit(f"FAIL: fleet-prefix outputs diverge from cold "
+                         f"prefill for requests {bad}")
+    if tel.prefix_remote_hits == 0:
+        raise SystemExit("FAIL: no remote prefix hits on a hot-system-"
+                         "prompt trace across the fleet")
+    if tel.prefix_hits == 0:
+        raise SystemExit("FAIL: no prefix-cache hits after steering")
+    print(f"verify-fleet-prefix OK: {len(reqs)} requests across "
+          f"{args.replicas} replicas (routed {router.routed}), "
+          f"{tel.prefix_remote_hits} remote hits "
+          f"({tel.prefix_shipped} shipped, {tel.prefix_recomputed} "
+          f"priced-out recomputes, {tel.prefix_host_hits} host-tier "
+          f"fault-ins), {tel.prefix_hits} local hits, 0 lost, outputs "
+          f"token-identical to cold prefill")
+    print(router.report())
     return tel
 
 
@@ -502,6 +573,12 @@ def main(argv=None):
                          "warm prefix cache and assert nonzero hits with "
                          "outputs token-identical to a cold engine (the "
                          "CI prefix smoke)")
+    ap.add_argument("--verify-fleet-prefix", action="store_true",
+                    help="multi-replica fleet with the fleet-shared "
+                         "prefix tier under a hot-system-prompt trace: "
+                         "assert nonzero remote hits, zero lost, and "
+                         "outputs token-identical to cold prefill (the "
+                         "CI fleet-prefix smoke; needs --replicas >= 2)")
     ap.add_argument("--precision", default="fp32",
                     choices=("fp32", "w8a8"),
                     help="engine execution precision: w8a8 runs every "

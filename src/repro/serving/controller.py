@@ -98,6 +98,11 @@ class ControllerConfig:
     # sample — a Poisson blip above threshold must not reset the trough
     # timer, and a single empty sample must not read as a trough
     down_smooth_alpha: float = 0.05
+    # cache/paging pressure gate: mean paged-fraction across live
+    # replicas above this threshold is an up signal (cards are spilling
+    # KV state to host RAM — the fleet is short on resident slots even
+    # if the queue looks calm). None (default) disables the rule.
+    up_cache_pressure: Optional[float] = None
 
 
 @dataclass
@@ -132,11 +137,17 @@ class FleetController:
 
     def __init__(self, router: Any, factory: Callable[[], Any],
                  monitor: HeartbeatMonitor,
-                 config: ControllerConfig = ControllerConfig()):
+                 config: ControllerConfig = ControllerConfig(),
+                 perf_model: Optional[Any] = None):
         self.router = router
         self.factory = factory
         self.monitor = monitor
         self.config = config
+        # optional analytic PerfModel: when present (and slo_ms is set)
+        # the scale-up wait gate switches from the reactive EWMA estimate
+        # to a predictive forecast — predicted decode step time x queue
+        # depth — which fires BEFORE the first slow completions land
+        self.perf_model = perf_model
         self.decisions: List[Decision] = []
         self.scale_ups = 0
         self.scale_downs = 0
@@ -175,12 +186,27 @@ class FleetController:
                 if self.router.ewma_s[i] > 0.0]
         est_wait_ms = (queue / n) * (sum(ewma) / len(ewma)) * 1e3 \
             if ewma else 0.0
+        # cache/paging pressure: mean paged-fraction across live replicas
+        # (duck-typed — replicas without the property contribute nothing)
+        pressure = [getattr(self.router.replicas[i], "cache_pressure", None)
+                    for i in live]
+        pressure = [p for p in pressure if p is not None]
+        cache_pressure = sum(pressure) / len(pressure) if pressure else 0.0
+        # predictive wait forecast: model-predicted decode step time x
+        # queue depth per live replica — nonzero from the very first
+        # tick, unlike est_wait_ms which needs measured EWMAs
+        wait_forecast_ms = 0.0
+        if self.perf_model is not None:
+            step_s = self.perf_model.predict_dispatch_s("decode", 1)
+            wait_forecast_ms = (queue / n) * step_s * 1e3
         return {"live": len(live), "queue": queue,
                 "queue_per_live": queue / n,
                 "shed_delta": shed - self._last_shed,
                 "completions_delta": done,
                 "miss_frac": miss / done if done else 0.0,
-                "est_wait_ms": est_wait_ms}
+                "est_wait_ms": est_wait_ms,
+                "cache_pressure": cache_pressure,
+                "wait_forecast_ms": wait_forecast_ms}
 
     def _advance_window(self):
         self._last_shed, self._last_sla_total, self._last_sla_miss = \
@@ -197,10 +223,20 @@ class FleetController:
         if sig["completions_delta"] and sig["miss_frac"] > c.up_miss_frac:
             return (f"window miss_frac {sig['miss_frac']:.3f} > "
                     f"{c.up_miss_frac} (p99 past SLO)")
-        if c.slo_ms is not None and sig["est_wait_ms"] \
-                > c.up_wait_ratio * c.slo_ms:
-            return (f"est wait {sig['est_wait_ms']:.1f}ms > "
-                    f"{c.up_wait_ratio} x SLO {c.slo_ms}ms")
+        if c.up_cache_pressure is not None \
+                and sig["cache_pressure"] > c.up_cache_pressure:
+            return (f"cache pressure {sig['cache_pressure']:.2f} > "
+                    f"{c.up_cache_pressure} (paging to host RAM)")
+        if c.slo_ms is not None:
+            # predictive forecast when a perf model is attached; the
+            # reactive EWMA estimate otherwise (identical defaults)
+            if self.perf_model is not None:
+                if sig["wait_forecast_ms"] > c.up_wait_ratio * c.slo_ms:
+                    return (f"forecast wait {sig['wait_forecast_ms']:.1f}ms"
+                            f" > {c.up_wait_ratio} x SLO {c.slo_ms}ms")
+            elif sig["est_wait_ms"] > c.up_wait_ratio * c.slo_ms:
+                return (f"est wait {sig['est_wait_ms']:.1f}ms > "
+                        f"{c.up_wait_ratio} x SLO {c.slo_ms}ms")
         return None
 
     def _underloaded(self, sig: dict) -> Optional[str]:

@@ -136,7 +136,11 @@ class InferenceEngine:
                  quant_budget: float = 0.05,
                  prefix_cache: Optional[int] = None,
                  page_host: bool = False,
+                 page_victim: str = "lru",
                  migrate_min_tokens: Optional[int] = None):
+        if page_victim not in ("lru", "remaining"):
+            raise ValueError(f"page_victim must be 'lru' or 'remaining', "
+                             f"got {page_victim!r}")
         if precision not in ("fp32", "w8a8"):
             raise ValueError(f"precision must be 'fp32' or 'w8a8', "
                              f"got {precision!r}")
@@ -228,7 +232,16 @@ class InferenceEngine:
         # submit-time hits waiting for their first chunk admission:
         # id(ticket) -> snapshot to restore into the acquired slot
         self._pending_restore: Dict[int, SequenceSnapshot] = {}
+        # fleet-shared prefix tier (PR 10): the router installs its
+        # FleetPrefixIndex here via attach_prefix_index — None means the
+        # cache stays purely per-engine (the pre-fleet behaviour)
+        self._prefix_index = None
+        self._replica_id: Optional[int] = None
         self.page_host = page_host
+        self.page_victim = page_victim
+        # LRU-by-last-decode bookkeeping: slot -> decode-step stamp of the
+        # slot's most recent emitted token (activation counts as a touch)
+        self._last_decode: Dict[int, int] = {}
         # paged-out sessions in fault-back (FIFO) order:
         # id(ticket) -> (ticket, snapshot)
         self._paged: "OrderedDict[int, Tuple[Ticket, SequenceSnapshot]]" \
@@ -414,7 +427,10 @@ class InferenceEngine:
         """Longest cached prefix STRICTLY below the request's prefill
         length, at chunk granularity — the final chunk always recomputes,
         so the hit path emits its first token through the same math as a
-        cold prefill (token-identical by construction)."""
+        cold prefill (token-identical by construction). With a fleet
+        index attached, a local miss falls through to the shared
+        host-RAM tier: a prefix evicted from this card's LRU (or a
+        sibling's) faults back in instead of recomputing."""
         total = self._prefill_len(req)
         L = ((total - 1) // self.prefill_chunk) * self.prefill_chunk
         while L >= self.prefill_chunk:
@@ -423,27 +439,105 @@ class InferenceEngine:
             if snap is not None:
                 self._prefix_cache.move_to_end(key)      # LRU touch
                 return snap
+            if self._prefix_index is not None:
+                snap = self._prefix_index.host_get(key)
+                if snap is not None:
+                    self._prefix_store(key, snap)
+                    self.telemetry.record_prefix_host_hit()
+                    return snap
             L -= self.prefill_chunk
         return None
 
+    def _prefix_store(self, key, snap: SequenceSnapshot) -> None:
+        """Put one snapshot into the local LRU (dedup by content key,
+        capacity-bounded) and keep the fleet index exact: inserts
+        register this replica as a holder; local evictions deregister it
+        AND park the evicted snapshot in the shared host-RAM tier
+        (insert-on-evict), so the fleet keeps what this card dropped."""
+        if key in self._prefix_cache:
+            self._prefix_cache.move_to_end(key)
+            return
+        self._prefix_cache[key] = snap
+        if self._prefix_index is not None:
+            self._prefix_index.add(key, self._replica_id)
+        while len(self._prefix_cache) > self.prefix_cache:
+            old_key, old_snap = self._prefix_cache.popitem(last=False)
+            if self._prefix_index is not None:
+                self._prefix_index.discard(old_key, self._replica_id)
+                self._prefix_index.host_insert(old_key, old_snap)
+
     def _prefix_insert(self, req: Request, slot: int) -> None:
         """Admit the slot's written prefix into the cache at a chunk
-        boundary (dedup by content key, LRU-bounded)."""
+        boundary."""
         key = self._prefix_key(req.tokens, req.prefill_pos)
         if key in self._prefix_cache:
             self._prefix_cache.move_to_end(key)
             return
-        self._prefix_cache[key] = self.snapshot_slot(slot, req.prefill_pos)
-        while len(self._prefix_cache) > self.prefix_cache:
-            self._prefix_cache.popitem(last=False)
+        self._prefix_store(key, self.snapshot_slot(slot, req.prefill_pos))
+
+    # ---- fleet-shared prefix tier (ReplicaRouter hooks, PR 10) -----------
+    def attach_prefix_index(self, index, replica_id: int) -> None:
+        """Join a fleet-wide prefix tier: ``index`` is the router's
+        ``FleetPrefixIndex``; every local insert/evict is mirrored there
+        and local misses fault in from its shared host-RAM tier."""
+        self._prefix_index = index
+        self._replica_id = replica_id
+
+    def prefix_keys(self, req: Request) -> List[Tuple[int, str]]:
+        """Candidate prefix keys for a request, longest first — the
+        router's steering probe. Same walk as ``_prefix_lookup`` (chunk
+        multiples strictly below the prefill length) but against tokens
+        only: any same-config replica produces identical keys, so the
+        router can probe one replica and match holders fleet-wide."""
+        if not self.prefix_cache or req.prefill_pos:
+            return []
+        total = self._prefill_len(req)
+        L = ((total - 1) // self.prefill_chunk) * self.prefill_chunk
+        out = []
+        while L >= self.prefill_chunk:
+            out.append(self._prefix_key(req.tokens, L))
+            L -= self.prefill_chunk
+        return out
+
+    def prefix_snapshot(self, key) -> Optional[SequenceSnapshot]:
+        """The holder side of a cross-replica ship: the local snapshot
+        for ``key`` (LRU-touched — a prefix hot enough to ship is hot
+        enough to keep), or None if this replica no longer holds it."""
+        snap = self._prefix_cache.get(key)
+        if snap is not None:
+            self._prefix_cache.move_to_end(key)
+        return snap
+
+    def prefix_accept(self, key, snap: SequenceSnapshot) -> None:
+        """The landing side of a cross-replica ship: a holder's snapshot
+        enters THIS replica's local cache, so the request the router is
+        about to submit here hits locally. Snapshots are host-side numpy
+        keyed by content — same config means same leaf shapes, so a
+        sibling's snapshot restores exactly like a local one."""
+        self._prefix_store(key, snap)
+
+    def export_prefix_cache(self) -> List[Tuple[Tuple[int, str],
+                                                SequenceSnapshot]]:
+        """Drain hook: the local cache's entries (oldest first). The
+        snapshots are HOST-side state, so they outlive the card — the
+        router parks them in the shared tier before purging this replica
+        from the index."""
+        return list(self._prefix_cache.items())
 
     # ---- host-RAM paging (consumer 2) ------------------------------------
     def _page_out_one(self) -> bool:
         """Park one active slot to host RAM so a fresh arrival can have
         its row — the engine's stand-in for the fleet's long-idle
-        sessions: the victim is the active session with the MOST tokens
-        still to generate (it would hold its slot idle-longest), ties to
-        the highest slot for determinism."""
+        sessions.
+
+        Victim policy (``page_victim``): the default ``"lru"`` picks the
+        slot whose LAST DECODED token is oldest (ties to the lowest
+        slot) — the session that has gone longest without progress is
+        the one most likely idle, which is how a session cache actually
+        ages. ``"remaining"`` keeps the pre-PR-10 policy: the session
+        with the MOST tokens still to generate (ties to the highest
+        slot), a service-time heuristic that can evict a hot session
+        merely for being long."""
         if not self.states.active:
             return False
 
@@ -451,11 +545,16 @@ class InferenceEngine:
             req: Request = t.payload
             return req.max_new_tokens - len(req.output)
 
-        slot = max(self.states.active,
-                   key=lambda s: (remaining(self.states.active[s]), s))
+        if self.page_victim == "lru":
+            slot = min(self.states.active,
+                       key=lambda s: (self._last_decode.get(s, -1), s))
+        else:
+            slot = max(self.states.active,
+                       key=lambda s: (remaining(self.states.active[s]), s))
         p = int(self.states.pos[slot])
         snap = self.snapshot_slot(slot, p, pos=p)
         t = self.states.page_out(slot)
+        self._last_decode.pop(slot, None)
         self._paged[id(t)] = (t, snap)
         self.telemetry.record_paged_out()
         return True
@@ -469,6 +568,7 @@ class InferenceEngine:
             slot = self.states.acquire(t)
             self.restore_slot(snap, slot)
             self.states.activate(t, slot, snap.pos)
+            self._last_decode[slot] = self.telemetry.steps
             self.telemetry.record_paged_in()
 
     # ---- mid-prefill migration (consumer 3; ReplicaRouter hooks) ---------
@@ -555,6 +655,16 @@ class InferenceEngine:
         return bool(self.scheduler.depth or self.states.inflight
                     or self._paged)
 
+    @property
+    def cache_pressure(self) -> float:
+        """Paging/cache pressure for the fleet controller: the host-RAM
+        paging backlog per device slot. 0 = every admitted session has a
+        row; 1.0 = a full extra batch of sessions is parked in host RAM
+        waiting to fault back — sustained pressure means the fleet is
+        serving more concurrent sessions than its slots can hold, which
+        more replicas (not a bigger queue) fixes."""
+        return len(self._paged) / max(self.batch_slots, 1)
+
     def steal_eligible(self, t: Ticket) -> bool:
         """Steal veto (router hook, delegated to the SequenceStateManager):
         continuations and mid-prefill tickets own a slot on THIS replica —
@@ -589,6 +699,7 @@ class InferenceEngine:
         out.extend(t for t, _ in self._paged.values())
         self._paged.clear()
         self._pending_restore.clear()
+        self._last_decode.clear()
         for t in out:
             req: Request = t.payload
             req.output = []
@@ -668,6 +779,7 @@ class InferenceEngine:
             t.payload.prefill_pos = L
             self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
             self.states.activate(t, slot, L)
+            self._last_decode[slot] = self.telemetry.steps
         self.telemetry.prefills += g
         self.telemetry.prefill_batches += 1
 
@@ -760,6 +872,7 @@ class InferenceEngine:
                 self.telemetry.record_ttft((now - t.enqueue_t) * 1e3)
                 self.telemetry.prefills += 1
                 self.states.activate(t, slot, req.prefill_pos)
+                self._last_decode[slot] = self.telemetry.steps
             else:
                 self.states.park(t, slot)
                 self.scheduler.resubmit(t, size=self._chunk_next_len(req))
@@ -791,6 +904,7 @@ class InferenceEngine:
             self.pos[s] += 1
             req.output.append(int(nxt[s]))
             self.telemetry.total_tokens += 1
+            self._last_decode[s] = self.telemetry.steps
             if len(req.output) >= req.max_new_tokens \
                     or self.pos[s] >= self.max_len - 1:
                 req.done = True
@@ -801,6 +915,7 @@ class InferenceEngine:
                 req.enqueue_t = t.enqueue_t
                 req.finish_t = t.finish_t
                 self.states.release(s)
+                self._last_decode.pop(s, None)
 
     def run(self, requests: Sequence[Request]) -> List[Request]:
         for r in requests:

@@ -34,6 +34,7 @@ gate's scenarios).
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -43,6 +44,13 @@ from repro.serving.router import ReplicaRouter
 from repro.serving.scheduler import Scheduler, Ticket
 
 
+@dataclass
+class SimSnapshot:
+    """Sim-level prefix snapshot: the only surface the router's
+    restore-vs-recompute pricing reads is ``bytes_partial``."""
+    bytes_partial: float = 0.0
+
+
 class SimReplica:
     """Stub replica with configurable per-step service time and a fixed
     slot count, driven on a virtual clock. A ticket admitted at ``now``
@@ -50,7 +58,9 @@ class SimReplica:
     the due time, not the tick that observed it)."""
 
     def __init__(self, service_s: float = 0.01, slots: int = 1,
-                 policy: str = "fifo", precision: str = "fp32", **sched_kw):
+                 policy: str = "fifo", precision: str = "fp32",
+                 prefix_cache: int = 0, hit_service_frac: float = 0.5,
+                 prefix_tags: Optional[Dict[int, int]] = None, **sched_kw):
         self.scheduler = Scheduler(policy, **sched_kw)
         self.telemetry = self.scheduler.telemetry
         self.service_s = service_s
@@ -61,6 +71,19 @@ class SimReplica:
         # service) — the sim-level SequenceSnapshot is the frozen
         # remaining service time; a page-in resumes it, never restarts
         self.paged: List[Tuple[Ticket, float]] = []
+        # fleet prefix cache (PR 10, sim level): payloads tagged via the
+        # shared ``prefix_tags`` side-channel share a prefix; a local (or
+        # host-tier) hit serves at ``hit_service_frac`` of full price.
+        # The chunk grain is 1 token — every tagged payload maps to the
+        # single key ``(1, "sim<tag>")``.
+        self.prefill_chunk = 1
+        self.prefix_cache = int(prefix_cache)
+        self.hit_service_frac = float(hit_service_frac)
+        self._prefix_tags = prefix_tags if prefix_tags is not None else {}
+        self._prefix_cache: "OrderedDict" = OrderedDict()
+        self._prefix_index = None
+        self._replica_id: Optional[int] = None
+        self._hits: set = set()          # payloads admitted at hit price
 
     # ---- replica protocol ------------------------------------------------
     @property
@@ -79,9 +102,16 @@ class SimReplica:
 
     def submit(self, item, *, slo_ms=None, priority=None, size: int = 0,
                now: Optional[float] = None, **kw) -> Ticket:
-        return self.scheduler.submit(item, size=size,
-                                     priority=priority or 0,
-                                     slo_ms=slo_ms, now=now)
+        t = self.scheduler.submit(item, size=size,
+                                  priority=priority or 0,
+                                  slo_ms=slo_ms, now=now)
+        if self.prefix_cache and not t.shed:
+            for key in self.prefix_keys(item):
+                if self._prefix_lookup(key) is not None:
+                    self._hits.add(item)
+                    self.telemetry.record_prefix_hit()
+                    break
+        return t
 
     def steal_eligible(self, t: Ticket) -> bool:
         return not t.continuation
@@ -95,6 +125,11 @@ class SimReplica:
         out.extend(t for t, _ in self.paged)
         self.active = []
         self.paged = []
+        # the card is gone: its local prefix cache dies with it (the
+        # router's drain path has already exported it to the host tier
+        # and purged this replica from the fleet index)
+        self._prefix_cache.clear()
+        self._hits.clear()
         for t in out:
             t.reset_fresh()
         return out
@@ -134,11 +169,74 @@ class SimReplica:
         self.active = [(t, due) for t, due in self.active if due > now]
         for t, due in done:
             self.scheduler.complete(t, now=due)
+            for key in self.prefix_keys(t.payload):
+                self.prefix_accept(key, SimSnapshot())
+            self._hits.discard(t.payload)
         for t in self.scheduler.admit(self.free_slots, now=now):
-            self.active.append((t, now + self.service_s))
+            frac = self.hit_service_frac if t.payload in self._hits else 1.0
+            self.active.append((t, now + self.service_s * frac))
         while self.paged and self.free_slots > 0:
             self.page_in(now)
         return [t for t, _ in done]
+
+    # ---- fleet prefix-cache hooks (PR 10, sim level) ---------------------
+    # Same duck-typed surface the InferenceEngine exposes, so the REAL
+    # router's steering / ship / drain-export paths are exercised by the
+    # property suite against stub engines.
+    def attach_prefix_index(self, index, replica_id: int) -> None:
+        self._prefix_index = index
+        self._replica_id = replica_id
+
+    def prefix_keys(self, payload) -> List[Tuple[int, str]]:
+        """Cacheable prefix keys for a payload — the single shared-tag
+        key, or nothing for untagged traffic."""
+        if not self.prefix_cache:
+            return []
+        tag = self._prefix_tags.get(payload)
+        return [] if tag is None else [(1, f"sim{tag}")]
+
+    def _prefix_lookup(self, key):
+        snap = self._prefix_cache.get(key)
+        if snap is not None:
+            self._prefix_cache.move_to_end(key)
+            return snap
+        if self._prefix_index is not None:
+            snap = self._prefix_index.host_get(key)
+            if snap is not None:
+                self.prefix_accept(key, snap)
+                self.telemetry.record_prefix_host_hit()
+                return snap
+        return None
+
+    def prefix_snapshot(self, key):
+        snap = self._prefix_cache.get(key)
+        if snap is not None:
+            self._prefix_cache.move_to_end(key)
+        return snap
+
+    def prefix_accept(self, key, snap) -> None:
+        """Insert a prefix entry (local completion or cross-replica
+        ship), LRU-evicting into the fleet's host tier."""
+        if not self.prefix_cache:
+            return
+        self._prefix_cache[key] = snap
+        self._prefix_cache.move_to_end(key)
+        if self._prefix_index is not None:
+            self._prefix_index.add(key, self._replica_id)
+        while len(self._prefix_cache) > self.prefix_cache:
+            old_key, old_snap = self._prefix_cache.popitem(last=False)
+            if self._prefix_index is not None:
+                self._prefix_index.discard(old_key, self._replica_id)
+                self._prefix_index.host_insert(old_key, old_snap)
+
+    def export_prefix_cache(self):
+        return list(self._prefix_cache.items())
+
+    @property
+    def cache_pressure(self) -> float:
+        """Paged fraction — the controller's cache/paging pressure
+        signal, same shape as the engine's property."""
+        return len(self.paged) / max(self.slots, 1)
 
     # step_once exists for protocol completeness (wall-clock callers);
     # the simulator always drives step(now) on the virtual clock
@@ -161,7 +259,10 @@ class FleetSim:
                  slots: Union[int, Sequence[int]] = 1, steal: bool = True,
                  policy: str = "fifo", dt: float = 0.005, seed: int = 0,
                  route: str = "count",
-                 precisions: Optional[Sequence[str]] = None, **sched_kw):
+                 precisions: Optional[Sequence[str]] = None,
+                 fleet_prefix: bool = False, prefix_cache: int = 0,
+                 prefix_host_entries: int = 0,
+                 hit_service_frac: float = 0.5, **sched_kw):
         if np.isscalar(service_s):
             service_s = [float(service_s)] * replicas
         if np.isscalar(slots):
@@ -170,12 +271,20 @@ class FleetSim:
             precisions = ["fp32"] * replicas
         self._policy = policy
         self._sched_kw = dict(sched_kw)
+        # payload -> prefix tag, shared by every replica (the sim-level
+        # stand-in for hashing real token prefixes)
+        self.prefix_tags: Dict[int, int] = {}
+        self._prefix_kw = dict(prefix_cache=int(prefix_cache),
+                               hit_service_frac=float(hit_service_frac),
+                               prefix_tags=self.prefix_tags)
         self.replicas = [SimReplica(service_s=float(service_s[i]),
                                     slots=int(slots[i]), policy=policy,
                                     precision=precisions[i],
-                                    **sched_kw)
+                                    **self._prefix_kw, **sched_kw)
                          for i in range(replicas)]
-        self.router = ReplicaRouter(self.replicas, steal=steal, route=route)
+        self.router = ReplicaRouter(self.replicas, steal=steal, route=route,
+                                    fleet_prefix=fleet_prefix,
+                                    prefix_host_entries=prefix_host_entries)
         self.halted: set = set()     # frozen cards: stop serving, queue
         #                              accumulates until the detector fires
         if route == "feedback":
@@ -194,11 +303,16 @@ class FleetSim:
     # ---- event sources ---------------------------------------------------
     def submit(self, *, size: int = 1, priority: int = 0,
                slo_ms: Optional[float] = None,
-               pin: Optional[int] = None) -> Ticket:
+               pin: Optional[int] = None,
+               prefix: Optional[int] = None) -> Ticket:
         """One arrival at virtual ``now``. ``pin`` bypasses the router and
         lands the ticket straight on one replica's queue — the hot-keyed
-        / session-affinity skew that work stealing exists to fix."""
+        / session-affinity skew that work stealing exists to fix.
+        ``prefix`` tags the payload as sharing that prefix family, so a
+        fleet-prefix sim can steer / ship / hit on it."""
         payload = len(self.submitted)
+        if prefix is not None:
+            self.prefix_tags[payload] = int(prefix)
         if pin is None:
             t = self.router.submit(payload, slo_ms=slo_ms,
                                    priority=priority, size=size,
@@ -285,7 +399,7 @@ class FleetSim:
         def make() -> SimReplica:
             r = SimReplica(service_s=service_s, slots=slots,
                            policy=self._policy, precision=precision,
-                           **self._sched_kw)
+                           **self._prefix_kw, **self._sched_kw)
             self.replicas.append(r)
             return r
         return make

@@ -39,6 +39,7 @@ deterministic; the bench and the property suite both pin this).
 """
 from __future__ import annotations
 
+import json
 import math
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -59,6 +60,12 @@ DEFAULT_FIX_TOKENS = 24.0
 # Efficiency-knee fraction: the auto chunk is the smallest bucket whose
 # per-token efficiency reaches this fraction of the top bucket's.
 KNEE_FRAC = 0.75
+# Reference dispatch size for precision-scale fitting: the cross-
+# precision ratio is taken on the WHOLE predicted cost of a dispatch
+# this many tokens wide, not on the raw fitted slopes — a degenerate
+# fit that shifts cost between t_fix and t_tok leaves the whole cost
+# (what routing prices) intact while the slope ratio goes unbounded.
+_SCALE_REF_TOKENS = 256.0
 
 
 def _median(vals: Sequence[float]) -> float:
@@ -79,6 +86,11 @@ class PerfModel:
         # (stage, precision) -> (t_fix_s, t_tok_s) pinned directly via
         # set_dispatch_cost (reloaded published calibration)
         self._fixed: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        # precision -> measured step-time multiplier vs fp32, pinned via
+        # set_precision_scale / load_precision_scale (PR 10): replaces
+        # the spec's hard-coded §V constant once real fp32-vs-int8
+        # timings exist
+        self._precision_scale: Dict[str, float] = {}
 
     @classmethod
     def for_params(cls, params, *,
@@ -207,11 +219,105 @@ class PerfModel:
         return t / max(self.flop_floor_s(bucket * batch, precision), 1e-30)
 
     def precision_scale(self, precision: str) -> float:
-        """Predicted step-time multiplier of ``precision`` vs the fp32
-        baseline (spec ratio: 1.0 fp32, 0.5 on a 2x-int8 part).  The
-        router's scale-up seed uses this to re-price a joiner whose
-        precision differs from the measured fleet."""
+        """Step-time multiplier of ``precision`` vs the fp32 baseline.
+        The router's scale-up seed uses this to re-price a joiner whose
+        precision differs from the measured fleet.
+
+        Resolution ladder (PR 10): a pinned measured scale
+        (``set_precision_scale`` / ``load_precision_scale``) wins; next a
+        ratio FITTED from this model's own samples — the marginal-token
+        ratio of stages measured at BOTH precisions
+        (``fit_precision_scale``); finally the spec's hard-coded §V
+        constant (1.0 fp32, 0.5 on a 2x-int8 part)."""
+        pinned = self._precision_scale.get(precision)
+        if pinned is not None:
+            return pinned
+        fitted = self.fit_precision_scale(precision)
+        if fitted is not None:
+            return fitted
         return self.spec.precision_scale(precision)
+
+    def set_precision_scale(self, precision: str, scale: float) -> None:
+        """Pin a measured precision multiplier (vs fp32). Overrides both
+        the fitted ratio and the spec constant."""
+        if scale <= 0.0:
+            raise ValueError(f"precision scale must be positive, "
+                             f"got {scale}")
+        self._precision_scale[precision] = float(scale)
+
+    def fit_precision_scale(self, precision: str, *,
+                            base: str = "fp32") -> Optional[float]:
+        """Measured ``precision``-vs-``base`` step-time ratio from this
+        model's own data: for every stage with its OWN samples or pinned
+        line at BOTH precisions, the WHOLE-dispatch-cost ratio
+        ``(t_fix + N·t_tok)(precision) / (t_fix + N·t_tok)(base)`` at
+        ``_SCALE_REF_TOKENS`` tokens; the median across such stages.
+        None when no stage is measured at both precisions — the caller
+        falls back to the spec constant. The whole-cost ratio (not the
+        raw slope ratio) is load-bearing: a noisy least-squares fit can
+        push nearly all of a stage's cost into ``t_fix`` and clamp the
+        slope to epsilon, and the slope ratio then explodes by orders
+        of magnitude while the total measured cost — what routing
+        actually prices — barely moved. Restricting to
+        both-sides-measured stages keeps this fit independent of
+        ``fit_dispatch_cost``'s cross-precision fallback (which itself
+        consumes the spec ratio)."""
+        if precision == base:
+            return 1.0
+
+        def own_stages(prec: str) -> set:
+            stages = {st for (st, _, _, p) in self._samples if p == prec}
+            stages |= {st for (st, p) in self._fixed if p == prec}
+            return stages
+
+        common = own_stages(precision) & own_stages(base)
+        ratios = []
+        n = _SCALE_REF_TOKENS
+        for stage in sorted(common):
+            fix_p, tok_p = self.fit_dispatch_cost(stage,
+                                                  precision=precision)
+            fix_b, tok_b = self.fit_dispatch_cost(stage, precision=base)
+            cost_b = fix_b + n * tok_b
+            if cost_b > 0.0:
+                ratios.append((fix_p + n * tok_p) / cost_b)
+        return _median(ratios) if ratios else None
+
+    def load_precision_scale(self, path: str, *, precision: str = "w8a8",
+                             base: str = "fp32") -> Optional[float]:
+        """Pin ``precision``'s multiplier from the published bench JSON's
+        measured fitted terms (``perf_model.fitted_terms``): the median
+        whole-dispatch-cost ratio at ``_SCALE_REF_TOKENS`` tokens across
+        stages the bench calibrated at both precisions (same robust
+        ratio as ``fit_precision_scale`` — raw slope ratios blow up
+        when a fit degenerates). Returns the pinned scale, or None —
+        bench JSON absent, unreadable, or missing a both-precision
+        stage — in which case nothing is pinned and ``precision_scale``
+        keeps the spec constant."""
+        try:
+            with open(path) as f:
+                terms = json.load(f)["perf_model"]["fitted_terms"]
+            ratios = []
+            n = _SCALE_REF_TOKENS
+            for name in sorted(terms):
+                stage, _, prec = name.rpartition("/")
+                if prec != precision:
+                    continue
+                b = terms.get(f"{stage}/{base}")
+                if b is None:
+                    continue
+                cost_b = (float(b["t_fix_ms"]) * 1e-3
+                          + n * float(b["t_tok_us"]) * 1e-6)
+                cost_p = (float(terms[name]["t_fix_ms"]) * 1e-3
+                          + n * float(terms[name]["t_tok_us"]) * 1e-6)
+                if cost_b > 0.0:
+                    ratios.append(cost_p / cost_b)
+        except (OSError, KeyError, TypeError, ValueError):
+            return None
+        if not ratios:
+            return None
+        scale = _median(ratios)
+        self.set_precision_scale(precision, scale)
+        return scale
 
     # ---- transfer terms --------------------------------------------------
     def transfer_s(self, *, h2d_bytes: float = 0.0,

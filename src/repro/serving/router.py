@@ -85,6 +85,7 @@ import time
 from typing import Any, List, Optional, Sequence
 
 from repro.serving.scheduler import Ticket
+from repro.serving.state import FleetPrefixIndex
 from repro.serving.telemetry import Telemetry
 
 
@@ -93,7 +94,8 @@ class ReplicaRouter:
 
     def __init__(self, replicas: Sequence[Any], *, route: str = "count",
                  ewma_alpha: float = 0.25, steal: bool = False,
-                 migrate: bool = False, perf_model: Any = None):
+                 migrate: bool = False, perf_model: Any = None,
+                 fleet_prefix: bool = False, prefix_host_entries: int = 0):
         if not replicas:
             raise ValueError("ReplicaRouter needs at least one replica")
         if route not in ("count", "feedback"):
@@ -121,6 +123,19 @@ class ReplicaRouter:
         self.perf_model = (perf_model if perf_model is not None
                            else getattr(self.replicas[0], "perf_model",
                                         None))
+        # fleet-shared prefix tier (PR 10): a directory of which replicas
+        # hold which prompt prefix, plus a capacity-bounded shared
+        # host-RAM tier behind every replica's local LRU
+        # (``prefix_host_entries`` snapshots; 0 = directory only).
+        # Replicas without the engine hooks (DLRM, bare sim stubs) simply
+        # never register and are skipped by the steering probe.
+        self.prefix_index = (FleetPrefixIndex(
+            host_capacity=prefix_host_entries) if fleet_prefix else None)
+        if self.prefix_index is not None:
+            for i, r in enumerate(self.replicas):
+                attach = getattr(r, "attach_prefix_index", None)
+                if attach is not None:
+                    attach(self.prefix_index, i)
         self.ewma_s = [0.0] * len(self.replicas)  # 0 = not yet measured
         self.routed = [0] * len(self.replicas)   # submits per replica
         self.shed = 0                            # fleet admission rejections
@@ -159,6 +174,10 @@ class ReplicaRouter:
         self.steals_per_replica.append(0)
         self.rehomed.append(0)
         self.clock_offset.append(clock_offset)
+        if self.prefix_index is not None:
+            attach = getattr(replica, "attach_prefix_index", None)
+            if attach is not None:
+                attach(self.prefix_index, len(self.replicas) - 1)
         replica.telemetry.record_scaled_in()
         return len(self.replicas) - 1
 
@@ -301,6 +320,8 @@ class ReplicaRouter:
         eff_priority = priority if priority is not None \
             else (getattr(item, "priority", 0) or 0)
         i = self.route(has_deadline=has_deadline, priority=eff_priority)
+        if self.prefix_index is not None:
+            i = self._prefix_place(item, i, eff_priority)
         t = self.replicas[i].submit(item, slo_ms=slo_ms,
                                     priority=priority, **kw)
         if t.shed:
@@ -308,6 +329,100 @@ class ReplicaRouter:
         else:
             self.routed[i] += 1
         return t
+
+    # ---- fleet-shared prefix tier (PR 10) --------------------------------
+    def _steer_cost_s(self, i: int) -> float:
+        """Routing cost of landing the NEXT ticket on replica ``i``, in
+        SECONDS — the feedback currency (load + 1) x EWMA step time,
+        seeded for unmeasured replicas like ``_cost``. With no
+        measurement anywhere the perf model's predicted decode step
+        prices a load unit, and with no model either the cost is 0 (the
+        steer then degrades to pure hit-affinity)."""
+        e = self.ewma_s[i] or self._seed_ewma(i)
+        if e == 0.0 and self.perf_model is not None:
+            e = self.perf_model.predict_dispatch_s(
+                "decode", 1, precision=self.precisions[i])
+        return (self.load(i) + 1) * e
+
+    def _prefix_saved_s(self, length: int, chunk: Optional[int],
+                        i: int) -> float:
+        """Perf-model-predicted prefill time a hit on a ``length``-token
+        cached prefix saves replica ``i`` — the chunk-prefill line over
+        the chunks the hit skips. Without a model, the skipped chunks
+        are priced at the replica's EWMA step time (each chunk displaces
+        about one step of the pipeline)."""
+        if self.perf_model is not None:
+            return self.perf_model.predict_step_s(
+                "chunk_prefill", bucket=length,
+                precision=self.precisions[i], chunk=chunk)
+        e = self.ewma_s[i] or self._seed_ewma(i)
+        return (length // max(chunk or length, 1)) * e
+
+    def _prefix_place(self, item: Any, i: int, priority: int) -> int:
+        """Locality-aware placement against the fleet prefix index, given
+        load balancing's pick ``i``. For the LONGEST cached prefix of the
+        item held somewhere alive:
+
+        - landing replica already holds it -> keep ``i`` (plain local
+          hit, the engine counts it);
+        - **steer** to the cheapest holder when the predicted prefill
+          time the hit saves beats the load-imbalance cost of going
+          there (``saved >= cost(holder) - cost(i)``, both in the
+          (load+1) x EWMA currency);
+        - otherwise land on ``i`` and decide **restore-vs-recompute**:
+          ship the holder's snapshot into ``i``'s local cache over the
+          snapshot transport when the perf model's transfer terms price
+          the ship below the chunk-prefill recompute line, else let
+          ``i`` recompute the prefix. Both legs are counted
+          (``prefix_shipped`` / ``prefix_recomputed``) and either way
+          the request lands where load balancing wanted it.
+
+        In a mixed-precision fleet, accuracy-pinned (priority-0) traffic
+        only steers to fp32 holders while fp32 capacity exists — the
+        steer must not bypass the precision pin that ``route`` applied."""
+        probe = next(
+            (self.replicas[j] for j in self.alive
+             if getattr(self.replicas[j], "prefix_keys", None) is not None),
+            None)
+        if probe is None:
+            return i
+        chunk = getattr(probe, "prefill_chunk", None)
+        for key in probe.prefix_keys(item):        # longest prefix first
+            holders = [j for j in self.prefix_index.holders(key)
+                       if not self.dead[j]]
+            if self.mixed_precision and priority == 0 and self.fp32_alive:
+                holders = [j for j in holders
+                           if self.precisions[j] == "fp32"]
+            if i in holders:
+                return i
+            if not holders:
+                continue
+            j = min(holders, key=lambda k: (self._steer_cost_s(k), k))
+            if self._prefix_saved_s(key[0], chunk, j) \
+                    >= self._steer_cost_s(j) - self._steer_cost_s(i):
+                self.replicas[j].telemetry.record_prefix_remote_hit()
+                return j
+            holder_snap = getattr(self.replicas[j], "prefix_snapshot", None)
+            accept = getattr(self.replicas[i], "prefix_accept", None)
+            if holder_snap is None or accept is None:
+                return i
+            snap = holder_snap(key)
+            if snap is None:
+                return i
+            self.replicas[i].telemetry.record_prefix_remote_hit()
+            ship_s = 0.0
+            if self.perf_model is not None:
+                # the ship's critical-path cost is the restore H2D leg:
+                # the snapshot already lives in host RAM on the holder
+                ship_s = self.perf_model.transfer_s(
+                    h2d_bytes=getattr(snap, "bytes_partial", 0.0))
+            if ship_s <= self._prefix_saved_s(key[0], chunk, i):
+                accept(key, snap)
+                self.replicas[i].telemetry.record_prefix_shipped()
+            else:
+                self.replicas[i].telemetry.record_prefix_recomputed()
+            return i
+        return i
 
     # ---- work stealing / fault drain -------------------------------------
     def _stealable_backlog(self, i: int) -> int:
@@ -456,6 +571,16 @@ class ReplicaRouter:
             return 0
         r = self.replicas[idx]
         self.dead[idx] = True
+        if self.prefix_index is not None:
+            # the dead card's cached prefixes are HOST-side snapshots —
+            # they outlive the card, so park them in the shared tier for
+            # the fleet, then purge the replica from the directory (the
+            # index must never name a dead holder)
+            exp = getattr(r, "export_prefix_cache", None)
+            if exp is not None:
+                for key, snap in exp():
+                    self.prefix_index.host_insert(key, snap)
+            self.prefix_index.purge_replica(idx)
         drain = getattr(r, "drain_tickets", None)
         if drain is not None:
             tickets = drain()
@@ -564,6 +689,9 @@ class ReplicaRouter:
         out["precisions"] = list(self.precisions)
         out["steals_per_replica"] = list(self.steals_per_replica)
         out["dead_replicas"] = [i for i, d in enumerate(self.dead) if d]
+        if self.prefix_index is not None:
+            out["prefix_host_entries"] = len(self.prefix_index.host)
+            out["prefix_host_evicted"] = self.prefix_index.host_evicted
         return out
 
     def report(self) -> str:

@@ -76,6 +76,16 @@ class Telemetry:
                                    # elastic scale-up (fleet merge = joins)
     prefix_hits: int = 0           # requests admitted with their prompt
                                    # prefix restored from the prefix cache
+    prefix_remote_hits: int = 0    # fleet-index hits whose holder was NOT
+                                   # where load balancing would have landed
+                                   # the request (steered or shipped)
+    prefix_shipped: int = 0        # holder snapshots shipped cross-replica
+                                   # into this replica's local cache
+    prefix_recomputed: int = 0     # remote hits where the perf model priced
+                                   # the ship ABOVE the chunk-prefill line —
+                                   # recomputed locally instead
+    prefix_host_hits: int = 0      # local misses faulted in from the
+                                   # fleet-shared host-RAM prefix tier
     paged_out: int = 0             # active slots parked to host RAM
     paged_in: int = 0              # paged sessions faulted back to a slot
     migrated: int = 0              # mid-prefill tickets this replica adopted
@@ -142,6 +152,33 @@ class Telemetry:
         prefix is restored from a host-side snapshot instead of being
         re-prefilled from token zero (the system-prompt TTFT cliff)."""
         self.prefix_hits += n
+
+    def record_prefix_remote_hit(self, n: int = 1):
+        """``n`` requests found their prefix through the FLEET index on a
+        replica other than where load balancing would have landed them.
+        Counted on the replica the request finally lands on — whether it
+        was steered to the holder or the snapshot was shipped/priced out."""
+        self.prefix_remote_hits += n
+
+    def record_prefix_shipped(self, n: int = 1):
+        """``n`` prefix snapshots shipped cross-replica into THIS
+        replica's local cache (the restore-vs-recompute decision priced
+        the snapshot transport below the chunk-prefill line)."""
+        self.prefix_shipped += n
+
+    def record_prefix_recomputed(self, n: int = 1):
+        """``n`` remote hits where shipping the holder's snapshot was
+        priced ABOVE recomputing the prefix (short prefix, byte-heavy
+        state): this replica recomputes the prefill instead. The other
+        leg of the restore-vs-recompute decision — counted so the bench
+        can show the decision fires in both directions."""
+        self.prefix_recomputed += n
+
+    def record_prefix_host_hit(self, n: int = 1):
+        """``n`` local prefix-cache misses faulted their snapshot in from
+        the fleet-shared host-RAM tier (a prefix evicted from one card
+        survived for the fleet)."""
+        self.prefix_host_hits += n
 
     def record_paged_out(self, n: int = 1):
         """``n`` active slots parked their sequence state to host RAM
@@ -319,6 +356,10 @@ class Telemetry:
                "precision_rehomed": self.precision_rehomed,
                "scaled_in": self.scaled_in,
                "prefix_hits": self.prefix_hits,
+               "prefix_remote_hits": self.prefix_remote_hits,
+               "prefix_shipped": self.prefix_shipped,
+               "prefix_recomputed": self.prefix_recomputed,
+               "prefix_host_hits": self.prefix_host_hits,
                "paged_out": self.paged_out,
                "paged_in": self.paged_in,
                "migrated": self.migrated,
@@ -361,6 +402,13 @@ class Telemetry:
         if self.prefix_hits:
             lines.append(f"{self.prefix_hits} prefix-cache hits (prefill "
                          f"restored from snapshot)")
+        if self.prefix_remote_hits:
+            lines.append(f"{self.prefix_remote_hits} fleet-index remote "
+                         f"hits ({self.prefix_shipped} snapshots shipped, "
+                         f"{self.prefix_recomputed} priced-out recomputes)")
+        if self.prefix_host_hits:
+            lines.append(f"{self.prefix_host_hits} prefixes faulted in "
+                         f"from the shared host-RAM tier")
         if self.paged_out or self.paged_in:
             lines.append(f"host-RAM paging: {self.paged_out} slots parked, "
                          f"{self.paged_in} faulted back")

@@ -14,6 +14,8 @@ import json
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))
 from fleet_sim import FleetSim, make_controller  # noqa: E402
 
@@ -149,6 +151,84 @@ def test_steady_load_does_not_flap():
     assert m["lost"] == 0
     assert ctl.scale_ups + ctl.scale_downs <= 4, (
         f"flapping: +{ctl.scale_ups}/-{ctl.scale_downs} under steady load")
+
+
+# ---- PR 10 signals: cache pressure and the predictive wait forecast -------
+
+def test_cache_pressure_gates_scale_up():
+    """Host-RAM paging pressure is an up signal when (and only when) the
+    ``up_cache_pressure`` gate is configured: cards spilling KV state to
+    host RAM mean the fleet is short on resident slots even with a calm
+    queue."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=2, dt=0.005, seed=9,
+                   max_queue=64)
+    for _ in range(4):
+        sim.submit(size=2)
+    sim.tick()                          # admit into the slots
+    for i in range(2):
+        sim.page_out(i)                 # 1 of 2 slots paged on each card
+    # gate unset (default): pressure is visible but never an up reason
+    off = make_controller(sim, min_replicas=2, max_replicas=4,
+                          up_queue_per_replica=1e9)
+    sig = off.signals(sim.now)
+    assert sig["cache_pressure"] == pytest.approx(0.5)
+    off.step(sim.now)
+    assert off.scale_ups == 0
+    # gate set below the observed pressure: scale-up, with the reason
+    on = make_controller(sim, min_replicas=2, max_replicas=4,
+                         up_queue_per_replica=1e9, up_cache_pressure=0.4)
+    made = on.step(sim.now)
+    ups = [d for d in made if d.action == "up"]
+    assert len(ups) == 1 and "cache pressure" in ups[0].reason
+    assert on.scale_ups == 1 and len(sim.router.alive) == 3
+    sim.drain()
+    sim.assert_conserved()
+
+
+def test_wait_forecast_fires_before_any_ewma_is_measured():
+    """With a PerfModel attached the scale-up wait gate switches from
+    the reactive EWMA estimate (silent until completions land) to the
+    predictive forecast — model-predicted decode step x queue depth —
+    so a cold fleet staring at a backlog scales up on the FIRST control
+    step, before serving a single request."""
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+    from repro.serving.controller import ControllerConfig, FleetController
+    from repro.serving.perf_model import PerfModel
+
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, dt=0.005, seed=13,
+                   max_queue=64)
+    for _ in range(24):
+        sim.submit(size=1)              # backlog, nothing served yet
+    pm = PerfModel(1e9)
+    pm.set_dispatch_cost("decode", 50e-3, 0.0)   # 50 ms predicted step
+    cfg = ControllerConfig(min_replicas=2, max_replicas=4,
+                           up_queue_per_replica=1e9, slo_ms=100.0,
+                           up_wait_ratio=1.0)
+
+    def mk(perf_model):
+        mon = HeartbeatMonitor(num_hosts=len(sim.replicas), timeout_s=10.0,
+                               clock=lambda: sim.now)
+        return FleetController(sim.router,
+                               sim.replica_factory(service_s=0.01), mon,
+                               cfg, perf_model=perf_model)
+
+    reactive = mk(None)
+    sig = reactive.signals(sim.now)
+    assert sig["est_wait_ms"] == 0.0    # no completions -> no EWMAs
+    assert sig["wait_forecast_ms"] == 0.0
+    reactive.step(sim.now)
+    assert reactive.scale_ups == 0      # reactive gate is blind here
+
+    predictive = mk(pm)
+    sig = predictive.signals(sim.now)
+    # 24 queued / 2 live x 50 ms predicted step = 600 ms forecast
+    assert sig["wait_forecast_ms"] == pytest.approx(600.0)
+    made = predictive.step(sim.now)
+    ups = [d for d in made if d.action == "up"]
+    assert len(ups) == 1 and "forecast wait" in ups[0].reason
+    assert predictive.scale_ups == 1
+    sim.drain()
+    sim.assert_conserved()
 
 
 # ---- production-shaped traces: the whole mix ------------------------------

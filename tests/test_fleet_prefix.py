@@ -1,0 +1,308 @@
+"""Fleet-shared prefix tier (PR 10): the FleetPrefixIndex invariant
+surface, locality-aware steering, the shared host-RAM backstop, and the
+router's drain-export path — property-style on the deterministic fleet
+sim (seeded interleavings, zero wall-clock), plus one real-engine fleet
+pinned token-identical to cold prefill.
+
+The load-bearing invariants:
+
+- the holder directory names EXACTLY the replicas whose local caches
+  hold each key — never one that evicted or drained it (the ship path
+  reads a named holder's snapshot, so a stale entry is a correctness
+  bug, not a routing inefficiency);
+- conservation (submitted = completed + pending + shed, each once)
+  survives any interleaving of steer / ship / evict / page / drain;
+- a fixed seed reproduces the exact placement, completion order, and
+  prefix telemetry (steering is deterministic — no wall-clock input);
+- a drained holder's cache outlives the card in the host tier and the
+  survivor faults it back in.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.serving.fleet_sim import FleetSim, SimSnapshot  # noqa: E402
+from repro.serving.state import FleetPrefixIndex  # noqa: E402
+
+
+def _key(tag):
+    # SimReplica's chunk grain is 1 token: every tagged payload maps to
+    # the single key (1, "sim<tag>")
+    return (1, f"sim{tag}")
+
+
+def _local_keys(sim):
+    """Ground truth for check_consistent: the key set each replica's
+    local cache actually holds right now."""
+    return [set(dict(r.export_prefix_cache())) for r in sim.replicas]
+
+
+# ---- index invariant surface ----------------------------------------------
+
+def test_index_consistent_after_random_accept_evict_churn():
+    """Seeded churn: random prefix inserts across a fleet whose local
+    LRUs are far smaller than the key population, so every accept past
+    capacity evicts (index.discard + host_insert). After any prefix of
+    the schedule the directory must match the caches exactly."""
+    sim = FleetSim(replicas=3, service_s=0.01, slots=1, steal=False,
+                   seed=0, fleet_prefix=True, prefix_cache=3,
+                   prefix_host_entries=8)
+    idx = sim.router.prefix_index
+    rng = np.random.default_rng(7)
+    for step in range(200):
+        r = int(rng.integers(0, 3))
+        tag = int(rng.integers(0, 12))
+        sim.replicas[r].prefix_accept(_key(tag), SimSnapshot())
+        if step % 20 == 0:
+            idx.check_consistent(_local_keys(sim))
+    idx.check_consistent(_local_keys(sim))
+    # churn far past capacity must have spilled into the bounded host
+    # tier and evicted off its far end too
+    assert len(idx.host) == 8
+    assert idx.host_evicted > 0
+    for r in sim.replicas:
+        assert len(r.export_prefix_cache()) <= 3
+
+
+def test_host_tier_is_bounded_lru_and_lookups_do_not_remove():
+    idx = FleetPrefixIndex(host_capacity=2)
+    idx.host_insert("a", 1)
+    idx.host_insert("b", 2)
+    assert idx.host_get("a") == 1          # bumps "a" ahead of "b"
+    idx.host_insert("c", 3)                # evicts "b", the LRU entry
+    assert list(idx.host) == ["a", "c"]
+    assert idx.host_evicted == 1
+    assert idx.host_get("b") is None
+    assert idx.host_get("a") == 1          # get is a read, not a take
+    assert idx.host_get("a") == 1
+
+
+def test_host_tier_capacity_zero_disables_inserts():
+    idx = FleetPrefixIndex(host_capacity=0)
+    idx.host_insert("a", 1)
+    assert idx.host_get("a") is None and len(idx.host) == 0
+
+
+def test_discard_and_purge_never_leave_stale_holders():
+    idx = FleetPrefixIndex()
+    idx.add("k", 0)
+    idx.add("k", 1)
+    idx.add("k", 0)                        # re-add is idempotent
+    assert idx.holders("k") == [0, 1]
+    idx.discard("k", 0)
+    assert idx.holders("k") == [1]
+    idx.discard("k", 0)                    # double-discard is a no-op
+    idx.purge_replica(1)
+    assert idx.holders("k") == []
+    idx.check_consistent([set(), set()])
+
+
+# ---- steering ------------------------------------------------------------
+
+def test_steer_lands_hit_traffic_on_the_holder():
+    """With equal loads the locality win always beats a zero imbalance
+    cost: a tagged submit whose round-robin pick is the non-holder must
+    be steered to the holder and counted as a remote hit there."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, steal=False,
+                   seed=0, route="feedback", fleet_prefix=True,
+                   prefix_cache=4, prefix_host_entries=8)
+    sim.submit(prefix=0, pin=0)
+    sim.drain()                            # replica 0 now holds sim0
+    key = _key(0)
+    assert sim.router.prefix_index.holders(key) == [0]
+    before = list(sim.router.routed)
+    for _ in range(4):                     # round-robin alone would split
+        sim.submit(prefix=0)
+        sim.drain()                        # keep the load imbalance at 0
+    routed = [a - b for a, b in zip(sim.router.routed, before)]
+    assert routed == [4, 0]                # every hit steered to holder
+    assert sim.replicas[0].telemetry.prefix_remote_hits > 0
+    assert sim.replicas[1].telemetry.prefix_remote_hits == 0
+    assert sim.replicas[0].telemetry.prefix_hits == 4
+    assert sim.replicas[1].telemetry.prefix_hits == 0
+    sim.assert_conserved()
+
+
+def test_steer_prices_out_when_holder_is_overloaded_and_ships():
+    """Pile queue depth onto the holder until the imbalance cost beats
+    the 1-chunk locality win: the request lands where load balancing
+    wanted it, and the holder's snapshot ships into the landing
+    replica's cache (counted shipped, and the next submit hits
+    locally)."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, steal=False,
+                   seed=0, route="feedback", fleet_prefix=True,
+                   prefix_cache=4, prefix_host_entries=8)
+    sim.submit(prefix=0, pin=0)
+    sim.drain()
+    for _ in range(6):                     # bury the holder in backlog
+        sim.submit(pin=0)
+    t = sim.submit(prefix=0)               # priced out: lands replica 1
+    assert t.payload in [x.payload for x in
+                         sim.replicas[1].scheduler._pending]
+    tel1 = sim.replicas[1].telemetry
+    assert tel1.prefix_remote_hits == 1
+    assert tel1.prefix_shipped == 1        # no perf model: ship is free
+    assert _key(0) in dict(sim.replicas[1].export_prefix_cache())
+    sim.router.prefix_index.check_consistent(_local_keys(sim))
+    sim.drain()
+    sim.assert_conserved()
+
+
+def test_steer_determinism_under_fixed_seed():
+    """Bit-determinism of the whole steer/ship/evict pipeline: two sims
+    driven by the same seeded schedule produce identical placement,
+    completion order, and prefix telemetry."""
+    def run(seed):
+        sim = FleetSim(replicas=3, service_s=0.01, slots=1, steal=True,
+                       seed=seed, fleet_prefix=True, prefix_cache=2,
+                       prefix_host_entries=6)
+        for _ in range(120):
+            if sim.rng.random() < 0.6:
+                sim.submit(prefix=int(sim.rng.integers(0, 6)))
+            else:
+                sim.tick()
+        sim.drain()
+        sim.assert_conserved()
+        return ([t.payload for t in sim.completed],
+                list(sim.router.routed),
+                [r.telemetry.prefix_hits for r in sim.replicas],
+                [r.telemetry.prefix_remote_hits for r in sim.replicas],
+                [r.telemetry.prefix_shipped for r in sim.replicas],
+                sorted(sim.router.prefix_index.host))
+
+    assert run(3) == run(3)
+    # and the schedule is actually exercising the tier, not vacuous
+    _, _, hits, remote, _, _ = run(3)
+    assert sum(hits) > 0 and sum(remote) > 0
+
+
+# ---- conservation under full interleavings --------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5])
+def test_conservation_and_index_under_steer_ship_evict_drain(seed):
+    """The PR 10 property: random interleavings of tagged submits,
+    ticks, page-outs/ins, and a mid-run holder kill. Afterwards:
+    conservation holds exactly, the slot partition was never violated
+    (drain() would have wedged), the index matches the caches, and the
+    dead card is named by no key."""
+    sim = FleetSim(replicas=3, service_s=0.01, slots=2, steal=True,
+                   seed=seed, fleet_prefix=True, prefix_cache=2,
+                   prefix_host_entries=6)
+    idx = sim.router.prefix_index
+    failed = -1
+    for op in range(250):
+        if op == 125 and len(sim.router.alive) > 1:
+            # kill the replica holding the most keys — the worst case
+            # for the directory (every key it held must be purged)
+            held = [len(ks) for ks in _local_keys(sim)]
+            failed = max(sim.router.alive, key=lambda i: (held[i], i))
+            sim.fail(failed)
+        if sim.rng.random() < 0.15:
+            i = int(sim.rng.integers(0, 3))
+            if sim.rng.random() < 0.5:
+                sim.page_out(i)
+            else:
+                sim.page_in(i)
+        if sim.rng.random() < 0.55:
+            sim.submit(prefix=int(sim.rng.integers(0, 8)))
+        else:
+            sim.tick()
+    sim.drain()
+    sim.assert_conserved()
+    truth = _local_keys(sim)
+    idx.check_consistent(truth)
+    assert failed >= 0
+    assert truth[failed] == set()          # drain cleared the dead cache
+    for key in list(idx._holders):
+        assert failed not in idx.holders(key)
+
+
+def test_drain_of_holder_exports_to_host_and_survivor_faults_in():
+    """A drained holder's prefixes outlive the card: drain_replica parks
+    the local cache in the host tier and purges the directory; the next
+    tagged submit misses locally on the survivor, faults the snapshot in
+    from host RAM, and counts both the host hit and the prefix hit."""
+    sim = FleetSim(replicas=2, service_s=0.01, slots=1, steal=False,
+                   seed=0, fleet_prefix=True, prefix_cache=4,
+                   prefix_host_entries=8)
+    sim.submit(prefix=0, pin=0)
+    sim.drain()
+    key = _key(0)
+    assert sim.router.prefix_index.holders(key) == [0]
+    assert key not in sim.router.prefix_index.host
+    sim.fail(0)
+    idx = sim.router.prefix_index
+    assert idx.holders(key) == []          # directory purged
+    assert key in idx.host                 # snapshot survives for fleet
+    sim.drain()                            # re-homed ticket completes
+    sim.submit(prefix=0)                   # routes to survivor 1
+    tel = sim.replicas[1].telemetry
+    assert tel.prefix_host_hits == 1
+    assert tel.prefix_hits == 1
+    assert key in dict(sim.replicas[1].export_prefix_cache())
+    idx.check_consistent(_local_keys(sim))
+    sim.drain()
+    sim.assert_conserved()
+
+
+# ---- real engines: fleet hits must stay token-identical -------------------
+
+def test_lm_fleet_prefix_hits_token_identical_to_cold(lm_fleet_setup):
+    """End-to-end through real LM engines: a hot-system-prompt trace
+    across a 2-replica fleet with the shared tier produces remote hits
+    (steered and/or shipped) and every output matches a cold
+    single-engine replay token for token — the final chunk always
+    recomputes, so identity is exact, not approximate."""
+    from repro.serving.perf_model import PerfModel
+    cfg, params = lm_fleet_setup
+    kw = dict(batch_slots=2, max_len=64, prefill_buckets=(16, 48),
+              prefill_chunk=16, prefix_cache=8)
+    from repro.serving.engine import InferenceEngine, Request, \
+        make_replicas
+    from repro.serving.router import ReplicaRouter
+    rng = np.random.default_rng(23)
+    prefix = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+
+    def trace():
+        r = np.random.default_rng(31)
+        return [Request(i, np.concatenate(
+                    [prefix, r.integers(0, cfg.vocab_size, 2 + i % 3)]
+                    ).astype(np.int32), max_new_tokens=3)
+                for i in range(8)]
+
+    reqs = trace()
+    router = ReplicaRouter(make_replicas(cfg, params, 2, **kw),
+                           perf_model=PerfModel.for_params(params),
+                           fleet_prefix=True, prefix_host_entries=32)
+    router.submit(reqs[0])                 # populate one replica
+    router.run_until_drained()
+    for r in reqs[1:]:
+        router.submit(r)
+    router.run_until_drained()
+    tel = router.fleet_telemetry()
+    assert all(r.done for r in reqs)
+    assert tel.served == len(reqs)
+    assert tel.prefix_hits > 0
+    assert tel.prefix_remote_hits > 0      # steering crossed replicas
+    cold = InferenceEngine(cfg, params, **dict(kw, prefix_cache=None))
+    ref = trace()
+    cold.run(ref)
+    for r, m in zip(reqs, ref):
+        assert r.output == m.output, f"request {r.rid} diverged"
+    router.prefix_index.check_consistent(
+        [set(dict(rep.export_prefix_cache()))
+         for rep in router.replicas])
+
+
+@pytest.fixture(scope="module")
+def lm_fleet_setup():
+    import jax
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import model as M
+    cfg = reduce_for_smoke(get_config("deepseek-7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params

@@ -4,6 +4,7 @@ calibration, the three self-tuning knobs (auto prefill chunk, suggested
 bucket ladder, cold-start service priors), the ServiceEstimator
 cold-start precedence, the router's per-precision EWMA scale-up seed,
 and the backend-spec parameterization of the roofline terms."""
+import json
 import statistics
 
 import pytest
@@ -12,7 +13,8 @@ from repro.core.backend import (BACKENDS, DEFAULT_BACKEND, TPU_V5E,
                                 BackendSpec, D2H_H2D_RATIO)
 from repro.core.transfer import TransferStats
 from repro.serving.perf_model import (DEFAULT_FIX_TOKENS, DEFAULT_OVERHEAD,
-                                      KNEE_FRAC, PerfModel)
+                                      KNEE_FRAC, _SCALE_REF_TOKENS,
+                                      PerfModel)
 from repro.serving.scheduler import Scheduler, ServiceEstimator
 from repro.serving.telemetry import percentile
 
@@ -159,6 +161,71 @@ def test_precision_scale_and_cross_precision_fallback():
     w8 = pm.fit_dispatch_cost("prefill", precision="w8a8")
     assert w8[0] == pytest.approx(f32[0] * 0.5)
     assert w8[1] == pytest.approx(f32[1] * 0.5)
+
+
+def test_fit_precision_scale_is_the_whole_cost_ratio():
+    """Both-precision stages yield the measured multiplier; stages or
+    precisions without both sides yield None (spec fallback)."""
+    pm = _fed_model()
+    for bucket in (16, 64, 448):
+        pm.observe("chunk_prefill", bucket=bucket, precision="w8a8",
+                   seconds=0.5 * (2e-3 + bucket * 10e-6))
+    assert pm.fit_precision_scale("w8a8") == pytest.approx(0.5, rel=1e-6)
+    assert pm.fit_precision_scale("fp32") == 1.0
+    # nothing measured at int4 -> no both-sides stage -> None
+    assert pm.fit_precision_scale("int4") is None
+    # fp32-only model: w8a8 has no own samples either
+    assert _fed_model().fit_precision_scale("w8a8") is None
+
+
+def test_fit_precision_scale_survives_a_degenerate_base_fit():
+    """The bench regression this guards: two near-equal calibration
+    buckets can degenerate least-squares so the base slope clamps to
+    epsilon with all cost pushed into t_fix.  The raw slope ratio then
+    explodes by ~9 orders of magnitude; the whole-dispatch-cost ratio
+    at _SCALE_REF_TOKENS barely notices."""
+    pm = PerfModel(1e9)
+    pm.set_dispatch_cost("chunk_prefill", 30e-3, 1e-12)          # degenerate
+    pm.set_dispatch_cost("chunk_prefill", 0.0, 1366e-6,
+                         precision="w8a8")
+    n = _SCALE_REF_TOKENS
+    want = (n * 1366e-6) / (30e-3 + n * 1e-12)
+    got = pm.fit_precision_scale("w8a8")
+    assert got == pytest.approx(want, rel=1e-9)
+    assert got < 100.0                        # slope ratio would be ~1.4e9
+
+
+def test_load_precision_scale_pins_from_bench_terms(tmp_path):
+    """The serve-time path: the published fitted_terms (ms/us units)
+    pin the multiplier; absent or malformed JSON pins nothing and the
+    spec constant survives."""
+    # w8a8 terms at exactly 0.25x the fp32 whole cost (distinguishable
+    # from the 0.5 spec constant); the decode/fp32 orphan is skipped
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps({"perf_model": {"fitted_terms": {
+        "chunk_prefill/fp32": {"t_fix_ms": 2.0, "t_tok_us": 10.0},
+        "chunk_prefill/w8a8": {"t_fix_ms": 0.5, "t_tok_us": 2.5},
+        "decode/fp32": {"t_fix_ms": 1.0, "t_tok_us": 4.0},
+    }}}))
+    pm = PerfModel(1e9)
+    assert pm.load_precision_scale(str(path)) == pytest.approx(0.25)
+    assert pm.precision_scale("w8a8") == pytest.approx(0.25)
+    # fit_dispatch_cost's cross-precision fallback stays on the SPEC
+    # ratio by design (avoids circularity with the fitted scale)
+    pm.set_dispatch_cost("prefill", 4e-3, 8e-6)
+    w8 = pm.fit_dispatch_cost("prefill", precision="w8a8")
+    assert w8[0] == pytest.approx(4e-3 * 0.5)
+
+    for bad in ("missing.json", "junk.json", "no_pair.json"):
+        pm_bad = PerfModel(1e9)
+        if bad == "junk.json":
+            (tmp_path / bad).write_text("{not json")
+        elif bad == "no_pair.json":
+            (tmp_path / bad).write_text(json.dumps({"perf_model": {
+                "fitted_terms": {"decode/w8a8": {"t_fix_ms": 1.0,
+                                                 "t_tok_us": 1.0}}}}))
+        assert pm_bad.load_precision_scale(str(tmp_path / bad)) is None
+        assert pm_bad.precision_scale("w8a8") == pytest.approx(0.5)
 
 
 def test_transfer_terms_carry_the_h2d_d2h_asymmetry():

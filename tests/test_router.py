@@ -642,6 +642,27 @@ def _fake_payload():
                              "ttft_hit_ratio": 0.5,
                              "ttft_hit_improved": True,
                              "token_identical": True, "prefix_hits": 1},
+            "fleet_prefix": {"arch": "a", "replicas": 2, "families": 5,
+                             "requests": 36, "prefix_tokens": 256,
+                             "prefill_chunk": 16, "offered_load_ms": 1.0,
+                             "cold": _fake_summary(),
+                             "per_engine": _fake_summary(),
+                             "shared": _fake_summary(),
+                             "ttft_hit_ratio": 0.1,
+                             "ttft_fleet_improved": True,
+                             "token_identical": True, "zero_lost": True,
+                             "prefix_remote_hits": 2, "prefix_shipped": 1,
+                             "prefix_recomputed": 1,
+                             "host_tier": {"entries": 4, "evicted_into": 0,
+                                           "host_hits": 0,
+                                           "drain_fault_ins": 1},
+                             "pricing": {"ship": {"arch": "a", "shipped": 1,
+                                                  "recomputed": 0,
+                                                  "remote_hits": 1},
+                                         "recompute": {"arch": "b",
+                                                       "shipped": 0,
+                                                       "recomputed": 1,
+                                                       "remote_hits": 1}}},
             "paging": {"arch": "a", "sessions": 6, "slots": 2,
                        "reference_slots": 6, "paged": _fake_summary(),
                        "reference": _fake_summary(),
@@ -695,6 +716,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     del p["elastic"]["controller"]["faults_drained"]
     del p["prefix_cache"]["ttft_hit_ratio"]
     del p["prefix_cache"]["hit"]["prefix_hits"]
+    del p["fleet_prefix"]["ttft_hit_ratio"]
+    del p["fleet_prefix"]["shared"]["prefix_remote_hits"]
+    del p["fleet_prefix"]["pricing"]["ship"]["shipped"]
     del p["paging"]["partition_ok"]
     del p["paging"]["paged"]["paged_out"]
     del p["perf_model"]["max_rel_error"]
@@ -720,6 +744,9 @@ def test_bench_payload_schema_rejects_missing_keys():
     assert "elastic.controller.faults_drained" in msg
     assert "prefix_cache.ttft_hit_ratio" in msg
     assert "prefix_cache.hit.prefix_hits" in msg
+    assert "fleet_prefix.ttft_hit_ratio" in msg
+    assert "fleet_prefix.shared.prefix_remote_hits" in msg
+    assert "fleet_prefix.pricing.ship.shipped" in msg
     assert "paging.partition_ok" in msg
     assert "paging.paged.paged_out" in msg
     assert "perf_model.max_rel_error" in msg

@@ -674,6 +674,52 @@ def test_paging_serves_more_sessions_than_slots(lm_setup):
     assert sorted(eng.free) == list(range(2))
 
 
+def test_page_victim_policy_pins_both_orderings(lm_setup):
+    """Regression (PR 10 satellite): the paging victim policy. The
+    default ``"lru"`` parks the slot whose last decoded token is OLDEST
+    (the longest-idle session, ties to the lowest slot);
+    ``page_victim="remaining"`` keeps the pre-PR-10 most-service-
+    remaining heuristic (ties to the highest slot). Identical engine
+    state must produce DIFFERENT victims under the two policies — both
+    orderings pinned, so a silent swap of the default fails loudly."""
+    cfg, params = lm_setup
+    kw = dict(prefill_chunk=8, batch_slots=3, max_len=64,
+              prefill_buckets=(8, 16, 32, 48), page_host=True)
+
+    def activate(eng):
+        # three sessions with distinct service remaining: rid 2 (30 new
+        # tokens) is the "remaining" victim regardless of idleness
+        for i, mnt in enumerate((20, 24, 30)):
+            rng = np.random.default_rng(40 + i)
+            eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 5 + i)
+                               .astype(np.int32), max_new_tokens=mnt))
+        while len(eng.states.active) < 3:
+            eng.step_once()
+        return {s: t.payload.rid for s, t in eng.states.active.items()}
+
+    lru = InferenceEngine(cfg, params, **kw)
+    assert lru.page_victim == "lru"             # the default policy
+    slots = activate(lru)
+    lru._last_decode = {0: 9, 1: 2, 2: 7}       # slot 1 idle longest
+    assert lru._page_out_one()
+    assert 1 not in lru.states.active
+    (t, _snap), = lru._paged.values()
+    assert t.payload.rid == slots[1]
+
+    rem = InferenceEngine(cfg, params, page_victim="remaining", **kw)
+    slots_r = activate(rem)
+    rem._last_decode = {0: 9, 1: 2, 2: 7}       # ignored by this policy
+    assert rem._page_out_one()
+    (t_r, _snap), = rem._paged.values()
+    assert t_r.payload.rid == 2                 # most tokens still to go
+    victim_slot = next(s for s, rid in slots_r.items() if rid == 2)
+    assert victim_slot not in rem.states.active
+    assert t_r.payload.rid != t.payload.rid     # the policies disagree
+
+    with pytest.raises(ValueError):
+        InferenceEngine(cfg, params, page_victim="mru", **kw)
+
+
 def test_mid_prefill_migration_resumes_from_chunk(lm_setup):
     """Acceptance (PR 8): under ``migrate=True`` an idle replica adopts a
     loaded sibling's mid-prefill continuation WITH its snapshot — the
